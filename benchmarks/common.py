@@ -1,0 +1,152 @@
+"""Shared benchmark infra: container-scale datasets, cached indexes, the
+95%-recall tuning ladder, and CSV emission (one row per measured config)."""
+from __future__ import annotations
+
+import os
+import pickle
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SearchParams, WorkloadSpec, build_graph, build_scann,
+                        filtered_knn, generate_bitmaps, recall_at_k,
+                        scann_search_batch, search_batch, stats_table_row)
+from repro.data import DatasetSpec, make_dataset
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
+NUM_QUERIES = 16
+
+# Container-scale stand-ins for the paper's four datasets (Table 2 shapes).
+BENCH_DATASETS = {
+    "sift10m": DatasetSpec("sift10m", 20_000, 128, "l2", clusters=64),
+    "openai5m": DatasetSpec("openai5m", 8_000, 768, "ip", clusters=32),
+    "cohere10m": DatasetSpec("cohere10m", 16_000, 256, "l2", clusters=48),
+    "text2image10m": DatasetSpec("text2image10m", 16_000, 200, "l2",
+                                 clusters=64, ood_queries=True),
+}
+
+GRAPH_METHODS = ("navix", "acorn", "sweeping", "iterative_scan")
+ALL_METHODS = GRAPH_METHODS + ("scann",)
+EF_LADDER = (64, 128, 256)
+LEAVES_LADDER = (16, 32, 64)
+
+
+def _cache(key: str, builder):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, key + ".pkl")
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    val = builder()
+    with open(path, "wb") as f:
+        pickle.dump(jax.tree.map(np.asarray, val), f)
+    return val
+
+
+def get_dataset(name: str):
+    spec = BENCH_DATASETS[name]
+    store, queries = make_dataset(spec, num_queries=NUM_QUERIES, seed=0)
+    return store, jnp.asarray(queries)
+
+
+def get_graph(name: str):
+    from repro.core.hnsw import HNSWGraph
+    store, _ = get_dataset(name)
+
+    def build():
+        g = build_graph(store, m=16, ef_construction=64, seed=0)
+        return (g.neighbors, g.node_level, g.entry_point)
+
+    nb, lv, ep = _cache(f"graph_{name}", build)
+    return HNSWGraph(neighbors=jnp.asarray(nb), node_level=jnp.asarray(lv),
+                     entry_point=jnp.asarray(ep), m=16)
+
+
+def get_scann(name: str, pca: bool = False):
+    from repro.core.scann import ScannIndex
+    store, _ = get_dataset(name)
+    spec = BENCH_DATASETS[name]
+    pca_dims = max(spec.dim // 8, 32) if (pca and spec.dim >= 256) else None
+
+    def build():
+        idx = build_scann(store, num_leaves=max(64, store.n // 128),
+                          levels=2, pca_dims=pca_dims, seed=0)
+        return jax.tree.map(np.asarray, idx)
+
+    idx = _cache(f"scann_{name}_{'pca' if pca_dims else 'raw'}", build)
+    return jax.tree.map(jnp.asarray, idx)
+
+
+def get_bitmaps(name: str, sel: float, corr: str):
+    store, queries = get_dataset(name)
+
+    def build():
+        return np.asarray(generate_bitmaps(store, queries,
+                                           WorkloadSpec(sel, corr),
+                                           seed=hash((sel, corr)) % 9973))
+
+    return jnp.asarray(_cache(f"bm_{name}_{sel}_{corr}", build))
+
+
+def ground_truth(name: str, sel: float, corr: str, k: int = 10):
+    store, queries = get_dataset(name)
+    bm = get_bitmaps(name, sel, corr)
+    return filtered_knn(store, queries, bm, k)
+
+
+def mean_recall(ids, tid, k=10) -> float:
+    return float(np.mean(np.asarray(
+        jax.vmap(lambda f, t: recall_at_k(f, t, k))(ids, tid))))
+
+
+def run_method(name: str, method: str, sel: float, corr: str, k: int = 10,
+               target_recall: float = 0.95, tm: bool = True):
+    """Tuning-ladder run (paper §5: highest QPS at 95% recall). Returns
+    (recall, stats_row, wall_us_per_query, params_used)."""
+    store, queries = get_dataset(name)
+    bm = get_bitmaps(name, sel, corr)
+    _, tid = ground_truth(name, sel, corr, k)
+    best = None
+    if method == "scann":
+        for nl in LEAVES_LADDER:
+            p = SearchParams(k=k, num_leaves_to_search=nl, reorder_factor=4)
+            idx = get_scann(name)
+            t0 = time.perf_counter()
+            _, ids, stats = scann_search_batch(idx, store, queries, bm, p)
+            jax.block_until_ready(ids)
+            wall = (time.perf_counter() - t0) / queries.shape[0] * 1e6
+            rec = mean_recall(ids, tid, k)
+            best = (rec, stats_table_row(stats), wall, p)
+            if rec >= target_recall:
+                break
+        return best
+    graph = get_graph(name)
+    for ef in EF_LADDER:
+        ef = max(ef, 2 * k)
+        p = SearchParams(k=k, ef_search=ef, beam_width=max(512, 4 * ef),
+                         strategy=method, max_hops=3000,
+                         translation_map=tm,
+                         batch_tuples=max(64, k * 8), max_rounds=16)
+        t0 = time.perf_counter()
+        _, ids, stats = search_batch(graph, store, queries, bm, p)
+        jax.block_until_ready(ids)
+        wall = (time.perf_counter() - t0) / queries.shape[0] * 1e6
+        rec = mean_recall(ids, tid, k)
+        best = (rec, stats_table_row(stats), wall, p)
+        if rec >= target_recall:
+            break
+    return best
+
+
+def emit(rows: list[dict], name: str) -> None:
+    """Print benchmark rows as `name,us_per_call,derived` CSV lines."""
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{r.get('us_per_call', 0):.1f},"
+              f"{derived}")

@@ -1,0 +1,36 @@
+"""Paper Fig. 10: per-component modeled cycle breakdown (SYSTEM regime)
+at 1/10/50/80% selectivity on the OpenAI-5M-shaped dataset."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, get_dataset, run_method
+from repro.core import SYSTEM, SearchStats, cycle_breakdown
+
+SELS = (0.01, 0.1, 0.5, 0.8)
+METHODS = ("navix", "acorn", "sweeping", "scann")
+
+
+def run(ds="openai5m") -> list[dict]:
+    store, _ = get_dataset(ds)
+    rows = []
+    for sel in SELS:
+        for m in METHODS:
+            rec, srow, wall, _ = run_method(ds, m, sel, "none")
+            z = lambda v: jnp.asarray(round(v), jnp.int32)
+            stats = SearchStats(z(srow["distance_comps"]),
+                                z(srow["filter_checks"]), z(srow["hops"]),
+                                z(srow["page_accesses_index"]),
+                                z(srow["page_accesses_heap"]),
+                                z(srow["tmap_lookups"]),
+                                z(srow["reorder_rows"]))
+            br = cycle_breakdown(stats, store.dim, SYSTEM)
+            row = {"name": f"fig10/{ds}/{m}/sel={sel}", "us_per_call": wall,
+                   "recall": round(rec, 3)}
+            row.update({k: round(v / 1e6, 2) for k, v in br.items()})
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "fig10")

@@ -1,0 +1,37 @@
+"""Paper Table 4: HNSW quantization (halfvec) does NOT improve QPS in a
+page-based engine — modeled via the cost model: halving vector bytes
+halves heap-page traffic but leaves the dominant neighbor-page traffic
+untouched (paper §5 'Quantization')."""
+from __future__ import annotations
+
+import dataclasses
+import jax.numpy as jnp
+
+from benchmarks.common import emit, get_dataset, run_method
+from repro.core import SYSTEM, SearchStats, modeled_qps
+
+
+def run(ds="openai5m", sel=0.2) -> list[dict]:
+    store, _ = get_dataset(ds)
+    rec, srow, wall, _ = run_method(ds, "sweeping", sel, "none")
+    z = lambda v: jnp.asarray(round(v), jnp.int32)
+    full = SearchStats(z(srow["distance_comps"]), z(srow["filter_checks"]),
+                       z(srow["hops"]), z(srow["page_accesses_index"]),
+                       z(srow["page_accesses_heap"]),
+                       z(srow["tmap_lookups"]), z(srow["reorder_rows"]))
+    # halfvec: heap pages per vector halve; index (neighbor) pages unchanged
+    half = dataclasses.replace(
+        full, page_accesses_heap=z(srow["page_accesses_heap"] / 2))
+    q_full = modeled_qps(full, store.dim, SYSTEM)
+    q_half = modeled_qps(half, store.dim // 2, SYSTEM)
+    return [{
+        "name": f"table4/{ds}/halfvec/sel={sel}",
+        "us_per_call": wall,
+        "qps_speedup": round(q_half / q_full, 2),
+        "index_size_reduction": 2.0,
+        "note": "speedup~1x: neighbor-page traffic dominates (paper T4)",
+    }]
+
+
+if __name__ == "__main__":
+    emit(run(), "table4")

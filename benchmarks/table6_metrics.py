@@ -1,0 +1,31 @@
+"""Paper Table 6: internal index metrics across selectivities on the
+OpenAI-5M-shaped dataset (no correlation)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_method
+
+SELECTIVITIES = (0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8, 0.9)
+METHODS = ("navix", "acorn", "sweeping", "scann")
+
+
+def run(ds="openai5m", sels=SELECTIVITIES) -> list[dict]:
+    rows = []
+    for sel in sels:
+        for m in METHODS:
+            rec, srow, wall, _ = run_method(ds, m, sel, "none")
+            rows.append({
+                "name": f"table6/{ds}/{m}/sel={sel}",
+                "us_per_call": wall,
+                "recall": round(rec, 3),
+                "dist_comps": round(srow["distance_comps"]),
+                "filter_checks": round(srow["filter_checks"]),
+                "hops_or_leaves": round(srow["hops"], 1),
+                "reorder": round(srow["reorder_rows"]),
+                "page_accesses": round(srow["page_accesses_index"]
+                                       + srow["page_accesses_heap"]),
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "table6")

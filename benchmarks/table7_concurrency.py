@@ -1,0 +1,55 @@
+"""Paper Table 7: concurrency effects. The PG side is modeled (cycle
+amplification at 16T); the TPU-native side is MEASURED: per-query wall
+time at batch 1 vs batch 16 (vmap) — batching amortizes weight traffic,
+the opposite sign of PG's contention (DESIGN.md §3 'what does not
+transfer')."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (emit, get_bitmaps, get_dataset, get_graph,
+                               run_method)
+from repro.core import (SYSTEM, SearchParams, SearchStats, cycle_breakdown,
+                        search_batch)
+
+
+def run(ds="openai5m", sel=0.1) -> list[dict]:
+    store, queries = get_dataset(ds)
+    graph = get_graph(ds)
+    bm = get_bitmaps(ds, sel, "none")
+    rows = []
+    # modeled PG-side 1T vs 16T
+    rec, srow, _, _ = run_method(ds, "navix", sel, "none")
+    z = lambda v: jnp.asarray(round(v), jnp.int32)
+    stats = SearchStats(z(srow["distance_comps"]), z(srow["filter_checks"]),
+                        z(srow["hops"]), z(srow["page_accesses_index"]),
+                        z(srow["page_accesses_heap"]),
+                        z(srow["tmap_lookups"]), z(srow["reorder_rows"]))
+    br = cycle_breakdown(stats, store.dim, SYSTEM)
+    sysoh = br["index_page_access"] + br["vector_retrieval"]
+    rows.append({"name": f"table7/{ds}/navix/modeled",
+                 "us_per_call": 0.0,
+                 "total_mcycles_1t": round(br["total"] / 1e6, 1),
+                 "total_mcycles_16t": round(br["total"] * 1.5 / 1e6, 1),
+                 "sysoh_share": round(sysoh / br["total"], 3)})
+    # measured TPU-native batching effect
+    p = SearchParams(k=10, ef_search=128, beam_width=512,
+                     strategy="sweeping", max_hops=2048)
+    for b in (1, 16):
+        q, m = queries[:b], bm[:b]
+        _, ids, _ = search_batch(graph, store, q, m, p)
+        jax.block_until_ready(ids)
+        t0 = time.perf_counter()
+        _, ids, _ = search_batch(graph, store, q, m, p)
+        jax.block_until_ready(ids)
+        us = (time.perf_counter() - t0) / b * 1e6
+        rows.append({"name": f"table7/{ds}/sweeping/batch={b}",
+                     "us_per_call": us, "batch": b})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(), "table7")

@@ -1,0 +1,5 @@
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, applicable_shapes
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeSpec", "applicable_shapes",
+           "ARCH_IDS", "get_config", "smoke_config"]

@@ -1,0 +1,9 @@
+"""llama3.2-3b [dense]: 28L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=128256 — small llama3 [hf:meta-llama/Llama-3.2]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv=8, d_ff=8192, vocab=128256,
+    rope_theta=5e5, remat="dots",
+)

@@ -1,0 +1,26 @@
+"""Core filter-agnostic FVS library (the paper's contribution in JAX)."""
+from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, SearchParams,
+                              SearchStats, VectorStore, pack_bitmap,
+                              pack_bool_bitmap, probe_bitmap, recall_at_k,
+                              topk_smallest, unpack_bitmap)
+from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
+                                 WorkloadSpec, generate_bitmaps,
+                                 generate_grid, generate_passing_rows)
+from repro.core.bruteforce import filtered_knn, knn
+from repro.core.hnsw import HNSWGraph, build_graph, build_incremental
+from repro.core.graph_search import search_batch
+from repro.core.scann import ScannIndex, build_scann, scann_search_batch
+from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants,
+                                  cycle_breakdown, modeled_qps,
+                                  stats_table_row)
+
+__all__ = [
+    "METRIC_COS", "METRIC_IP", "METRIC_L2", "SearchParams", "SearchStats",
+    "VectorStore", "pack_bitmap", "pack_bool_bitmap", "probe_bitmap",
+    "recall_at_k", "topk_smallest", "unpack_bitmap", "CORRELATIONS",
+    "PAPER_SELECTIVITIES", "WorkloadSpec", "generate_bitmaps",
+    "generate_grid", "generate_passing_rows", "filtered_knn", "knn",
+    "HNSWGraph", "build_graph", "build_incremental", "search_batch",
+    "ScannIndex", "build_scann", "scann_search_batch", "LIBRARY", "SYSTEM",
+    "CostConstants", "cycle_breakdown", "modeled_qps", "stats_table_row",
+]

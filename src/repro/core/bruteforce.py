@@ -1,0 +1,34 @@
+"""Exact (optionally filtered) KNN — ground truth for every recall number."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import VectorStore, probe_bitmap, topk_smallest
+from repro.core.workload import full_distances
+
+
+@partial(jax.jit, static_argnames=("k",))
+def knn(store: VectorStore, queries: jax.Array, k: int):
+    """Unfiltered exact top-k. Returns (dists, ids) each (Q, k)."""
+    d = full_distances(store, queries)
+    return topk_smallest(d, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def filtered_knn(store: VectorStore, queries: jax.Array, bitmaps: jax.Array,
+                 k: int):
+    """Exact top-k restricted to rows whose bitmap bit is set.
+
+    bitmaps: (Q, ceil(N/32)) uint32.  Rows failing the filter get +inf.
+    Returns (dists, ids); ids are -1 where fewer than k rows pass.
+    """
+    d = full_distances(store, queries)
+    ids = jnp.arange(store.n)
+    passing = jax.vmap(lambda bm: probe_bitmap(bm, ids))(bitmaps)
+    d = jnp.where(passing, d, jnp.inf)
+    dists, idx = topk_smallest(d, k)
+    idx = jnp.where(jnp.isinf(dists), -1, idx)
+    return dists, idx

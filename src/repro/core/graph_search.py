@@ -1,0 +1,444 @@
+"""Graph-based filtered vector search strategies (paper §2.3, §3.1–3.2).
+
+One unified, jittable beam-search core implements:
+
+  unfiltered      — plain HNSW base-layer search (zoom-in + beam)
+  sweeping        — traversal-first: navigate the full graph, filter-check a
+                    candidate only when it would enter the result queue W
+  acorn           — filter-first: predicate-subgraph traversal with run-time
+                    2-hop neighbor expansion (ACORN-1), incl. the paper's
+                    "hardened" adaptive skip of 2-hop for passing branches
+  navix           — ACORN-1 base + NaviX heuristics: blind / directed /
+                    onehop-s, selected per step by the adaptive-local rule
+  iterative_scan  — pgvector 0.8.0 resumable post-filtering: unfiltered
+                    traversal emits candidate batches; filters are applied
+                    after traversal; the scan resumes from preserved state
+                    until k passing results are found
+
+System-cost counters (SearchStats) mirror the paper's Table 6 exactly:
+distance computations, filter checks, hops, index/heap page accesses and
+translation-map lookups.  `translation_map=False` reproduces the Fig. 13
+ablation: every heaptid resolution then costs an index-page access instead
+of an in-memory map lookup.
+
+All loops are `jax.lax.while_loop`s over fixed-shape state so the whole
+search vmaps over queries and jits once per (graph shape, params).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hnsw import HNSWGraph
+from repro.core.types import (SearchParams, SearchStats, VectorStore,
+                              distance, probe_bitmap, topk_smallest)
+
+INF = jnp.inf
+
+
+def _pages_per_vector(dim: int) -> int:
+    """Heap pages touched per full-precision vector fetch (8 KB pages)."""
+    return max(1, -(-dim * 4 // 8192))
+
+
+def _dedup_first(ids: jax.Array) -> jax.Array:
+    """Mask of first occurrences (ids may contain -1 padding; -1 -> False)."""
+    order = jnp.argsort(ids)
+    s = ids[order]
+    first = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    mask = jnp.zeros_like(first).at[order].set(first)
+    return mask & (ids >= 0)
+
+
+def _insert_sorted(w_d, w_id, cand_d, cand_id):
+    """Merge candidates into sorted-ascending result array of fixed size."""
+    ef = w_d.shape[0]
+    d = jnp.concatenate([w_d, cand_d])
+    i = jnp.concatenate([w_id, cand_id])
+    nd, pos = topk_smallest(d, ef)
+    return nd, i[pos]
+
+
+def _gather_vec_dist(store: VectorStore, q, ids):
+    safe = jnp.maximum(ids, 0)
+    vecs = store.vectors[safe]
+    nsq = store.norms_sq[safe]
+    return distance(store.metric, q, vecs, nsq)
+
+
+# ---------------------------------------------------------------------------
+# Zoom-in phase (upper layers, always unfiltered — paper §2.3.1 phase (i))
+# ---------------------------------------------------------------------------
+
+def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats):
+    cur = graph.entry_point
+    cur_d = _gather_vec_dist(store, q, cur[None])[0]
+    ppv = _pages_per_vector(store.dim)
+    stats = SearchStats(stats.distance_comps + 1, stats.filter_checks,
+                        stats.hops, stats.page_accesses_index,
+                        stats.page_accesses_heap + ppv, stats.tmap_lookups,
+                        stats.reorder_rows)
+    for lvl in range(graph.num_levels - 1, 0, -1):
+        def cond(state):
+            _, _, improved, _ = state
+            return improved
+
+        def body(state):
+            cur, cur_d, _, st = state
+            nbrs = graph.neighbors[lvl, cur]
+            valid = nbrs >= 0
+            d = jnp.where(valid, _gather_vec_dist(store, q, nbrs), INF)
+            j = jnp.argmin(d)
+            better = d[j] < cur_d
+            n_valid = valid.sum()
+            st = SearchStats(
+                st.distance_comps + n_valid, st.filter_checks,
+                st.hops + 1, st.page_accesses_index + 1,
+                st.page_accesses_heap + n_valid * _pages_per_vector(store.dim),
+                st.tmap_lookups, st.reorder_rows)
+            return (jnp.where(better, nbrs[j], cur),
+                    jnp.where(better, d[j], cur_d), better, st)
+
+        cur, cur_d, _, stats = jax.lax.while_loop(
+            cond, body, (cur, cur_d, jnp.array(True), stats))
+    return cur, cur_d, stats
+
+
+# ---------------------------------------------------------------------------
+# Unified base-layer step: gather 1-hop + 2-hop neighborhoods and all masks.
+# Strategies differ only in which masks gate scoring/insertion/counting.
+# ---------------------------------------------------------------------------
+
+def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited):
+    nb1 = graph.neighbors[0, node]                      # (2M,)
+    v1 = nb1 >= 0
+    unv1 = v1 & ~visited[jnp.maximum(nb1, 0)]
+    pass1 = probe_bitmap(bitmap, nb1)
+    d1 = jnp.where(v1, _gather_vec_dist(store, q, nb1), INF)
+    nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]       # (2M, 2M)
+    nb2 = jnp.where(v1[:, None], nb2, -1)
+    v2 = nb2 >= 0
+    pass2 = probe_bitmap(bitmap, nb2)
+    unv2 = v2 & ~visited[jnp.maximum(nb2, 0)]
+    d2 = jnp.where(v2, _gather_vec_dist(store, q, nb2), INF)
+    return dict(nb1=nb1, v1=v1, unv1=unv1, pass1=pass1, d1=d1,
+                nb2=nb2, v2=v2, unv2=unv2, pass2=pass2, d2=d2)
+
+
+def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
+                 params: SearchParams, entry, entry_d, stats: SearchStats,
+                 ef_result: int):
+    """Shared beam loop. Returns (W_d, W_id sorted asc, pool, visited, stats).
+
+    `strategy` semantics are resolved here (static params → traced masks).
+    For iterative_scan this runs the *unfiltered* navigation with the big
+    result buffer; the resumable outer logic lives in `_iterative_scan`.
+    """
+    n = graph.n
+    P = params.beam_width
+    strat = params.strategy
+    ppv = _pages_per_vector(store.dim)
+    M2 = graph.neighbors.shape[2]
+
+    pool_d = jnp.full((P,), INF).at[0].set(entry_d)
+    pool_id = jnp.full((P,), -1, jnp.int32).at[0].set(entry)
+    visited = jnp.zeros((n,), bool).at[entry].set(True)
+    w_d = jnp.full((ef_result,), INF)
+    w_id = jnp.full((ef_result,), -1, jnp.int32)
+    # seed W with the entry if it passes the filter (or always, unfiltered)
+    entry_pass = probe_bitmap(bitmap, entry[None])[0]
+    seed_ok = entry_pass | (strat in ("unfiltered", "iterative_scan"))
+    w_d = jnp.where(seed_ok, w_d.at[0].set(entry_d), w_d)
+    w_id = jnp.where(seed_ok, w_id.at[0].set(entry), w_id)
+
+    def cond(state):
+        pool_d, pool_id, w_d, w_id, visited, st, done = state
+        return ~done
+
+    def body(state):
+        pool_d, pool_id, w_d, w_id, visited, st, done = state
+        j = jnp.argmin(pool_d)
+        best_d, best_id = pool_d[j], pool_id[j]
+        w_worst = w_d[params.ef_search - 1] if ef_result >= params.ef_search \
+            else w_d[-1]
+        stop = (best_d > w_worst) | jnp.isinf(best_d) | \
+            (st.hops >= params.max_hops)
+        # pop
+        pool_d = pool_d.at[j].set(INF)
+        pool_id = pool_id.at[j].set(-1)
+
+        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited)
+        dc = fc = pai = pah = tm = jnp.int32(0)
+        pai += 1  # step ①: current node's index page
+
+        if strat in ("unfiltered", "iterative_scan", "sweeping"):
+            # -------- traversal-first: score every unvisited 1-hop neighbor
+            score_m = e["unv1"]
+            n_s = score_m.sum()
+            dc += n_s
+            pah += n_s * ppv
+            cd = jnp.where(score_m, e["d1"], INF)
+            cid = jnp.where(score_m, e["nb1"], -1)
+            pool_d, pool_id = _pool_insert(pool_d, pool_id, cd, cid)
+            visited = visited.at[jnp.maximum(e["nb1"], 0)].set(
+                visited[jnp.maximum(e["nb1"], 0)] | score_m)
+            if strat == "sweeping":
+                # filter-check only candidates that would enter W
+                would = score_m & (cd < w_worst)
+                n_w = would.sum()
+                fc += n_w
+                tm_inc = jnp.where(params.translation_map, n_w, 0)
+                pai_inc = jnp.where(params.translation_map, 0, n_w)
+                tm += tm_inc
+                pai += pai_inc
+                wd = jnp.where(would & e["pass1"], cd, INF)
+                wid = jnp.where(would & e["pass1"], cid, -1)
+            else:
+                wd, wid = cd, cid
+            w_d, w_id = _insert_sorted(w_d, w_id, wd, wid)
+        else:
+            # -------- filter-first (acorn / navix): predicate subgraph
+            n1 = e["v1"].sum()
+            fc += n1                                   # check all 1-hop
+            tm += jnp.where(params.translation_map, n1, 0)
+            pai += jnp.where(params.translation_map, 0, n1)
+            pass1 = e["pass1"] & e["v1"]
+            local_sel = pass1.sum() / jnp.maximum(n1, 1)
+
+            if strat == "acorn":
+                do_onehop_score = jnp.array(True)
+                do_directed = jnp.array(False)
+                do_twohop_all = jnp.array(True)
+            else:  # navix heuristics
+                h = params.navix_heuristic
+                if h == "blind":
+                    do_onehop_score, do_directed, do_twohop_all = (
+                        jnp.array(True), jnp.array(False), jnp.array(True))
+                elif h == "directed":
+                    do_onehop_score, do_directed, do_twohop_all = (
+                        jnp.array(True), jnp.array(True), jnp.array(False))
+                elif h == "onehop":
+                    do_onehop_score, do_directed, do_twohop_all = (
+                        jnp.array(True), jnp.array(False), jnp.array(False))
+                else:  # adaptive-local (paper §2.3.4)
+                    do_onehop_score = jnp.array(True)
+                    do_directed = (local_sel > 0.08) & (local_sel <= 0.35)
+                    do_twohop_all = local_sel <= 0.08
+
+            # 1-hop: score the passing, unvisited ones
+            s1 = pass1 & e["unv1"]
+            n_s1 = s1.sum()
+            dc += n_s1
+            pah += n_s1 * ppv
+            cd1 = jnp.where(s1, e["d1"], INF)
+            cid1 = jnp.where(s1, e["nb1"], -1)
+
+            # decide which branches expand to 2 hops
+            expand_branch = e["v1"]
+            if params.adaptive_skip_2hop:
+                # hardened ACORN (paper §3.1 opt ii): skip 2-hop for branches
+                # whose 1-hop neighbor already passed the filter
+                expand_branch = expand_branch & ~pass1
+            if strat == "navix" and params.navix_heuristic in ("directed",
+                                                               "adaptive"):
+                # directed: expand only from top-ranked (closest) 1-hop nodes
+                rank = jnp.argsort(jnp.where(e["v1"], e["d1"], INF))
+                topr = jnp.zeros_like(e["v1"]).at[
+                    rank[: max(1, M2 // 4)]].set(True)
+                directed_branch = expand_branch & topr
+                expand_branch = jnp.where(
+                    do_twohop_all, expand_branch,
+                    jnp.where(do_directed, directed_branch, False))
+                # directed mode ranks ALL 1-hop neighbors → scores them
+                extra_rank_dc = jnp.where(
+                    do_directed, (e["v1"] & ~s1).sum(), 0)
+                dc += extra_rank_dc
+                pah += extra_rank_dc * ppv
+            elif strat == "navix" and params.navix_heuristic == "onehop":
+                expand_branch = jnp.zeros_like(expand_branch)
+
+            n_exp = expand_branch.sum()
+            pai += n_exp                               # step ②: branch pages
+            m2 = e["v2"] & expand_branch[:, None]
+            n2 = m2.sum()
+            fc += n2                                   # step ④: 2-hop checks
+            tm += jnp.where(params.translation_map, n2, 0)
+            pai += jnp.where(params.translation_map, 0, n2)
+            s2 = m2 & e["pass2"] & e["unv2"]
+            n_s2 = s2.sum()
+            dc += n_s2                                 # step ⑤
+            pah += n_s2 * ppv
+            cd2 = jnp.where(s2, e["d2"], INF).reshape(-1)
+            cid2 = jnp.where(s2, e["nb2"], -1).reshape(-1)
+
+            cd = jnp.concatenate([cd1, cd2])
+            cid = jnp.concatenate([cid1, cid2])
+            uniq = _dedup_first(cid)
+            cd = jnp.where(uniq, cd, INF)
+            cid = jnp.where(uniq, cid, -1)
+            pool_d, pool_id = _pool_insert(pool_d, pool_id, cd, cid)
+            visited = visited.at[jnp.maximum(cid, 0)].set(
+                visited[jnp.maximum(cid, 0)] | (cid >= 0))
+            w_d, w_id = _insert_sorted(w_d, w_id, cd, cid)
+
+        st = SearchStats(st.distance_comps + dc, st.filter_checks + fc,
+                         st.hops + 1, st.page_accesses_index + pai,
+                         st.page_accesses_heap + pah, st.tmap_lookups + tm,
+                         st.reorder_rows)
+        # When `stop` fired we must not apply this step: select old state.
+        new = (pool_d, pool_id, w_d, w_id, visited, st, stop)
+        old = (state[0], state[1], state[2], state[3], state[4], state[5],
+               jnp.array(True))
+        return jax.tree.map(lambda a, b: jnp.where(stop, b, a), new, old)
+
+    state = (pool_d, pool_id, w_d, w_id, visited, stats, jnp.array(False))
+    pool_d, pool_id, w_d, w_id, visited, stats, _ = jax.lax.while_loop(
+        cond, body, state)
+    return w_d, w_id, (pool_d, pool_id), visited, stats
+
+
+def _pool_insert(pool_d, pool_id, cand_d, cand_id):
+    P = pool_d.shape[0]
+    d = jnp.concatenate([pool_d, cand_d])
+    i = jnp.concatenate([pool_id, cand_id])
+    nd, pos = topk_smallest(d, P)
+    ni = i[pos]
+    nd = jnp.where(ni >= 0, nd, INF)
+    return nd, ni
+
+
+# ---------------------------------------------------------------------------
+# Top-level strategy entry points
+# ---------------------------------------------------------------------------
+
+def _finalize(w_d, w_id, bitmap, k, check_filter: bool):
+    """Top-k filter-passing results out of W (W is sorted ascending)."""
+    if check_filter:
+        ok = probe_bitmap(bitmap, w_id) & (w_id >= 0)
+    else:
+        ok = w_id >= 0
+    d = jnp.where(ok, w_d, INF)
+    dk, pos = topk_smallest(d, k)
+    ids = jnp.where(jnp.isinf(dk), -1, w_id[pos])
+    return dk, ids
+
+
+def _search_single(graph: HNSWGraph, store: VectorStore, q, bitmap,
+                   params: SearchParams):
+    stats = SearchStats.zeros()
+    entry, entry_d, stats = _zoom_in(graph, store, q, stats)
+    if params.strategy == "iterative_scan":
+        return _iterative_scan(graph, store, q, bitmap, params, entry,
+                               entry_d, stats)
+    w_d, w_id, _, _, stats = _base_search(
+        graph, store, q, bitmap, params, entry, entry_d, stats,
+        ef_result=params.ef_search)
+    check = params.strategy in ("unfiltered",)
+    dk, ids = _finalize(w_d, w_id, bitmap, params.k,
+                        check_filter=not check)
+    return dk, ids, stats
+
+
+def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
+                    params: SearchParams, entry, entry_d,
+                    stats: SearchStats):
+    """pgvector 0.8.0 iterative scan: unfiltered traversal, post-filter the
+    emitted batch, resume from preserved state until k passing results.
+
+    State preservation (the paper's discarded-queue D) falls out of the beam
+    representation: the pool retains seen-but-unexpanded candidates, and the
+    result buffer W_raw keeps everything ever emitted, so "resuming" is just
+    continuing the same loop with a larger effective ef.
+    """
+    n = graph.n
+    P = params.beam_width
+    ppv = _pages_per_vector(store.dim)
+    EFMAX = params.batch_tuples * params.max_rounds
+
+    pool_d = jnp.full((P,), INF).at[0].set(entry_d)
+    pool_id = jnp.full((P,), -1, jnp.int32).at[0].set(entry)
+    visited = jnp.zeros((n,), bool).at[entry].set(True)
+    w_d = jnp.full((EFMAX,), INF).at[0].set(entry_d)
+    w_id = jnp.full((EFMAX,), -1, jnp.int32).at[0].set(entry)
+
+    def cond(state):
+        *_, done = state
+        return ~done
+
+    def body(state):
+        pool_d, pool_id, w_d, w_id, visited, st, eff, rnd, checked, done = state
+        j = jnp.argmin(pool_d)
+        best_d, best_id = pool_d[j], pool_id[j]
+        w_worst = w_d[jnp.minimum(eff, EFMAX) - 1]
+        batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
+            (st.hops >= params.max_hops)
+
+        # ---- resume/emit path: filter the batch, maybe extend the scan
+        n_pass = (probe_bitmap(bitmap, w_id) &
+                  (jnp.arange(EFMAX) < eff) & (w_id >= 0)).sum()
+        newly = jnp.maximum(jnp.minimum(eff, EFMAX) - checked, 0)
+        fc_emit = jnp.where(batch_done, newly, 0)
+        tm_emit = jnp.where(params.translation_map, fc_emit, 0)
+        pai_emit = jnp.where(params.translation_map, 0, fc_emit)
+        enough = n_pass >= params.k
+        exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
+            (rnd + 1 >= params.max_rounds)
+        finish = batch_done & (enough | exhausted)
+        eff2 = jnp.where(batch_done & ~finish, eff + params.batch_tuples, eff)
+        rnd2 = jnp.where(batch_done & ~finish, rnd + 1, rnd)
+        checked2 = jnp.where(batch_done, jnp.minimum(eff, EFMAX), checked)
+
+        # ---- normal expansion path (only applied when ~batch_done)
+        pool_d2 = pool_d.at[j].set(INF)
+        pool_id2 = pool_id.at[j].set(-1)
+        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited)
+        score_m = e["unv1"]
+        n_s = score_m.sum()
+        cd = jnp.where(score_m, e["d1"], INF)
+        cid = jnp.where(score_m, e["nb1"], -1)
+        pool_d2, pool_id2 = _pool_insert(pool_d2, pool_id2, cd, cid)
+        visited2 = visited.at[jnp.maximum(e["nb1"], 0)].set(
+            visited[jnp.maximum(e["nb1"], 0)] | score_m)
+        w_d2, w_id2 = _insert_sorted(w_d, w_id, cd, cid)
+
+        st2 = SearchStats(
+            st.distance_comps + jnp.where(batch_done, 0, n_s),
+            st.filter_checks + fc_emit,
+            st.hops + jnp.where(batch_done, 0, 1),
+            st.page_accesses_index + jnp.where(batch_done, 0, 1) + pai_emit,
+            st.page_accesses_heap + jnp.where(batch_done, 0, n_s * ppv),
+            st.tmap_lookups + tm_emit, st.reorder_rows)
+
+        sel = lambda a, b: jax.tree.map(
+            lambda x, y: jnp.where(batch_done, x, y), a, b)
+        pool_d3, pool_id3, w_d3, w_id3, visited3 = sel(
+            (pool_d, pool_id, w_d, w_id, visited),
+            (pool_d2, pool_id2, w_d2, w_id2, visited2))
+        return (pool_d3, pool_id3, w_d3, w_id3, visited3, st2, eff2, rnd2,
+                checked2, finish)
+
+    state = (pool_d, pool_id, w_d, w_id, visited, stats,
+             jnp.int32(params.batch_tuples), jnp.int32(0), jnp.int32(0),
+             jnp.array(False))
+    pool_d, pool_id, w_d, w_id, visited, stats, eff, rnd, checked, _ = \
+        jax.lax.while_loop(cond, body, state)
+    in_batch = jnp.arange(EFMAX) < eff
+    d = jnp.where(in_batch, w_d, INF)
+    ids = jnp.where(in_batch, w_id, -1)
+    dk, pos = topk_smallest(
+        jnp.where(probe_bitmap(bitmap, ids) & (ids >= 0), d, INF), params.k)
+    out_ids = jnp.where(jnp.isinf(dk), -1, ids[pos])
+    return dk, out_ids, stats
+
+
+@partial(jax.jit, static_argnames=("params",))
+def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
+                 params: SearchParams):
+    """vmapped filtered search. queries (Q, d), bitmaps (Q, words).
+
+    Returns (dists (Q, k), ids (Q, k), SearchStats with (Q,) leaves).
+    """
+    return jax.vmap(lambda q, b: _search_single(graph, store, q, b, params))(
+        queries, bitmaps)

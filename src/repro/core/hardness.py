@@ -1,0 +1,81 @@
+"""Query-hardness metrics (paper §5, Table 2): LID and LRC.
+
+LID — Local Intrinsic Dimensionality, MLE estimator (Amsaleg et al. 2015):
+  LID(q) = - (1/k · Σ_i ln(d_i / d_k))^{-1}  over the query's k NNs.
+LRC — Local Relative Contrast (He et al. 2012 variant used by the paper):
+  contrast between the mean distance and the NN distance; values near 1
+  mean a harder search task (we report 1 - d_1/d_mean ∈ (0, 1)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import VectorStore
+from repro.core.workload import full_distances
+
+
+def lid_mle(store: VectorStore, queries, k: int = 100) -> float:
+    d = np.asarray(full_distances(store, queries))
+    d = np.sort(d, axis=1)[:, :k]
+    if store.metric == "l2":
+        d = np.sqrt(np.maximum(d, 1e-12))
+    else:
+        # IP "distances" are negative; shift to a positive ray per query
+        d = d - d[:, :1] + 1e-3 * (d[:, -1:] - d[:, :1] + 1e-9)
+    ratios = np.log(np.maximum(d[:, :-1], 1e-12)
+                    / np.maximum(d[:, -1:], 1e-12))
+    lid = -1.0 / np.mean(ratios, axis=1)
+    return float(np.mean(np.clip(lid, 0, 1e4)))
+
+
+def lrc(store: VectorStore, queries, k: int = 10,
+        selectivity: float = 0.1, seed: int = 0,
+        correlation: str = "low_pos") -> float:
+    """Paper's LRC semantics: how little the UNFILTERED NNs overlap the true
+    FILTERED NNs — 1 − |NN_unfiltered ∩ NN_filtered|/k at a reference
+    selectivity (uncorrelated filter).  In (0, 1); higher = harder."""
+    from repro.core.workload import WorkloadSpec, generate_passing_rows
+    d = np.asarray(full_distances(store, queries))
+    order = np.argsort(d, axis=1)
+    rows = generate_passing_rows(store, queries,
+                                 WorkloadSpec(selectivity, correlation),
+                                 seed)
+    vals = []
+    for i in range(d.shape[0]):
+        unf = order[i, :k]
+        passing = np.asarray(rows[i])
+        mask = np.isin(order[i], passing)
+        filt = order[i][mask][:k]
+        vals.append(1.0 - len(np.intersect1d(unf, filt)) / k)
+    return float(np.mean(vals))
+
+
+def dist_filter_relative_cost(dim: int, trials: int = 50,
+                              n: int = 4096) -> float:
+    """Paper Table 2 'Dist-Filt. Rel. Cost': wall-time of one distance
+    computation vs one bitmap probe, measured in isolation (library-style,
+    no storage engine)."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core.types import pack_bool_bitmap, probe_bitmap
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(n, dim).astype(np.float32))
+    q = jnp.asarray(rng.randn(dim).astype(np.float32))
+    bm = pack_bool_bitmap(rng.rand(n) < 0.5)
+    ids = jnp.asarray(rng.randint(0, n, n))
+
+    dist_fn = jax.jit(lambda q, x: jnp.sum((x - q) ** 2, -1))
+    probe_fn = jax.jit(lambda b, i: probe_bitmap(b, i))
+    dist_fn(q, x).block_until_ready()
+    probe_fn(bm, ids).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        dist_fn(q, x).block_until_ready()
+    td = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(trials):
+        probe_fn(bm, ids).block_until_ready()
+    tf = time.perf_counter() - t0
+    return td / max(tf, 1e-9)

@@ -1,0 +1,241 @@
+"""Filtered ScaNN: clustering-based index (paper §2.3.7, §3.3).
+
+Tree: optional branch level over leaves (the paper's `max_num_levels`), built
+with k-means.  Leaves are dense, MXU-aligned int8 (SQ8) tiles — the TPU
+analogue of the paper's "leaf packs as many vectors as fit in a page, linked
+list of pages" layout.  Optional PCA rotation precedes quantization (paper
+Table 5: PCA 1536→193 for OpenAI-5M).
+
+Search (paper Fig. 5/7): ① score branch centroids → top branches,
+② score their leaf centroids → top `num_leaves_to_search` leaves,
+③ fused filtered leaf scan (Pallas kernel): bitmap probe → dequantized
+scoring of passing rows only, ④ reordering: fetch full-precision vectors of
+the top k×reorder_factor candidates from the heap, rescore exactly, top-k.
+
+Counters follow Table 6's ScaNN columns: filter checks = every valid row in
+every opened leaf; distance comps = rows passing filters; hops = leaves
+scanned; reorder_rows = reordering candidates; page accesses = quantized
+leaf pages + heap pages for reordering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import (SearchParams, SearchStats, VectorStore,
+                              distance, probe_bitmap, topk_smallest)
+from repro.kernels import ops as kops
+
+PAGE_BYTES = 8192
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScannIndex:
+    # quantized leaf storage (possibly PCA-projected space)
+    leaf_tiles: jax.Array      # (L, C, dp) int8
+    leaf_rowids: jax.Array     # (L, C) int32, -1 padded
+    leaf_centroids: jax.Array  # (L, dp) f32
+    scale: jax.Array           # (dp,) f32   dequant: x = tile*scale + mean
+    mean: jax.Array            # (dp,) f32
+    # optional branch level (ids -1-padded); single-level if B == 0 rows
+    branch_centroids: jax.Array  # (B, dp) f32
+    branch_leaves: jax.Array     # (B, Lb) int32
+    # optional PCA projection from original d to dp
+    pca: jax.Array               # (d, dp) f32 (identity-like if disabled)
+    metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
+    levels: int = dataclasses.field(metadata=dict(static=True), default=2)
+
+    @property
+    def num_leaves(self) -> int:
+        return self.leaf_tiles.shape[0]
+
+
+def _kmeans(x: np.ndarray, k: int, iters: int = 12, seed: int = 0,
+            block: int = 8192) -> tuple[np.ndarray, np.ndarray]:
+    """Plain Lloyd's. Returns (centroids (k, d), assignment (n,))."""
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    cent = x[rng.choice(n, size=k, replace=False)].copy()
+    assign = np.zeros(n, np.int64)
+    for _ in range(iters):
+        for s in range(0, n, block):
+            e = min(s + block, n)
+            d = ((x[s:e] ** 2).sum(1)[:, None] + (cent ** 2).sum(1)[None, :]
+                 - 2.0 * x[s:e] @ cent.T)
+            assign[s:e] = d.argmin(1)
+        sums = np.zeros_like(cent)
+        np.add.at(sums, assign, x)
+        cnt = np.bincount(assign, minlength=k).astype(np.float64)
+        empty = cnt == 0
+        cent = np.where(empty[:, None], cent,
+                        sums / np.maximum(cnt, 1)[:, None])
+        if empty.any():  # reseed empty clusters on far points
+            far = rng.choice(n, size=int(empty.sum()), replace=False)
+            cent[empty] = x[far]
+    return cent.astype(np.float32), assign
+
+
+def build_scann(store: VectorStore, num_leaves: int, levels: int = 2,
+                pca_dims: int | None = None, seed: int = 0,
+                kmeans_iters: int = 12) -> ScannIndex:
+    x = np.asarray(store.vectors, np.float32)
+    n, d = x.shape
+
+    if pca_dims is not None and pca_dims < d:
+        mu = x.mean(0)
+        xc = x - mu
+        cov = (xc.T @ xc) / max(n - 1, 1)
+        w, v = np.linalg.eigh(cov)
+        proj = v[:, ::-1][:, :pca_dims].astype(np.float32)
+        # fold the centering into the projection space: xp = (x - mu) @ proj
+        xp = xc @ proj
+        pca = proj
+        pca_mu = mu
+    else:
+        xp = x
+        pca = np.eye(d, dtype=np.float32)
+        pca_mu = np.zeros(d, np.float32)
+    dp = xp.shape[1]
+
+    cent, assign = _kmeans(xp, num_leaves, iters=kmeans_iters, seed=seed)
+    counts = np.bincount(assign, minlength=num_leaves)
+    cap = int(counts.max())
+    cap += (-cap) % 8  # sublane alignment
+    rowids = np.full((num_leaves, cap), -1, np.int64)
+    order = np.argsort(assign, kind="stable")
+    offs = np.zeros(num_leaves, np.int64)
+    for row in order:
+        a = assign[row]
+        rowids[a, offs[a]] = row
+        offs[a] += 1
+
+    # SQ8: per-dimension affine quantization over the dataset
+    lo, hi = xp.min(0), xp.max(0)
+    scale = np.maximum((hi - lo) / 254.0, 1e-8).astype(np.float32)
+    mean = ((hi + lo) / 2.0).astype(np.float32)
+    q = np.clip(np.round((xp - mean) / scale), -127, 127).astype(np.int8)
+    tiles = np.zeros((num_leaves, cap, dp), np.int8)
+    valid = rowids >= 0
+    tiles[valid] = q[rowids[valid]]
+
+    if levels >= 2 and num_leaves >= 16:
+        nb = max(4, int(np.sqrt(num_leaves)))
+        bcent, bassign = _kmeans(cent, nb, iters=kmeans_iters, seed=seed + 1)
+        lb = int(np.bincount(bassign, minlength=nb).max())
+        bleaves = np.full((nb, lb), -1, np.int64)
+        boffs = np.zeros(nb, np.int64)
+        for leaf in np.argsort(bassign, kind="stable"):
+            b = bassign[leaf]
+            bleaves[b, boffs[b]] = leaf
+            boffs[b] += 1
+    else:
+        levels = 1
+        bcent = np.zeros((1, dp), np.float32)
+        bleaves = np.arange(num_leaves, dtype=np.int64)[None, :]
+
+    # store the PCA mean by folding it into `mean` of the quantizer space:
+    # query projection must also subtract pca_mu — stash it in pca row space
+    # by augmenting: qp = (q - pca_mu) @ pca. We keep pca_mu separately:
+    idx = ScannIndex(
+        leaf_tiles=jnp.asarray(tiles),
+        leaf_rowids=jnp.asarray(rowids, jnp.int32),
+        leaf_centroids=jnp.asarray(cent),
+        scale=jnp.asarray(scale), mean=jnp.asarray(mean),
+        branch_centroids=jnp.asarray(bcent),
+        branch_leaves=jnp.asarray(bleaves, jnp.int32),
+        pca=jnp.asarray(np.concatenate([pca, pca_mu[None, :] @ pca], 0)),
+        metric=store.metric, levels=levels)
+    return idx
+
+
+def project_query(index: ScannIndex, q: jax.Array) -> jax.Array:
+    """Apply the (folded-centering) PCA projection to a query."""
+    proj, mu_p = index.pca[:-1], index.pca[-1]
+    return q @ proj - mu_p
+
+
+def _quant_pages_per_leaf(index: ScannIndex) -> int:
+    c, dp = index.leaf_tiles.shape[1], index.leaf_tiles.shape[2]
+    return max(1, -(-c * dp // PAGE_BYTES))
+
+
+def _heap_pages_per_vector(d: int) -> int:
+    return max(1, -(-d * 4 // PAGE_BYTES))
+
+
+def _search_single(index: ScannIndex, store: VectorStore, q, bitmap,
+                   params: SearchParams, use_pallas: bool):
+    qp = project_query(index, q)
+    L, C, dp = index.leaf_tiles.shape
+    nl = min(params.num_leaves_to_search, L)
+    stats = SearchStats.zeros()
+
+    if index.levels >= 2:
+        B, Lb = index.branch_leaves.shape
+        bd = distance(index.metric, qp[None], index.branch_centroids,
+                      jnp.sum(index.branch_centroids ** 2, -1))
+        # open enough branches to cover nl leaves (paper Fig. 5-①)
+        nb = min(B, max(1, -(-nl * 2 * B // L)))
+        _, bsel = topk_smallest(bd, nb)
+        cand_leaves = index.branch_leaves[bsel].reshape(-1)      # (nb*Lb,)
+        cl = jnp.maximum(cand_leaves, 0)
+        ld = distance(index.metric, qp[None], index.leaf_centroids[cl],
+                      jnp.sum(index.leaf_centroids[cl] ** 2, -1))
+        ld = jnp.where(cand_leaves >= 0, ld, jnp.inf)
+        _, pos = topk_smallest(ld, nl)
+        leaves = cl[pos]                                          # (nl,)
+        cent_scored = index.branch_centroids.shape[0] + cand_leaves.shape[0]
+    else:
+        ld = distance(index.metric, qp[None], index.leaf_centroids,
+                      jnp.sum(index.leaf_centroids ** 2, -1))
+        _, leaves = topk_smallest(ld, nl)
+        cent_scored = L
+
+    tiles = index.leaf_tiles[leaves]          # (nl, C, dp)
+    rowids = index.leaf_rowids[leaves]        # (nl, C)
+    scores = kops.leaf_scan(qp, tiles, rowids, index.scale, index.mean,
+                            bitmap, metric=index.metric,
+                            use_pallas=use_pallas)                # (nl, C)
+
+    valid = rowids >= 0
+    n_valid = valid.sum()
+    passing = jnp.isfinite(scores)
+    n_pass = passing.sum()
+
+    # candidate selection + full-precision reordering (paper §6.2.2)
+    r = min(params.k * params.reorder_factor, nl * C)
+    flat_s, flat_pos = topk_smallest(scores.reshape(-1), r)
+    cand_rows = rowids.reshape(-1)[flat_pos]
+    cand_ok = jnp.isfinite(flat_s) & (cand_rows >= 0)
+    exact = distance(store.metric, q[None], store.vectors[
+        jnp.maximum(cand_rows, 0)], store.norms_sq[jnp.maximum(cand_rows, 0)])
+    exact = jnp.where(cand_ok, exact, jnp.inf)
+    dk, pos = topk_smallest(exact, params.k)
+    ids = jnp.where(jnp.isinf(dk), -1, cand_rows[pos])
+
+    n_reorder = cand_ok.sum()
+    stats = SearchStats(
+        distance_comps=stats.distance_comps + n_pass + cent_scored + n_reorder,
+        filter_checks=stats.filter_checks + n_valid,
+        hops=stats.hops + nl,
+        page_accesses_index=stats.page_accesses_index
+        + nl * _quant_pages_per_leaf(index),
+        page_accesses_heap=stats.page_accesses_heap
+        + n_reorder * _heap_pages_per_vector(store.dim),
+        tmap_lookups=stats.tmap_lookups,
+        reorder_rows=stats.reorder_rows + n_reorder)
+    return dk, ids, stats
+
+
+@partial(jax.jit, static_argnames=("params", "use_pallas"))
+def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
+                       bitmaps, params: SearchParams,
+                       use_pallas: bool = False):
+    """Filtered ScaNN search over a query batch."""
+    return jax.vmap(lambda q, b: _search_single(
+        index, store, q, b, params, use_pallas))(queries, bitmaps)

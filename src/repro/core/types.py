@@ -1,0 +1,175 @@
+"""Core datatypes for the filter-agnostic FVS framework.
+
+Mirrors the paper's object model:
+  - a vector collection stored in fixed-size "pages" (TPU analogue: dense
+    HBM tiles; see DESIGN.md §3),
+  - per-query filter *bitmaps* produced by the workload generator (§4 of the
+    paper): the index never sees predicates, only row-id bitmaps,
+  - per-query system counters (distance computations, filter checks, hops,
+    page accesses) exactly matching the columns of the paper's Table 6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Metrics supported by the paper's datasets (Table 2): L2 and inner product.
+METRIC_L2 = "l2"
+METRIC_IP = "ip"
+METRIC_COS = "cos"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VectorStore:
+    """A vector collection, optionally with a quantized shadow copy.
+
+    vectors: (N, d) float32 full-precision rows ("heap" in the paper).
+    norms_sq: (N,) precomputed squared norms (L2 fast path).
+    """
+
+    vectors: Array
+    norms_sq: Array
+    metric: str = dataclasses.field(metadata=dict(static=True), default=METRIC_L2)
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @staticmethod
+    def build(vectors: Array | np.ndarray, metric: str = METRIC_L2) -> "VectorStore":
+        vectors = jnp.asarray(vectors, jnp.float32)
+        norms_sq = jnp.sum(vectors * vectors, axis=-1)
+        return VectorStore(vectors=vectors, norms_sq=norms_sq, metric=metric)
+
+
+def distance(metric: str, q: Array, x: Array, x_norm_sq: Optional[Array] = None) -> Array:
+    """Distance between query q (..., d) and rows x (..., d). Lower is closer."""
+    if metric == METRIC_L2:
+        if x_norm_sq is None:
+            x_norm_sq = jnp.sum(x * x, axis=-1)
+        qn = jnp.sum(q * q, axis=-1)
+        return qn + x_norm_sq - 2.0 * jnp.sum(q * x, axis=-1)
+    if metric == METRIC_IP:
+        return -jnp.sum(q * x, axis=-1)
+    if metric == METRIC_COS:
+        qn = jnp.linalg.norm(q, axis=-1) + 1e-12
+        xn = jnp.linalg.norm(x, axis=-1) + 1e-12
+        return 1.0 - jnp.sum(q * x, axis=-1) / (qn * xn)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+# ---------------------------------------------------------------------------
+# Filter bitmaps.  The workload generator (workload.py) emits, per query, the
+# set of row ids satisfying the (simulated) relational predicate.  Probing
+# the bitmap during traversal == the paper's "filter check".
+# ---------------------------------------------------------------------------
+
+def pack_bitmap(passing_rows: np.ndarray | Array, n: int) -> Array:
+    """Pack row-id set into a (ceil(n/32),) uint32 bitmap."""
+    bits = np.zeros(n, dtype=bool)
+    bits[np.asarray(passing_rows)] = True
+    return pack_bool_bitmap(bits)
+
+
+def pack_bool_bitmap(bits: np.ndarray | Array) -> Array:
+    bits = np.asarray(bits, dtype=bool)
+    n = bits.shape[-1]
+    pad = (-n) % 32
+    if pad:
+        bits = np.concatenate([bits, np.zeros(bits.shape[:-1] + (pad,), bool)], -1)
+    words = bits.reshape(bits.shape[:-1] + (-1, 32))
+    weights = (1 << np.arange(32, dtype=np.uint64)).astype(np.uint32)
+    packed = (words.astype(np.uint32) * weights).sum(-1, dtype=np.uint32)
+    return jnp.asarray(packed)
+
+
+def probe_bitmap(bitmap: Array, row_ids: Array) -> Array:
+    """Vectorized filter check: bitmap probe per row id. Negative ids -> False."""
+    row_ids = jnp.asarray(row_ids)
+    safe = jnp.maximum(row_ids, 0)
+    word = bitmap[safe >> 5]
+    bit = (word >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.where(row_ids >= 0, bit.astype(bool), False)
+
+
+def unpack_bitmap(bitmap: np.ndarray | Array, n: int) -> np.ndarray:
+    words = np.asarray(bitmap)
+    bits = (words[..., :, None] >> np.arange(32, dtype=np.uint32)) & 1
+    return bits.reshape(words.shape[:-1] + (-1,))[..., :n].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Search statistics — the exact columns of the paper's Table 6, carried as a
+# pytree through every jitted search loop.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SearchStats:
+    distance_comps: Array          # scored candidates
+    filter_checks: Array           # bitmap probes
+    hops: Array                    # graph hops / (leaves scanned for ScaNN)
+    page_accesses_index: Array     # index-page analogue accesses (metadata)
+    page_accesses_heap: Array      # heap-page analogue accesses (vector rows)
+    tmap_lookups: Array            # translation-map lookups (Fig. 13 ablation)
+    reorder_rows: Array            # ScaNN reordering candidates (Table 6 col)
+
+    @staticmethod
+    def zeros(dtype=jnp.int32) -> "SearchStats":
+        z = jnp.zeros((), dtype)
+        return SearchStats(z, z, z, z, z, z, z)
+
+    def __add__(self, other: "SearchStats") -> "SearchStats":
+        return jax.tree.map(lambda a, b: a + b, self, other)
+
+    def as_dict(self) -> dict[str, Any]:
+        return {f.name: np.asarray(getattr(self, f.name)).tolist()
+                for f in dataclasses.fields(self)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchParams:
+    """Run-time knobs (paper §5 'Hyperparameter Tuning')."""
+
+    k: int = 10
+    ef_search: int = 64            # result-queue width (HNSW ef / W size)
+    beam_width: int = 64           # candidate pool width
+    max_hops: int = 512            # safety cap on traversal length
+    strategy: str = "sweeping"     # sweeping|acorn|navix|iterative_scan|scann|...
+    two_hop: bool = True           # filter-first 2-hop expansion (ACORN/NaviX)
+    adaptive_skip_2hop: bool = True  # the paper's "hardened ACORN" optimization
+    translation_map: bool = True   # paper §3.1 optimization (i); Fig. 13 ablation
+    navix_heuristic: str = "adaptive"  # blind|directed|onehop|adaptive
+    # ScaNN knobs:
+    num_leaves_to_search: int = 32
+    reorder_factor: int = 4        # rescoring budget = k * reorder_factor
+    # Iterative-scan knobs (pgvector max_scan_tuples analogue):
+    batch_tuples: int = 128
+    max_rounds: int = 16
+
+
+def topk_smallest(values: Array, k: int) -> tuple[Array, Array]:
+    """(values, indices) of the k smallest entries. jnp.top_k on negated vals."""
+    neg, idx = jax.lax.top_k(-values, k)
+    return -neg, idx
+
+
+@partial(jax.jit, static_argnames=("k",))
+def recall_at_k(found_ids: Array, true_ids: Array, k: int) -> Array:
+    """|found ∩ true| / k for one query. ids may contain -1 padding."""
+    f = found_ids[..., :k]
+    t = true_ids[..., :k]
+    eq = (f[..., :, None] == t[..., None, :]) & (f[..., :, None] >= 0)
+    return eq.any(-1).sum(-1).astype(jnp.float32) / k

@@ -1,0 +1,161 @@
+"""Filtered-vector-search workload generator (paper §4).
+
+Given a vector dataset, a query set, a *selectivity* and a *correlation
+type*, produces per-query row-id bitmaps simulating the result of evaluating
+relational filter predicates — without materializing structured columns.
+
+Correlation types (paper §4.2):
+  high_pos   — softmax-biased sample from the closest THIRD of rows
+  med_pos    — softmax-biased sample from the closest HALF
+  low_pos    — softmax-biased sample from ALL rows (closer rows likelier)
+  negative   — distances negated, then as low_pos (farther rows likelier)
+  none       — uniform random sample
+
+Sampling-without-replacement uses the Gumbel-top-k trick so the whole
+generator is a single jittable program.  When the requested selectivity
+exceeds the correlated pool size (e.g. 90 % selectivity with high_pos whose
+pool is N/3), the full pool is taken and the remainder is drawn uniformly
+from the rest — the maximum-feasible-correlation completion (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import VectorStore, distance, pack_bool_bitmap
+
+CORRELATIONS = ("high_pos", "med_pos", "low_pos", "negative", "none")
+# The paper's nine selectivities (§5 Workloads): 0.01 .. 0.9.
+PAPER_SELECTIVITIES = (0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8, 0.9)
+
+_POOL_FRAC = {"high_pos": 1.0 / 3.0, "med_pos": 0.5, "low_pos": 1.0,
+              "negative": 1.0, "none": 1.0}
+
+
+def query_distance_order(store: VectorStore, queries: jax.Array,
+                         block: int = 4096) -> jax.Array:
+    """(Q, N) row ids sorted by increasing distance from each query."""
+    dists = full_distances(store, queries, block)
+    return jnp.argsort(dists, axis=-1)
+
+
+def full_distances(store: VectorStore, queries: jax.Array,
+                   block: int = 4096) -> jax.Array:
+    """(Q, N) dense distance matrix, computed in row blocks."""
+    q = jnp.asarray(queries, jnp.float32)
+    n = store.n
+    pads = (-n) % block
+    vecs = jnp.pad(store.vectors, ((0, pads), (0, 0)))
+    nsq = jnp.pad(store.norms_sq, (0, pads), constant_values=jnp.inf)
+    nblocks = vecs.shape[0] // block
+
+    def body(i, acc):
+        rows = jax.lax.dynamic_slice_in_dim(vecs, i * block, block, 0)
+        rnsq = jax.lax.dynamic_slice_in_dim(nsq, i * block, block, 0)
+        d = distance(store.metric, q[:, None, :], rows[None, :, :], rnsq[None, :])
+        return jax.lax.dynamic_update_slice_in_dim(acc, d, i * block, 1)
+
+    acc = jnp.zeros((q.shape[0], nblocks * block), jnp.float32)
+    out = jax.lax.fori_loop(0, nblocks, body, acc)
+    return out[:, :n]
+
+
+@partial(jax.jit, static_argnames=("n_sel", "pool_size", "negate", "uniform"))
+def _sample_one(key, sorted_ids, sorted_dists, n_sel: int, pool_size: int,
+                negate: bool, uniform: bool):
+    """Gumbel-top-k biased sample of n_sel ids from the first pool_size rows."""
+    n = sorted_ids.shape[0]
+    pool_ids = sorted_ids[:pool_size]
+    if uniform:
+        logits = jnp.zeros((pool_size,))
+    else:
+        # Rank-based softmax bias (scale-free across datasets/metrics): the
+        # closest row in the pool is e^BETA more likely than the farthest.
+        # `negate` flips the ranking (negative correlation, paper §4.2).
+        BETA = 4.0
+        rank = jnp.arange(pool_size, dtype=jnp.float32)
+        rank = (pool_size - 1) - rank if negate else rank
+        logits = -BETA * rank / max(pool_size - 1, 1)
+    k1, k2 = jax.random.split(key)
+    gumbel = -jnp.log(-jnp.log(jax.random.uniform(k1, (pool_size,), minval=1e-20)))
+    take_in_pool = min(n_sel, pool_size)
+    _, idx = jax.lax.top_k(logits + gumbel, take_in_pool)
+    chosen = pool_ids[idx]
+    if n_sel > pool_size:
+        # Maximum-feasible-correlation completion: whole pool + uniform rest.
+        rest = sorted_ids[pool_size:]
+        extra = jax.random.choice(k2, rest, (n_sel - pool_size,), replace=False)
+        chosen = jnp.concatenate([chosen, extra])
+    return chosen
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    selectivity: float
+    correlation: str  # one of CORRELATIONS
+
+
+def generate_bitmaps(store: VectorStore, queries: jax.Array,
+                     spec: WorkloadSpec, seed: int = 0) -> jax.Array:
+    """Per-query packed filter bitmaps (Q, ceil(N/32)) uint32."""
+    rows = generate_passing_rows(store, queries, spec, seed)
+    n = store.n
+    out = []
+    for r in rows:
+        bits = np.zeros(n, bool)
+        bits[np.asarray(r)] = True
+        out.append(np.asarray(pack_bool_bitmap(bits)))
+    return jnp.asarray(np.stack(out))
+
+
+def generate_passing_rows(store: VectorStore, queries: jax.Array,
+                          spec: WorkloadSpec, seed: int = 0) -> list[np.ndarray]:
+    """Per-query arrays of row ids satisfying the simulated predicate."""
+    if spec.correlation not in CORRELATIONS:
+        raise ValueError(f"unknown correlation {spec.correlation!r}")
+    if not (0.0 < spec.selectivity <= 1.0):
+        raise ValueError("selectivity must be in (0, 1]")
+    n = store.n
+    n_sel = max(1, round(spec.selectivity * n))
+    pool = max(n_sel if spec.correlation != "none" else 1,
+               int(np.ceil(_POOL_FRAC[spec.correlation] * n)))
+    pool = min(pool, n)
+    dists = full_distances(store, queries)
+    order = jnp.argsort(dists, axis=-1)
+    sorted_d = jnp.take_along_axis(dists, order, axis=-1)
+    keys = jax.random.split(jax.random.PRNGKey(seed), queries.shape[0])
+    uniform = spec.correlation == "none"
+    negate = spec.correlation == "negative"
+    sample = jax.vmap(lambda k, oi, od: _sample_one(
+        k, oi, od, n_sel=n_sel, pool_size=pool, negate=negate, uniform=uniform))
+    chosen = sample(keys, order, sorted_d)
+    return [np.asarray(c) for c in chosen]
+
+
+def generate_grid(store: VectorStore, queries: jax.Array,
+                  selectivities: Sequence[float] = PAPER_SELECTIVITIES,
+                  correlations: Sequence[str] = CORRELATIONS,
+                  seed: int = 0):
+    """The paper's full workload grid: dict[(sel, corr)] -> (Q, words) bitmaps."""
+    grid = {}
+    for corr in correlations:
+        for sel in selectivities:
+            spec = WorkloadSpec(selectivity=sel, correlation=corr)
+            grid[(sel, corr)] = generate_bitmaps(store, queries, spec, seed)
+            seed += 1
+    return grid
+
+
+def empirical_correlation(store: VectorStore, query: jax.Array,
+                          passing_rows: np.ndarray, k: int = 100) -> float:
+    """Fraction of the query's k unfiltered NNs that pass the filter —
+    a direct measurable proxy for vector-predicate correlation (used by the
+    property tests to assert the generator orders correlations correctly)."""
+    d = full_distances(store, query[None])[0]
+    nn = np.asarray(jnp.argsort(d)[:k])
+    return float(np.isin(nn, passing_rows).mean())

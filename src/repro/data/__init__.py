@@ -1,0 +1,6 @@
+from repro.data.datasets import DatasetSpec, PAPER_DATASETS, make_dataset
+from repro.data.pipeline import (DataConfig, batch_for_step, make_data_config,
+                                 token_batch_specs)
+
+__all__ = ["DatasetSpec", "PAPER_DATASETS", "make_dataset", "DataConfig",
+           "batch_for_step", "make_data_config", "token_batch_specs"]

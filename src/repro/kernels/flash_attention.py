@@ -1,0 +1,115 @@
+"""Fused flash-attention Pallas kernel (inference/prefill path).
+
+The pure-JAX blocked attention in `models/layers.py` materializes the
+(Tq × block) score tensor between its two einsums — XLA will not fuse two
+dots, so on TPU that tensor round-trips HBM and the 32k-prefill cells go
+memory-bound (EXPERIMENTS.md §Roofline).  This kernel keeps the whole
+online-softmax block pipeline in VMEM: HBM traffic collapses to Q/K/V/O.
+
+Grid: (batch·kv_heads, q_blocks).  Each step loads one (BQ, hd) query
+block and loops over KV blocks with the standard running-max/sum update.
+Causal masking via block-index arithmetic.  GQA handled by head grouping
+(q heads of one kv head processed together: (BQ, G, hd) resident).
+
+Forward-only (serving/prefill); training keeps the autodiff-able jnp path.
+Validated in interpret mode against models.layers.flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  seq_k: int, seq_valid: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...][0].astype(jnp.float32) * scale          # (BQ, G, hd)
+    bq, g, hd = q.shape
+    nkv = seq_k // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(i * block_k, block_k)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(i * block_k, block_k)].astype(jnp.float32)
+        s = jnp.einsum("qgh,kh->qgk", q, k,
+                       preferred_element_type=jnp.float32)  # (BQ, G, BK)
+        kpos = i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, 1, block_k), 2)
+        valid = kpos < seq_valid
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, 1, block_k), 0)
+            valid &= kpos <= qpos
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("qgk,kh->qgh", p, v,
+                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc * corr[..., None] + pv
+
+    m0 = jnp.full((bq, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq, g), jnp.float32)
+    a0 = jnp.zeros((bq, g, hd), jnp.float32)
+    if causal:
+        # only kv blocks up to (and including) the diagonal contribute
+        hi = jnp.minimum((qi + 1) * block_q + block_k - 1, seq_k) // block_k
+    else:
+        hi = nkv
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    o_ref[...] = out[None].astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, block_q: int = 512,
+                           block_k: int = 512,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, T, H, hd); k, v: (B, S, KV, hd) → (B, T, H, hd).
+
+    Requires T % block_q == 0 and S % block_k == 0 after internal padding.
+    """
+    b, t, h, hd = q.shape
+    s_len, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+    block_q = min(block_q, t)
+    block_k = min(block_k, s_len)
+    pq = (-t) % block_q
+    pk = (-s_len) % block_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    tp, sp = t + pq, s_len + pk
+    # layout: (B·KV, T, G, hd) so one grid row owns one kv head
+    qr = q.reshape(b, tp, kv, g, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b * kv, tp, g, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, sp, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, sp, hd)
+    grid = (b * kv, tp // block_q)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          seq_k=sp, seq_valid=s_len, causal=causal,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, g, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, sp, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, sp, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, tp, g, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    out = out.reshape(b, kv, tp, g, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b, tp, h, hd)
+    return out[:, :t]

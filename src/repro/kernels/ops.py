@@ -1,0 +1,77 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in `interpret=True` mode (Pallas
+executes the kernel body with the same blocking); on TPU they compile to
+Mosaic.  `use_pallas=False` falls through to the jnp oracles — tests compare
+both paths.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref
+from repro.kernels.distance import distance_matrix_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.leaf_scan import leaf_scan_pallas
+from repro.kernels.topk import topk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def distance_matrix(queries, rows, metric: str = "l2",
+                    use_pallas: bool = True):
+    if use_pallas:
+        return distance_matrix_pallas(queries, rows, metric,
+                                      interpret=_interpret())
+    return ref.distance_matrix_ref(queries, rows, metric)
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def leaf_scan(query, tiles, rowids, scale, mean, bitmap, metric: str = "l2",
+              use_pallas: bool = True):
+    if use_pallas:
+        return leaf_scan_pallas(query, tiles, rowids, scale, mean, bitmap,
+                                metric, interpret=_interpret())
+    return ref.leaf_scan_ref(query, tiles, rowids, scale, mean, bitmap,
+                             metric)
+
+
+@partial(jax.jit, static_argnames=("k", "use_pallas"))
+def topk_smallest(values, k: int, use_pallas: bool = True):
+    if use_pallas:
+        return topk_pallas(values, k, interpret=_interpret())
+    return ref.topk_partial_ref(values, k)
+
+
+def flash_attention_fused(q, k, v, causal: bool = True):
+    """Pallas flash attention, shard_map-wrapped when a mesh is active:
+    batch shards over (pod, data), kv heads over `model` (when divisible).
+    Interpret mode on non-TPU backends."""
+    mesh = jax.sharding.get_abstract_mesh()
+    interp = _interpret()
+    if mesh is None or mesh.empty:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=interp)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    bsz = 1
+    for a in baxes:
+        bsz *= sizes[a]
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) \
+        if baxes and q.shape[0] % bsz == 0 else None
+    kvspec = "model" if ("model" in sizes
+                         and k.shape[2] % sizes["model"] == 0) else None
+    qs = P(bspec, None, kvspec, None)
+    fn = jax.shard_map(
+        lambda q_, k_, v_: flash_attention_pallas(q_, k_, v_, causal=causal,
+                                                  interpret=interp),
+        mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs, check_vma=False)
+    return fn(q, k, v)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def distance_matrix_ref(queries: jax.Array, rows: jax.Array,
+                        metric: str = "l2") -> jax.Array:
+    """(Q, N) distances; lower = closer. queries (Q, d), rows (N, d) f32."""
+    ip = queries @ rows.T
+    if metric == "ip":
+        return -ip
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)
+    rn = jnp.sum(rows * rows, axis=1)[None, :]
+    return qn + rn - 2.0 * ip
+
+
+def probe_bitmap_ref(bitmap: jax.Array, row_ids: jax.Array) -> jax.Array:
+    safe = jnp.maximum(row_ids, 0)
+    word = bitmap[safe >> 5]
+    bit = (word >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    return jnp.where(row_ids >= 0, bit.astype(bool), False)
+
+
+def leaf_scan_ref(query: jax.Array, tiles: jax.Array, rowids: jax.Array,
+                  scale: jax.Array, mean: jax.Array, bitmap: jax.Array,
+                  metric: str = "l2") -> jax.Array:
+    """Fused filtered quantized leaf scoring, reference semantics.
+
+    query  (d,) f32           — already PCA-projected if applicable
+    tiles  (nl, C, d) int8    — SQ8-quantized leaf rows
+    rowids (nl, C) int32      — heap row ids, -1 padded
+    scale/mean (d,) f32       — dequantization: x = tile * scale + mean
+    bitmap (words,) uint32    — filter bitmap over heap row ids
+    returns (nl, C) f32 scores with +inf where padded or filtered out.
+    """
+    x = tiles.astype(jnp.float32) * scale + mean          # (nl, C, d)
+    if metric == "ip":
+        d = -jnp.einsum("lcd,d->lc", x, query)
+    else:
+        qn = jnp.sum(query * query)
+        xn = jnp.sum(x * x, axis=-1)
+        d = qn + xn - 2.0 * jnp.einsum("lcd,d->lc", x, query)
+    ok = probe_bitmap_ref(bitmap, rowids)
+    return jnp.where(ok, d, jnp.inf)
+
+
+def topk_partial_ref(values: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Global k smallest (values, indices) over a 1-D array."""
+    neg, idx = jax.lax.top_k(-values, k)
+    return -neg, idx

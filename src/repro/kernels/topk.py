@@ -1,0 +1,58 @@
+"""Two-stage tiled partial top-k Pallas kernel.
+
+Stage 1 (this kernel): each grid step reduces one VMEM-resident block of
+scores to its local k smallest via k iterative masked-min extractions —
+k is small (10–100) so this is k cheap VPU reductions, no sort network.
+Stage 2 (host/XLA): jnp.top_k over the (nblocks × k) survivors.
+
+This is the TPU shape of ScaNN's per-leaf candidate selection: selection is
+done while the scores are still VMEM-resident, so only k survivors per block
+travel back to HBM instead of the full score stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_block_kernel(v_ref, outv_ref, outi_ref, *, k: int, block: int):
+    v = v_ref[...][0]                                # (block,) f32
+    idx_base = pl.program_id(0) * block
+    vals = jnp.full((k,), jnp.inf, jnp.float32)
+    idxs = jnp.full((k,), -1, jnp.int32)
+    cur = v
+    for j in range(k):                               # k masked-min extractions
+        i = jnp.argmin(cur)
+        vals = vals.at[j].set(cur[i])
+        idxs = idxs.at[j].set(idx_base + i)
+        cur = cur.at[i].set(jnp.inf)
+    outv_ref[...] = vals[None, :]
+    outi_ref[...] = idxs[None, :]
+
+
+def topk_pallas(values: jax.Array, k: int, block: int = 1024,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Global k smallest of a 1-D array: (values, indices)."""
+    n = values.shape[0]
+    block = min(block, max(k, n))
+    pad = (-n) % block
+    v = jnp.pad(values.astype(jnp.float32), (0, pad),
+                constant_values=jnp.inf)[None, :]
+    nb = v.shape[1] // block
+    outv, outi = pl.pallas_call(
+        functools.partial(_topk_block_kernel, k=k, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, k), lambda i: (i, 0)),
+                   pl.BlockSpec((1, k), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, k), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, k), jnp.int32)],
+        interpret=interpret,
+    )(v)
+    flatv, flati = outv.reshape(-1), outi.reshape(-1)
+    neg, pos = jax.lax.top_k(-flatv, k)
+    idx = flati[pos]
+    return -neg, jnp.where(idx < n, idx, -1)

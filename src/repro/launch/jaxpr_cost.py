@@ -1,0 +1,158 @@
+"""Exact jaxpr-level cost accounting for the roofline analysis.
+
+XLA's `compiled.cost_analysis()` counts `while` bodies ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes by ~n_layers.  This module
+traverses the jaxpr instead: `scan` bodies are multiplied by their static
+`length` (nested scans compose), so matmul FLOPs are exact.
+
+Bytes are a *fusion-aware estimate*: only memory-bound primitive classes
+are charged (matmul operands/results, gathers/scatters, dynamic slices,
+reductions, sorts, RNG) — elementwise ops are assumed fused into their
+producers, as on TPU.  Both this number and XLA's raw one are reported in
+EXPERIMENTS.md; the roofline uses this one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __add__(self, o: "Cost") -> "Cost":
+        return Cost(self.flops + o.flops, self.bytes + o.bytes)
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64)
+                     * np.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0.0
+
+
+_MEM_PRIMS = {
+    "gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+    "dynamic_update_slice", "reduce_sum", "reduce_max", "reduce_min",
+    "reduce_prod", "argmax", "argmin", "sort", "top_k", "cumsum",
+    "cumlogsumexp", "cummax", "rng_bit_generator", "random_bits", "iota",
+    "concatenate", "pad", "rev", "reduce_window",
+}
+
+
+def _dot_flops(eqn) -> float:
+    dn = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dn
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = float(np.prod([lhs.shape[i] for i in lc], dtype=np.float64)) \
+        if lc else 1.0
+    return 2.0 * float(np.prod(out.shape, dtype=np.float64)) * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops ≈ 2 · out_elems · (kernel spatial × in_channels)
+    k = float(np.prod(rhs.shape[:-1], dtype=np.float64))
+    return 2.0 * float(np.prod(out.shape, dtype=np.float64)) * k
+
+
+def _eqn_io_bytes(eqn) -> float:
+    return sum(_aval_bytes(v.aval) for v in list(eqn.invars)
+               if hasattr(v, "aval")) + \
+        sum(_aval_bytes(v.aval) for v in eqn.outvars)
+
+
+def count_jaxpr(jaxpr) -> Cost:
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += Cost(_dot_flops(eqn), _eqn_io_bytes(eqn))
+        elif name in ("conv_general_dilated",):
+            total += Cost(_conv_flops(eqn), _eqn_io_bytes(eqn))
+        elif name == "scan":
+            inner = count_jaxpr(eqn.params["jaxpr"].jaxpr)
+            length = eqn.params["length"]
+            total += inner * float(length)
+            # loop carries cross HBM once per iteration (read + write) —
+            # this is the true cost of token-level recurrence and of
+            # unfused online-softmax accumulators (§Perf cells C/rwkv)
+            ncarry = eqn.params.get("num_carry", 0)
+            ncons = eqn.params.get("num_consts", 0)
+            carry_avals = eqn.params["jaxpr"].in_avals[ncons:ncons + ncarry]
+            carry_bytes = sum(_aval_bytes(a) for a in carry_avals)
+            total += Cost(0.0, 2.0 * carry_bytes * float(length))
+        elif name == "while":
+            # models use scan; FVS loops are bounded by max_hops — charge 1×
+            total += count_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+        elif name == "cond":
+            branches = [count_jaxpr(b.jaxpr)
+                        for b in eqn.params["branches"]]
+            total += max(branches, key=lambda c: c.flops) if branches \
+                else Cost()
+        elif name == "shard_map":
+            # body is per-device: scale to global totals (divided back by
+            # chips when forming per-device roofline terms)
+            sub = eqn.params.get("jaxpr")
+            mesh = eqn.params.get("mesh")
+            n_dev = getattr(mesh, "size", 1) if mesh is not None else 1
+            if sub is not None:
+                total += count_jaxpr(getattr(sub, "jaxpr", sub)) * float(
+                    n_dev)
+        elif name in ("pjit", "jit", "xla_call", "closed_call", "core_call",
+                      "remat_call", "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "checkpoint", "remat",
+                      "remat2", "custom_lin",
+                      "sharding_constraint_call"):
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr") \
+                or eqn.params.get("fun_jaxpr")
+            if sub is not None:
+                total += count_jaxpr(getattr(sub, "jaxpr", sub))
+            elif name in ("custom_jvp_call", "custom_vjp_call"):
+                pass
+        elif name == "pallas_call":
+            # fused kernel: HBM traffic = operands + outputs (everything
+            # else stays in VMEM).  FLOPs: the flash kernel is recognized
+            # structurally (q 4D + identical k/v 3D) and charged its two
+            # matmuls over the full S (upper bound for causal); other
+            # kernels charge their body jaxpr x grid steps.
+            b = _eqn_io_bytes(eqn)
+            ins = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+            if (len(ins) == 3 and ins[0].ndim == 4 and ins[1].ndim == 3
+                    and ins[1].shape == ins[2].shape):
+                bkv, t, g, hd = ins[0].shape
+                f = 4.0 * bkv * t * g * hd * ins[1].shape[1]
+            else:
+                gm = eqn.params.get("grid_mapping")
+                grid = tuple(getattr(gm, "grid", ()) or ())
+                steps = float(np.prod(grid)) if grid else 1.0
+                body = eqn.params.get("jaxpr")
+                f = count_jaxpr(body).flops * steps if body is not None \
+                    else 0.0
+            total += Cost(f, b)
+        elif name in _MEM_PRIMS:
+            total += Cost(0.0, _eqn_io_bytes(eqn))
+        # elementwise / layout ops: assumed fused (0 bytes, ~0 flops)
+    return total
+
+
+def step_cost(fn, *args) -> Cost:
+    """Cost of `fn(*args)` (args may be ShapeDtypeStructs)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    c = count_jaxpr(closed.jaxpr)
+    # charge input/output residency once (params, batch, caches)
+    io = sum(_aval_bytes(v.aval) for v in closed.jaxpr.invars) + \
+        sum(_aval_bytes(v.aval) for v in closed.jaxpr.outvars)
+    return Cost(c.flops, c.bytes + io)

@@ -1,0 +1,27 @@
+"""Production mesh factory (assignment MULTI-POD DRY-RUN §1).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  Single pod: (data=16, model=16) = 256 chips of a
+v5e pod; multi-pod: (pod=2, data=16, model=16) = 512 chips, the `pod` axis
+crossing DCI.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

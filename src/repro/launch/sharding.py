@@ -1,0 +1,209 @@
+"""Parameter/activation partition rules (DP / TP / EP / FSDP / SP).
+
+Rules are (path-regex → PartitionSpec template) pairs; templates name the
+TRAILING dims of a leaf (scan/stack dims are left-padded with None).  With
+`cfg.fsdp` the weights additionally shard over the data axis (ZeRO-style —
+optimizer state inherits the same specs, so m/v are fully sharded).
+
+GQA caveat: kv-head counts (often 8) don't divide the 16-way model axis;
+kv projections/caches stay replicated across `model` (Megatron GQA-TP
+semantics) while q/o shard.  GSPMD handles the one uneven case
+(llama3.2-3b's 24 heads) by padding.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _rules(cfg: ArchConfig, data_axis, model_axis) -> list[tuple[str, P]]:
+    if cfg.sharding_scheme == "sp":
+        # sequence-parallel activations: weights FSDP over data, no TP dims
+        d, m = data_axis, None
+    else:
+        d = data_axis if cfg.fsdp else None
+        m = model_axis
+    return [
+        # embeddings / head
+        (r"embed.*\btok\b", P(m, d)),
+        (r"embed.*unembed", P(d, m)),
+        (r"\bhead\b", P(d, None)),
+        (r"adapter", P(d, None)),
+        # attention
+        (r"attn.*\bwq\b|shared_attn.*\bwq\b", P(d, m)),
+        (r"attn.*\bwk\b|shared_attn.*\bwk\b", P(d, None)),
+        (r"attn.*\bwv\b|shared_attn.*\bwv\b", P(d, None)),
+        (r"attn.*\bwo\b|shared_attn.*\bwo\b", P(m, d)),
+        # MoE (leading E dim shards over model = EP)
+        (r"ffn.*router", P(None, None)),
+        (r"ffn.*\bwg\b|ffn.*\bwu\b", _moe_spec(cfg, m, d, up=True)),
+        (r"ffn.*\bwd\b", _moe_spec(cfg, m, d, up=False)),
+        # dense MLP / rwkv cmix / shared mlp
+        (r"(mlp|cmix).*\bwk\b", P(d, m)),
+        (r"(mlp|cmix).*\bwv\b", P(m, d)),
+        (r"cmix.*\bwr\b", P(d, None)),
+        # rwkv tmix
+        (r"tmix.*\bw[rkvg]\b", P(d, m)),
+        (r"tmix.*\bwo\b", P(m, d)),
+        (r"tmix.*lora_a", P(d, None)),
+        (r"tmix.*wlora_a", P(d, None)),
+        # mamba
+        (r"in_proj", P(d, m)),
+        (r"out_proj", P(m, d)),
+        # catch-alls
+        (r"norm|mu\b|w0|\bu\b|ln_w|a_log|d_skip|dt_bias|conv|mask_embed"
+         r"|lora_b|wlora_b", P()),
+    ]
+
+
+def _moe_spec(cfg: ArchConfig, m, d, up: bool) -> P:
+    if cfg.family != "moe":
+        return P(d, m) if up else P(m, d)
+    # experts always shard over `model` (EP) — including under the SP
+    # scheme, where dense weights are FSDP-only (§Perf cell A it3)
+    return P("model", d, None) if up else P("model", None, d)
+
+
+def _dense_fallback(cfg: ArchConfig, ndim: int, data_axis, model_axis) -> P:
+    return P(*([None] * ndim))
+
+
+def fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop axis names whose size doesn't divide the dim (jit in_shardings
+    require exact divisibility) or that the mesh doesn't have."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fit(dim: int, a):
+        names = a if isinstance(a, (tuple, list)) else (a,)
+        kept = []
+        prod = 1
+        for n in names:
+            if n is None or n not in sizes:
+                continue
+            if dim % (prod * sizes[n]) == 0:
+                kept.append(n)
+                prod *= sizes[n]
+        if not kept:
+            return None
+        return tuple(kept) if len(kept) > 1 else kept[0]
+
+    tpl = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    return P(*[fit(d, a) for d, a in zip(shape, tpl)])
+
+
+def spec_for_path(cfg: ArchConfig, path: str, ndim: int, data_axis,
+                  model_axis) -> P:
+    for pat, spec in _rules(cfg, data_axis, model_axis):
+        if re.search(pat, path):
+            tpl = tuple(spec)
+            if len(tpl) > ndim:
+                tpl = tpl[len(tpl) - ndim:]
+            pad = ndim - len(tpl)
+            return P(*([None] * pad + list(tpl)))
+    return _dense_fallback(cfg, ndim, data_axis, model_axis)
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any,
+                mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        spec = spec_for_path(cfg, name, len(leaf.shape), "data", "model")
+        if mesh is not None:
+            spec = fit_spec(spec, leaf.shape, mesh)
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_specs(cfg: ArchConfig, opt_shape: Any, pspecs: Any,
+              mesh: Optional[Mesh] = None) -> Any:
+    """Optimizer state: m/v inherit the weight specs; scalars replicate."""
+    def build(shape_leafed, like):
+        return like
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if re.search(r"\bstep\b", name):
+            out.append(P())
+            continue
+        # strip the leading ['m']/['v']/['adamw']/['ef_error'] wrappers and
+        # look the rest up in the param rules
+        stripped = re.sub(r"^\['(adamw|ef_error)'\]", "", name)
+        stripped = re.sub(r"^\['(m|v)'\]", "", stripped)
+        spec = spec_for_path(cfg, stripped, len(leaf.shape), "data", "model")
+        if mesh is not None:
+            spec = fit_spec(spec, leaf.shape, mesh)
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(cfg: ArchConfig, batch_shape: Any, mesh: Mesh,
+                shard_seq: bool = False) -> Any:
+    """Input batch: batch dim over (pod, data); optionally SP on seq."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = baxes if baxes else None
+
+    def one(path, leaf):
+        ndim = len(leaf.shape)
+        if leaf.shape[0] == 1:          # long_500k batch=1: replicate batch
+            rest = [None] * (ndim - 1)
+            if shard_seq and ndim >= 2:
+                rest[0] = "data"
+            return P(None, *rest)
+        rest = [None] * (ndim - 1)
+        if shard_seq and ndim >= 2:
+            rest[0] = "model"           # SP: seq over model axis
+        return P(bspec, *rest)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fit_spec(one(p, l), l.shape, mesh) for p, l in flat])
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: Any, mesh: Mesh) -> Any:
+    """KV caches: (layers/groups..., B, S, kv, hd): batch over (pod,data);
+    kv heads replicated (GQA-TP); SSM states batch-sharded."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        ndim = len(shape)
+        # find the batch dim: first dim whose size matches a known batch is
+        # fragile — instead: caches are built as (stack..., B, ...) where
+        # the number of leading stack dims is ndim - per-leaf batch rank.
+        name = jax.tree_util.keystr(path)
+        if re.search(r"attn_k|attn_v|local_k|local_v|global_k|global_v",
+                     name):
+            # (g[, per], B, S, kv, hd)
+            lead = ndim - 4
+            spec = [None] * lead + [baxes, None, None, None]
+            return P(*spec)
+        if re.search(r"\bk\b|\bv\b", name) and ndim == 5:
+            return P(None, baxes, None, None, None)
+        if re.search(r"wkv", name):      # (L, B, H, C, C)
+            return P(None, baxes, "model", None, None)
+        if re.search(r"ssm", name):      # (..., B, H, P, N)
+            lead = ndim - 4
+            return P(*([None] * lead + [baxes, "model", None, None]))
+        if re.search(r"x_prev|conv", name):
+            lead = ndim - 3
+            return P(*([None] * lead + [baxes, None, None]))
+        return P(*([None] * ndim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [fit_spec(one(p, l), l.shape, mesh) for p, l in flat])
+
+
+def to_named(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,83 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch × shape) cell — the dry-run lowers against these (no allocation).
+`make_smoke_batch` materializes small real batches with the same layout.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, t, cfg.d_model), jnp.float32),
+            "mask_positions": jax.ShapeDtypeStruct((b, t), jnp.bool_),
+            "targets": jax.ShapeDtypeStruct((b, t), jnp.int32),
+        }
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((b, t), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, t), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, t), jnp.float32),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b, t = shape.global_batch, shape.seq_len
+    if cfg.family == "encoder":
+        return {"frames": jax.ShapeDtypeStruct((b, t, cfg.d_model),
+                                               jnp.float32)}
+    batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    b = shape.global_batch
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict[str, Any]:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def make_smoke_batch(cfg: ArchConfig, batch: int, seq: int,
+                     kind: str = "train", seed: int = 0) -> dict[str, Any]:
+    rng = np.random.RandomState(seed)
+    if cfg.family == "encoder":
+        out = {"frames": jnp.asarray(
+            rng.randn(batch, seq, cfg.d_model).astype(np.float32))}
+        if kind == "train":
+            out["mask_positions"] = jnp.asarray(rng.rand(batch, seq) < 0.3)
+            out["targets"] = jnp.asarray(
+                rng.randint(0, cfg.num_classes, (batch, seq)), jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab, (batch, seq if kind != "decode" else 1)),
+        jnp.int32)}
+    if kind == "train":
+        out["targets"] = jnp.asarray(
+            rng.randint(0, cfg.vocab, (batch, seq)), jnp.int32)
+        out["mask"] = jnp.ones((batch, seq), jnp.float32)
+    if cfg.family == "vlm" and kind != "decode":
+        out["patch_embeds"] = jnp.asarray(
+            rng.randn(batch, cfg.num_patches, cfg.d_model).astype(
+                np.float32) * 0.02)
+    return out

@@ -1,0 +1,89 @@
+"""Unified model API: one bundle per architecture family.
+
+  bundle = build_model(cfg)
+  params = bundle.init(key)
+  loss   = bundle.loss(params, batch)           # training objective
+  logits = bundle.prefill(params, batch)        # inference prefill
+  cache  = bundle.init_cache(batch, seq_len)    # decode state
+  logits, cache = bundle.decode(params, cache, batch, pos)
+
+`batch` layouts per family are produced by `input_specs()` in
+repro.launch.specs (ShapeDtypeStructs for the dry-run, real arrays from
+repro.data for smoke tests / training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encoder, hybrid, rwkv, transformer as tfm, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], jax.Array]
+    prefill: Callable[[Any, dict], jax.Array]
+    init_cache: Optional[Callable[[int, int], Any]]
+    decode: Optional[Callable[[Any, Any, dict, Any], tuple]]
+
+
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: tfm.init_lm(key, cfg),
+            loss=lambda p, b: tfm.lm_loss(p, b, cfg),
+            prefill=lambda p, b: tfm.prefill(p, cfg, tokens=b["tokens"]),
+            init_cache=lambda bsz, s: tfm.init_cache(cfg, bsz, s),
+            decode=lambda p, c, b, pos: tfm.decode_step(
+                p, c, b["tokens"], pos, cfg),
+        )
+    if fam == "vlm":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: vlm.init_vlm(key, cfg),
+            loss=lambda p, b: vlm.vlm_loss(p, b, cfg),
+            prefill=lambda p, b: vlm.vlm_prefill(
+                p, cfg, b["tokens"], b["patch_embeds"]),
+            init_cache=lambda bsz, s: tfm.init_cache(cfg, bsz, s),
+            decode=lambda p, c, b, pos: tfm.decode_step(
+                p, c, b["tokens"], pos, cfg),
+        )
+    if fam == "encoder":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encoder.init_encoder(key, cfg),
+            loss=lambda p, b: encoder.encoder_loss(p, b, cfg),
+            prefill=lambda p, b: encoder.encode(p, b["frames"], cfg,
+                                                allow_pallas=True),
+            init_cache=None,
+            decode=None,
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: rwkv.init_rwkv_lm(key, cfg),
+            loss=lambda p, b: rwkv.rwkv_loss(p, b, cfg),
+            prefill=lambda p, b: rwkv.rwkv_prefill(p, cfg, b["tokens"]),
+            init_cache=lambda bsz, s: rwkv.init_rwkv_cache(cfg, bsz, s),
+            decode=lambda p, c, b, pos: rwkv.rwkv_decode_step(
+                p, c, b["tokens"], pos, cfg),
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: hybrid.init_hybrid(key, cfg),
+            loss=lambda p, b: hybrid.hybrid_loss(p, b, cfg),
+            prefill=lambda p, b: hybrid.hybrid_prefill(p, cfg, b["tokens"]),
+            init_cache=lambda bsz, s: hybrid.init_hybrid_cache(cfg, bsz, s),
+            decode=lambda p, c, b, pos: hybrid.hybrid_decode_step(
+                p, c, b["tokens"], pos, cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,65 @@
+"""HuBERT-style bidirectional encoder (masked-unit prediction).
+
+The conv waveform frontend is a STUB per the assignment: `input_specs()`
+provides precomputed frame embeddings (B, T, D); a learned linear adapter
+stands in for the feature projection.  Training objective: cross-entropy
+over `num_classes` codebook units at masked positions (vocab=504 in the
+assignment line is the codebook size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (attention_block, cdtype, init_attention,
+                                 init_dense, init_mlp, mlp_block, pdtype,
+                                 rmsnorm, shard, softmax_xent)
+from repro.models.transformer import _remat
+
+
+def init_encoder(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+
+    def init_layer(k):
+        ka, kf = jax.random.split(k)
+        return {"attn": init_attention(ka, cfg), "ffn": init_mlp(kf, cfg)}
+
+    layers = jax.vmap(init_layer)(jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "adapter": init_dense(ks[1], cfg.d_model, cfg.d_model, pdtype(cfg)),
+        "mask_embed": (jax.random.normal(ks[2], (cfg.d_model,), jnp.float32)
+                       * 0.02),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": init_dense(ks[3], cfg.d_model, cfg.num_classes, pdtype(cfg)),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ArchConfig,
+           mask_positions: jax.Array | None = None,
+           allow_pallas: bool = False) -> jax.Array:
+    """frames: (B, T, D) stub frontend output. Bidirectional attention."""
+    x = (frames.astype(cdtype(cfg)) @ params["adapter"].astype(cdtype(cfg)))
+    if mask_positions is not None:
+        x = jnp.where(mask_positions[..., None],
+                      params["mask_embed"].astype(x.dtype), x)
+    x = shard(x, ("pod", "data"), None, None)
+
+    def layer_fn(x, lp):
+        a, _ = attention_block(lp["attn"], x, cfg, is_global=True,
+                               allow_pallas=allow_pallas)
+        x = x + a
+        return x + mlp_block(lp["ffn"], x, cfg), None
+
+    x, _ = jax.lax.scan(_remat(layer_fn, cfg), x, params["layers"])
+    return rmsnorm(x, params["final_norm"])
+
+
+def encoder_loss(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Masked-prediction CE at masked frames (paper: HuBERT objective)."""
+    x = encode(params, batch["frames"], cfg,
+               mask_positions=batch["mask_positions"])
+    logits = x @ params["head"].astype(x.dtype)
+    m = batch["mask_positions"].astype(jnp.float32)
+    return softmax_xent(logits, batch["targets"], m)

@@ -1,0 +1,134 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one SHARED attention block.
+
+Structure: the n_layers Mamba2 layers are scanned in groups of
+`attn_every`; after each group the shared attention+MLP block (single
+parameter set, reused) runs.  Tail layers (n_layers % attn_every) scan
+separately.  Each shared-attention call site has its OWN KV cache (weights
+shared, state not), ring-buffered to `shared_attn_window` for long-context
+decode (DESIGN.md §5 note).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (attention_block, cdtype, embed_tokens,
+                                 init_attention, init_embeddings, init_mlp,
+                                 lm_logits, mlp_block, softmax_xent)
+from repro.models.ssm import mamba_block, mamba_init_state, init_mamba
+from repro.models.transformer import _decode_attn, _remat
+
+
+def _group_counts(cfg: ArchConfig) -> tuple[int, int]:
+    g = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, tail
+
+
+def init_hybrid(key, cfg: ArchConfig) -> dict:
+    ke, km, kt, ka, kf = jax.random.split(key, 5)
+    g, tail = _group_counts(cfg)
+    keys = jax.random.split(km, g * cfg.attn_every).reshape(
+        g, cfg.attn_every, 2)
+    groups = jax.vmap(jax.vmap(lambda k: init_mamba(k, cfg)))(keys)
+    p = {"embed": init_embeddings(ke, cfg), "mamba_groups": groups,
+         "shared_attn": init_attention(ka, cfg),
+         "shared_mlp": init_mlp(kf, cfg)}
+    if tail:
+        p["mamba_tail"] = jax.vmap(lambda k: init_mamba(k, cfg))(
+            jax.random.split(kt, tail).reshape(tail, 2))
+    return p
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens, cfg).astype(cdtype(cfg))
+    g, tail = _group_counts(cfg)
+
+    def group_fn(x, gp):
+        for i in range(cfg.attn_every):
+            sub = jax.tree.map(lambda a: a[i], gp)
+            m, _ = mamba_block(sub, x, cfg)
+            x = x + m
+        a, _ = attention_block(params["shared_attn"], x, cfg,
+                               is_global=True)
+        x = x + a
+        return x + mlp_block(params["shared_mlp"], x, cfg), None
+
+    x, _ = jax.lax.scan(_remat(group_fn, cfg), x, params["mamba_groups"])
+    if tail:
+        def tail_fn(x, lp):
+            m, _ = mamba_block(lp, x, cfg)
+            return x + m, None
+        x, _ = jax.lax.scan(tail_fn, x, params["mamba_tail"])
+    return x
+
+
+def hybrid_loss(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    x = forward(params, cfg, batch["tokens"])
+    logits = lm_logits(params["embed"], x, cfg)
+    return softmax_xent(logits, batch["targets"], batch["mask"])
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    g, tail = _group_counts(cfg)
+    ms = mamba_init_state(cfg, batch)
+    cache = {
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (g, cfg.attn_every) + a.shape), ms),
+        "attn_k": jnp.zeros(
+            (g, batch, min(cfg.shared_attn_window, seq_len), cfg.n_kv,
+             cfg.head_dim), cdtype(cfg)),
+        "attn_v": jnp.zeros(
+            (g, batch, min(cfg.shared_attn_window, seq_len), cfg.n_kv,
+             cfg.head_dim), cdtype(cfg)),
+    }
+    if tail:
+        cache["mamba_tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape), ms)
+    return cache
+
+
+def hybrid_decode_step(params: dict, cache: dict, tokens: jax.Array, pos,
+                       cfg: ArchConfig):
+    x = embed_tokens(params["embed"], tokens, cfg).astype(cdtype(cfg))
+    g, tail = _group_counts(cfg)
+
+    def group_fn(x, xs):
+        gp, ms, kc, vc = xs
+        new_ms = []
+        for i in range(cfg.attn_every):
+            sub = jax.tree.map(lambda a: a[i], gp)
+            st = jax.tree.map(lambda a: a[i], ms)
+            m, ns = mamba_block(sub, x, cfg, state=st)
+            x = x + m
+            new_ms.append(ns)
+        a, nc = _decode_attn(params["shared_attn"], x, kc, vc, cfg,
+                             is_global=True, pos=pos)
+        x = x + a
+        x = x + mlp_block(params["shared_mlp"], x, cfg)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_ms)
+        return x, (stacked, nc["k"], nc["v"])
+
+    x, (nms, nk, nv) = jax.lax.scan(
+        group_fn, x, (params["mamba_groups"], cache["mamba"],
+                      cache["attn_k"], cache["attn_v"]))
+    new_cache = {"mamba": nms, "attn_k": nk, "attn_v": nv}
+    if tail:
+        def tail_fn(x, xs):
+            lp, st = xs
+            m, ns = mamba_block(lp, x, cfg, state=st)
+            return x + m, ns
+        x, nts = jax.lax.scan(tail_fn, x,
+                              (params["mamba_tail"], cache["mamba_tail"]))
+        new_cache["mamba_tail"] = nts
+    logits = lm_logits(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def hybrid_prefill(params: dict, cfg: ArchConfig, tokens: jax.Array):
+    x = forward(params, cfg, tokens)
+    return lm_logits(params["embed"], x[:, -1:], cfg)

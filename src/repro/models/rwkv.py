@@ -1,0 +1,71 @@
+"""RWKV6 ("Finch") language model: attention-free, data-dependent decay."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (cdtype, embed_tokens, init_embeddings,
+                                 lm_logits, softmax_xent)
+from repro.models.ssm import (init_rwkv_cmix, init_rwkv_tmix, rwkv_cmix,
+                              rwkv_init_state, rwkv_tmix)
+from repro.models.transformer import _remat
+
+
+def init_rwkv_lm(key, cfg: ArchConfig) -> dict:
+    ke, kl = jax.random.split(key)
+
+    def init_layer(k):
+        kt, kc = jax.random.split(k)
+        return {"tmix": init_rwkv_tmix(kt, cfg),
+                "cmix": init_rwkv_cmix(kc, cfg)}
+
+    layers = jax.vmap(init_layer)(jax.random.split(kl, cfg.n_layers))
+    return {"embed": init_embeddings(ke, cfg), "layers": layers}
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    x = embed_tokens(params["embed"], tokens, cfg).astype(cdtype(cfg))
+
+    def layer_fn(x, lp):
+        t, _ = rwkv_tmix(lp["tmix"], x, cfg)
+        x = x + t
+        c, _ = rwkv_cmix(lp["cmix"], x, cfg)
+        return x + c, None
+
+    x, _ = jax.lax.scan(_remat(layer_fn, cfg), x, params["layers"])
+    return x
+
+
+def rwkv_loss(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    x = forward(params, cfg, batch["tokens"])
+    logits = lm_logits(params["embed"], x, cfg)
+    return softmax_xent(logits, batch["targets"], batch["mask"])
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """O(1) state per layer — seq_len-independent (the point of the arch)."""
+    one = rwkv_init_state(cfg, batch)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def rwkv_decode_step(params: dict, cache: dict, tokens: jax.Array,
+                     pos, cfg: ArchConfig):
+    x = embed_tokens(params["embed"], tokens, cfg).astype(cdtype(cfg))
+
+    def layer_fn(x, xs):
+        lp, st = xs
+        t, ts = rwkv_tmix(lp["tmix"], x, cfg, state=st["tmix"])
+        x = x + t
+        c, cs = rwkv_cmix(lp["cmix"], x, cfg, state=st["cmix"])
+        return x + c, {"tmix": ts, "cmix": cs}
+
+    x, new_cache = jax.lax.scan(layer_fn, x, (params["layers"], cache))
+    logits = lm_logits(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def rwkv_prefill(params: dict, cfg: ArchConfig, tokens: jax.Array):
+    x = forward(params, cfg, tokens)
+    return lm_logits(params["embed"], x[:, -1:], cfg)

@@ -1,0 +1,367 @@
+"""State-space / linear-recurrence layers: Mamba2 (SSD) and RWKV6.
+
+Mamba2 uses the chunked SSD formulation (intra-chunk masked matmul +
+inter-chunk carried state), which maps the recurrence onto MXU matmuls.
+RWKV6 ("Finch": data-dependent per-channel decay) has two selectable paths:
+
+  * `scan`    — token-level `lax.scan` recurrence (the faithful baseline;
+                HBM-bound: the (dk × dv) state round-trips per token)
+  * `chunked` — GLA-style chunked form (the §Perf hillclimb variant: state
+                traffic reduced by the chunk length, compute moved to MXU)
+
+Both paths share the single-token `*_decode_step` used by serve_step, and
+the chunked path is validated against scan in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (BATCH_AXES, cdtype, init_dense, pdtype,
+                                 rmsnorm, shard)
+
+MAMBA_HEAD_DIM = 64
+RWKV_HEAD_DIM = 64
+LORA_RANK = 32
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ArchConfig) -> tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // MAMBA_HEAD_DIM
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ArchConfig) -> dict:
+    d_inner, n_heads, n_state = mamba_dims(cfg)
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    return {
+        "norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "in_proj": init_dense(ks[0], cfg.d_model,
+                              2 * d_inner + 2 * n_state + n_heads, dt),
+        "conv": (jax.random.normal(ks[1], (4, d_inner), jnp.float32)
+                 * 0.2).astype(dt),
+        "a_log": jnp.zeros((n_heads,), jnp.float32),        # A = -exp(a_log)
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": init_dense(ks[2], d_inner, cfg.d_model, dt),
+    }
+
+
+def _ssd_chunked(x, a_log, bm, cm, chunk: int,
+                 init_state: Optional[jax.Array] = None):
+    """Chunked SSD. x: (B,T,H,P); a_log: (B,T,H) (≤0); bm, cm: (B,T,N).
+
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    b, t, h, p = x.shape
+    n = bm.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a_log.reshape(b, nc, chunk, h)
+    bc = bm.reshape(b, nc, chunk, n)
+    cc = cm.reshape(b, nc, chunk, n)
+
+    ca = jnp.cumsum(ac, axis=2)                       # (b,nc,Q,h) inclusive
+    # intra-chunk: L[t,i] = exp(ca_t - ca_i) for i <= t (per head)
+    diff = ca[:, :, :, None, :] - ca[:, :, None, :, :]     # (b,nc,Q,Q,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc,
+                    preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xc,
+                         preferred_element_type=jnp.float32)
+
+    # chunk summaries: S_c = Σ_i exp(ca_Q - ca_i) · x_i ⊗ B_i
+    decay_out = jnp.exp(ca[:, :, -1:, :] - ca)             # (b,nc,Q,h)
+    s_c = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_out, xc, bc,
+                     preferred_element_type=jnp.float32)
+    a_tot = jnp.exp(ca[:, :, -1, :])                       # (b,nc,h)
+
+    def body(s, inp):
+        sc, at = inp
+        s_new = s * at[:, :, None, None] + sc
+        return s_new, s
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        body, s0, (s_c.transpose(1, 0, 2, 3, 4), a_tot.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)             # (b,nc,h,p,n)
+    decay_in = jnp.exp(ca)                                  # (b,nc,Q,h)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, s_prevs, decay_in,
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)[:, :t]
+    return y.astype(x.dtype), s_final
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ArchConfig,
+                state: Optional[dict] = None):
+    """Mamba2 block. Training: chunked SSD over T. Decode: state holds
+    (conv_buf (B,3,d_inner), ssm (B,H,P,N)); x is (B,1,D)."""
+    b, t, _ = x.shape
+    d_inner, n_heads, n_state = mamba_dims(cfg)
+    h = rmsnorm(x, params["norm"])
+    zxbcdt = h @ params["in_proj"].astype(h.dtype)
+    z, xin, bm, cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n_state,
+                 2 * d_inner + 2 * n_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])              # (b,t,H)
+    a = -jnp.exp(params["a_log"])                          # (H,)
+
+    if state is None:
+        # causal depthwise conv (kernel 4)
+        xp = jnp.pad(xin, ((0, 0), (3, 0), (0, 0)))
+        conv = sum(xp[:, i:i + t] * params["conv"][i].astype(xin.dtype)
+                   for i in range(4))
+        xs = jax.nn.silu(conv)
+        xh = xs.reshape(b, t, n_heads, MAMBA_HEAD_DIM)
+        xdt = xh * dt[..., None].astype(xh.dtype)
+        a_log_t = dt * a                                   # (b,t,H) ≤ 0
+        y, _ = _ssd_chunked(xdt, a_log_t, bm.astype(jnp.float32),
+                            cm.astype(jnp.float32), cfg.ssm_chunk)
+        y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+        new_state = None
+    else:
+        conv_buf = jnp.concatenate([state["conv"], xin], axis=1)  # (b,4,di)
+        conv = jnp.einsum("bkd,kd->bd", conv_buf,
+                          params["conv"].astype(xin.dtype))[:, None]
+        xs = jax.nn.silu(conv)
+        xh = xs.reshape(b, 1, n_heads, MAMBA_HEAD_DIM)
+        xdt = (xh * dt[..., None].astype(xh.dtype))[:, 0]   # (b,H,P)
+        decay = jnp.exp(dt[:, 0] * a)                       # (b,H)
+        s = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xdt.astype(jnp.float32), bm[:, 0].astype(
+                jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0].astype(jnp.float32), s)
+        y = y[:, None].reshape(b, 1, n_heads, MAMBA_HEAD_DIM).astype(xh.dtype)
+        y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+        new_state = {"conv": conv_buf[:, 1:], "ssm": s}
+
+    y = y.reshape(b, t, d_inner) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(y.dtype)
+    return shard(out, BATCH_AXES, None, None), new_state
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int) -> dict:
+    d_inner, n_heads, n_state = mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, 3, d_inner), cdtype(cfg)),
+            "ssm": jnp.zeros((batch, n_heads, MAMBA_HEAD_DIM, n_state),
+                             jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def rwkv_dims(cfg: ArchConfig) -> tuple[int, int]:
+    n_heads = cfg.d_model // RWKV_HEAD_DIM
+    return n_heads, RWKV_HEAD_DIM
+
+
+def init_rwkv_tmix(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    dt = pdtype(cfg)
+    n_heads, _ = rwkv_dims(cfg)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(
+            jnp.float32),                               # r,k,v,g,w lerp base
+        "lora_a": init_dense(ks[1], d, LORA_RANK * 5, dt, 0.1),
+        "lora_b": (jax.random.normal(ks[2], (5, LORA_RANK, d), jnp.float32)
+                   * 0.01).astype(dt),
+        "wr": init_dense(ks[3], d, d, dt),
+        "wk": init_dense(ks[4], d, d, dt),
+        "wv": init_dense(ks[5], d, d, dt),
+        "wg": init_dense(ks[6], d, d, dt),
+        "wo": init_dense(ks[7], d, d, dt),
+        "w0": (jnp.zeros((d,), jnp.float32) - 0.6),      # decay bias
+        "wlora_a": init_dense(ks[8], d, LORA_RANK, dt, 0.1),
+        "wlora_b": (jax.random.normal(ks[9], (LORA_RANK, d), jnp.float32)
+                    * 0.01).astype(dt),
+        "u": jnp.zeros((d,), jnp.float32),               # current-token bonus
+        "ln_w": jnp.ones((d,), jnp.float32),             # per-head groupnorm
+    }
+
+
+def _rwkv_mix(params, x, x_prev):
+    """RWKV6 ddlerp: 5 data-dependent token-shift mixes -> r,k,v,g,w inputs.
+    x: (B,T,D); x_prev: (B,T,D) (token-shifted x)."""
+    delta = x_prev - x
+    lora = jax.nn.tanh(x @ params["lora_a"].astype(x.dtype))    # (B,T,5R)
+    b_, t_, _ = lora.shape
+    lora = lora.reshape(b_, t_, 5, LORA_RANK)
+    dyn = jnp.einsum("btfr,frd->btfd", lora,
+                     params["lora_b"].astype(x.dtype))          # (B,T,5,D)
+    mixed = x[:, :, None] + delta[:, :, None] * (
+        params["mu"][None, None].astype(x.dtype) + dyn)
+    return [mixed[:, :, i] for i in range(5)]
+
+
+def _rwkv_scan(r, k, v, w_log, u, init_state=None):
+    """Token-recurrent WKV. r,k,v: (B,T,H,C); w_log: (B,T,H,C) (≤0);
+    u: (H,C). Returns (out (B,T,H,C), final_state (B,H,C,C))."""
+    b, t, h, c = r.shape
+
+    def body(s, inp):
+        rt, kt, vt, wt = inp                              # (b,h,c)
+        kv = jnp.einsum("bhc,bhd->bhcd", kt, vt)
+        out = jnp.einsum("bhc,bhcd->bhd", rt, s + u[None, :, :, None] * kv)
+        s = jnp.exp(wt)[..., None] * s + kv
+        return s, out
+
+    s0 = jnp.zeros((b, h, c, c), jnp.float32) if init_state is None \
+        else init_state
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w_log.transpose(1, 0, 2, 3).astype(jnp.float32))
+    s, out = jax.lax.scan(body, s0, xs)
+    return out.transpose(1, 0, 2, 3), s
+
+
+def _rwkv_chunked(r, k, v, w_log, u, chunk: int, init_state=None):
+    """GLA-style chunked WKV with per-channel decay (the perf variant).
+
+    Numerics: per-chunk cumulative log-decay is clamped to ≥ -60 before
+    exponentiation (contributions below e⁻⁶⁰ are zero in f32 anyway).
+    """
+    b, t, h, c = r.shape
+    pad = (-t) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, w_log = z(r), z(k), z(v), z(w_log)
+    nc = r.shape[1] // chunk
+    sh = lambda a: a.reshape(b, nc, chunk, h, c).astype(jnp.float32)
+    rc, kc, vc, wc = sh(r), sh(k), sh(v), sh(w_log)
+    cw = jnp.cumsum(wc, axis=2)                      # (b,nc,Q,h,c) inclusive
+    cw_ex = cw - wc                                  # exclusive (up to q-1)
+    # scan semantics: out_q reads S_{q-1}, so kv_i decays by
+    # prod_{j=i+1..q-1} w_j = exp(cw_{q-1} - cw_i) = exp(cw_ex_q - cw_i)
+    diff = cw_ex[:, :, :, None] - cw[:, :, None, :, :]      # (b,nc,Q,Q,h,c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    ldec = jnp.where(tri[None, None, :, :, None, None],
+                     jnp.clip(diff, -60.0, 0.0), -jnp.inf)
+    scores = jnp.einsum("bcqhd,bcqkhd,bckhd->bcqkh", rc, jnp.exp(ldec), kc)
+    y_intra = jnp.einsum("bcqkh,bckhd->bcqhd", scores, vc)
+    # current-token bonus (i == q uses u instead of the state)
+    y_bonus = jnp.einsum("bcqhd,bcqhd->bcqh", rc, u[None, None, None] * kc
+                         )[..., None] * vc
+    # inter-chunk: y_q += r_q ⊙ exp(cw_{q-1}) · S_prev (same exclusive rule)
+    dec_in = jnp.exp(jnp.clip(cw_ex, -60.0, 0.0))
+    # chunk summary: S_c = Σ_i exp(cw_Q - cw_i) k_i ⊗ v_i
+    dec_out = jnp.exp(jnp.clip(cw[:, :, -1:] - cw, -60.0, 0.0))
+    s_c = jnp.einsum("bcqhd,bcqhe->bchde", kc * dec_out, vc)
+    a_tot = jnp.exp(jnp.clip(cw[:, :, -1], -60.0, 0.0))     # (b,nc,h,c)
+
+    def body(s, inp):
+        sc, at = inp
+        return at[..., None] * s + sc, s
+
+    s0 = jnp.zeros((b, h, c, c), jnp.float32) if init_state is None \
+        else init_state
+    s_fin, s_prev = jax.lax.scan(
+        body, s0, (s_c.transpose(1, 0, 2, 3, 4),
+                   a_tot.transpose(1, 0, 2, 3)))
+    s_prev = s_prev.transpose(1, 0, 2, 3, 4)                # (b,nc,h,c,c)
+    y_inter = jnp.einsum("bcqhd,bchde->bcqhe", rc * dec_in, s_prev)
+    y = (y_intra + y_bonus + y_inter).reshape(b, nc * chunk, h, c)[:, :t]
+    return y, s_fin
+
+
+def rwkv_tmix(params: dict, x: jax.Array, cfg: ArchConfig,
+              state: Optional[dict] = None):
+    """RWKV6 time-mix. state (decode): {"x_prev": (B,1,D), "wkv": (B,H,C,C)}."""
+    b, t, d = x.shape
+    n_heads, hd = rwkv_dims(cfg)
+    h = rmsnorm(x, params["norm"])
+    if state is None:
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :t]
+    else:
+        h_prev = state["x_prev"]
+    xr, xk, xv, xg, xw = _rwkv_mix(params, h, h_prev)
+    r = (xr @ params["wr"].astype(h.dtype)).reshape(b, t, n_heads, hd)
+    k = (xk @ params["wk"].astype(h.dtype)).reshape(b, t, n_heads, hd)
+    v = (xv @ params["wv"].astype(h.dtype)).reshape(b, t, n_heads, hd)
+    g = jax.nn.silu(xg @ params["wg"].astype(h.dtype))
+    wl = params["w0"] + jax.nn.tanh(
+        xw @ params["wlora_a"].astype(h.dtype)).astype(jnp.float32) \
+        @ params["wlora_b"].astype(jnp.float32)
+    w_log = -jnp.exp(wl.astype(jnp.float32))                # (B,T,D) ≤ 0
+    w_log = w_log.reshape(b, t, n_heads, hd)
+    u = params["u"].reshape(n_heads, hd)
+
+    if state is None:
+        if cfg.rwkv_mode == "chunked":
+            y, _ = _rwkv_chunked(r, k, v, w_log, u, cfg.ssm_chunk)
+        else:
+            y, _ = _rwkv_scan(r, k, v, w_log, u)
+        new_state = None
+    else:
+        y, s = _rwkv_scan(r, k, v, w_log, u, init_state=state["wkv"])
+        new_state = {"x_prev": h, "wkv": s}
+
+    y = y.reshape(b, t, d).astype(x.dtype)
+    y = rmsnorm(y.reshape(b, t, n_heads, hd),
+                params["ln_w"].reshape(n_heads, hd)).reshape(b, t, d)
+    out = (y * g) @ params["wo"].astype(x.dtype)
+    return shard(out, BATCH_AXES, None, None), new_state
+
+
+def init_rwkv_cmix(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    return {
+        "norm": jnp.ones((d,), jnp.float32),
+        "mu": jax.random.uniform(ks[0], (2, d), jnp.float32),
+        "wk": init_dense(ks[1], d, cfg.d_ff, dt),
+        "wv": init_dense(ks[2], cfg.d_ff, d, dt),
+        "wr": init_dense(jax.random.fold_in(key, 7), d, d, dt),
+    }
+
+
+def rwkv_cmix(params: dict, x: jax.Array, cfg: ArchConfig,
+              state: Optional[dict] = None):
+    b, t, d = x.shape
+    h = rmsnorm(x, params["norm"])
+    if state is None:
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :t]
+        new_state = None
+    else:
+        h_prev = state["x_prev"]
+        new_state = {"x_prev": h}
+    delta = h_prev - h
+    mu = params["mu"].astype(h.dtype)
+    xk = h + delta * mu[0]
+    xr = h + delta * mu[1]
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(h.dtype)))
+    kk = shard(kk, BATCH_AXES, None, "model")
+    vv = kk @ params["wv"].astype(h.dtype)
+    out = jax.nn.sigmoid(xr @ params["wr"].astype(h.dtype)) * vv
+    return shard(out, BATCH_AXES, None, None), new_state
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int) -> dict:
+    n_heads, hd = rwkv_dims(cfg)
+    return {
+        "tmix": {"x_prev": jnp.zeros((batch, 1, cfg.d_model), cdtype(cfg)),
+                 "wkv": jnp.zeros((batch, n_heads, hd, hd), jnp.float32)},
+        "cmix": {"x_prev": jnp.zeros((batch, 1, cfg.d_model), cdtype(cfg))},
+    }

@@ -1,0 +1,227 @@
+"""Unified decoder-only LM: dense / MoE / sliding-window mixes / VLM backbone.
+
+Layer stacking:
+  * homogeneous archs — params stacked (L, ...), one `lax.scan`.
+  * gemma3-style local:global mixes — params stacked (G, group, ...) where
+    each scanned group holds `global_every-1` local layers + 1 global layer,
+    so local layers get small (window) KV caches and global layers full ones
+    (no O(L·S) waste, compile stays O(group)).
+
+Decode caches are ring buffers for windowed layers (slot = pos mod window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import (attention_block, cdtype, embed_tokens,
+                                 init_attention, init_embeddings, init_mlp,
+                                 init_moe, lm_logits, mlp_block, moe_block,
+                                 shard, softmax_xent)
+
+
+def _remat(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _grouped(cfg: ArchConfig) -> bool:
+    return cfg.global_every > 1 and cfg.window > 0
+
+
+def init_lm(key, cfg: ArchConfig) -> dict:
+    ke, kl = jax.random.split(key)
+
+    def init_layer(k):
+        ka, kf = jax.random.split(k)
+        p = {"attn": init_attention(ka, cfg)}
+        p["ffn"] = init_moe(kf, cfg) if cfg.family == "moe" \
+            else init_mlp(kf, cfg)
+        return p
+
+    if _grouped(cfg):
+        g = cfg.n_layers // cfg.global_every
+        keys = jax.random.split(kl, g * cfg.global_every).reshape(
+            g, cfg.global_every, 2)
+        layers = jax.vmap(jax.vmap(init_layer))(keys)
+    else:
+        layers = jax.vmap(init_layer)(jax.random.split(kl, cfg.n_layers))
+    return {"embed": init_embeddings(ke, cfg), "layers": layers}
+
+
+def _layer(p, x, cfg: ArchConfig, is_global: bool, cache=None, pos=None,
+           use_windowed_kernel: bool = False):
+    a, new_cache = attention_block(p["attn"], x, cfg, is_global=is_global,
+                                   cache=cache, pos=pos,
+                                   use_windowed_kernel=use_windowed_kernel)
+    x = x + a
+    f = moe_block(p["ffn"], x, cfg) if cfg.family == "moe" \
+        else mlp_block(p["ffn"], x, cfg)
+    return x + f, new_cache
+
+
+def forward(params: dict, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            use_windowed_kernel: bool = False) -> jax.Array:
+    """Full-sequence forward (training / prefill-hidden). Returns (B, T, D)."""
+    use_windowed_kernel = use_windowed_kernel or cfg.windowed_kernel
+    x = embeds if embeds is not None else embed_tokens(params["embed"],
+                                                       tokens, cfg)
+    x = x.astype(cdtype(cfg))
+
+    if _grouped(cfg):
+        def group_fn(x, gp):
+            for i in range(cfg.global_every):
+                sub = jax.tree.map(lambda a: a[i], gp)
+                is_global = i == cfg.global_every - 1
+                x, _ = _layer(sub, x, cfg, is_global,
+                              use_windowed_kernel=use_windowed_kernel)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(group_fn, cfg), x, params["layers"])
+    else:
+        def layer_fn(x, lp):
+            window_only = cfg.window > 0 and cfg.global_every == 0
+            x, _ = _layer(lp, x, cfg, is_global=not window_only,
+                          use_windowed_kernel=use_windowed_kernel)
+            return x, None
+
+        x, _ = jax.lax.scan(_remat(layer_fn, cfg), x, params["layers"])
+    return x
+
+
+def lm_loss(params: dict, batch: dict, cfg: ArchConfig,
+            use_windowed_kernel: bool = False) -> jax.Array:
+    x = forward(params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                use_windowed_kernel=use_windowed_kernel
+                or cfg.windowed_kernel)
+    logits = lm_logits(params["embed"], x, cfg)
+    return softmax_xent(logits, batch["targets"], batch["mask"])
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cache_sizes(cfg: ArchConfig, seq_len: int) -> tuple[int, int]:
+    """(local_len, global_len) KV capacities for one layer."""
+    local = min(cfg.window, seq_len) if cfg.window > 0 else seq_len
+    return local, seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    hd, kv = cfg.head_dim, cfg.n_kv
+    dt = cdtype(cfg)
+    local_len, global_len = _cache_sizes(cfg, seq_len)
+    if _grouped(cfg):
+        g, per = cfg.n_layers // cfg.global_every, cfg.global_every
+        return {
+            "local_k": jnp.zeros((g, per - 1, batch, local_len, kv, hd), dt),
+            "local_v": jnp.zeros((g, per - 1, batch, local_len, kv, hd), dt),
+            "global_k": jnp.zeros((g, batch, global_len, kv, hd), dt),
+            "global_v": jnp.zeros((g, batch, global_len, kv, hd), dt),
+        }
+    length = local_len if (cfg.window > 0 and cfg.global_every == 0) \
+        else global_len
+    return {"k": jnp.zeros((cfg.n_layers, batch, length, kv, hd), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, length, kv, hd), dt)}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                pos: jax.Array, cfg: ArchConfig,
+                embeds: Optional[jax.Array] = None):
+    """One-token decode. tokens: (B, 1); pos: scalar int32 (uniform batch).
+    Returns (logits (B, 1, V), new_cache)."""
+    x = embeds if embeds is not None else embed_tokens(params["embed"],
+                                                       tokens, cfg)
+    x = x.astype(cdtype(cfg))
+
+    if _grouped(cfg):
+        def group_fn(x, xs):
+            gp, lk, lv, gk, gv = xs
+            nlk, nlv = [], []
+            for i in range(cfg.global_every - 1):
+                sub = jax.tree.map(lambda a: a[i], gp)
+                a, nc = _decode_attn(sub["attn"], x, lk[i], lv[i], cfg,
+                                     is_global=False, pos=pos)
+                x = x + a
+                x = x + (moe_block(sub["ffn"], x, cfg) if cfg.family == "moe"
+                         else mlp_block(sub["ffn"], x, cfg))
+                nlk.append(nc["k"])
+                nlv.append(nc["v"])
+            sub = jax.tree.map(lambda a: a[cfg.global_every - 1], gp)
+            a, nc = _decode_attn(sub["attn"], x, gk, gv, cfg,
+                                 is_global=True, pos=pos)
+            x = x + a
+            x = x + (moe_block(sub["ffn"], x, cfg) if cfg.family == "moe"
+                     else mlp_block(sub["ffn"], x, cfg))
+            return x, (jnp.stack(nlk), jnp.stack(nlv), nc["k"], nc["v"])
+
+        x, (nlk, nlv, ngk, ngv) = jax.lax.scan(
+            group_fn, x, (params["layers"], cache["local_k"],
+                          cache["local_v"], cache["global_k"],
+                          cache["global_v"]))
+        new_cache = {"local_k": nlk, "local_v": nlv,
+                     "global_k": ngk, "global_v": ngv}
+    else:
+        window_only = cfg.window > 0 and cfg.global_every == 0
+
+        def layer_fn(x, xs):
+            lp, kc, vc = xs
+            a, nc = _decode_attn(lp["attn"], x, kc, vc, cfg,
+                                 is_global=not window_only, pos=pos)
+            x = x + a
+            x = x + (moe_block(lp["ffn"], x, cfg) if cfg.family == "moe"
+                     else mlp_block(lp["ffn"], x, cfg))
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(layer_fn, x,
+                                   (params["layers"], cache["k"],
+                                    cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+
+    logits = lm_logits(params["embed"], x, cfg)
+    return logits, new_cache
+
+
+def _decode_attn(p, x, k_cache, v_cache, cfg: ArchConfig, is_global: bool,
+                 pos):
+    """Single-token attention against a (ring-buffered if windowed) cache."""
+    from repro.models.layers import apply_rope, flash_attention
+    b = x.shape[0]
+    hd, kv = cfg.head_dim, cfg.n_kv
+    from repro.models.layers import rmsnorm
+    h = rmsnorm(x, p["norm"])
+    q = (h @ p["wq"].astype(h.dtype)).reshape(b, 1, cfg.n_heads, hd)
+    k = (h @ p["wk"].astype(h.dtype)).reshape(b, 1, kv, hd)
+    v = (h @ p["wv"].astype(h.dtype)).reshape(b, 1, kv, hd)
+    posn = jnp.asarray(pos, jnp.int32)[None, None]
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k = apply_rope(k, posn, cfg.rope_theta)
+    cap = k_cache.shape[1]
+    slot = jnp.asarray(pos, jnp.int32) % cap
+    kc = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    kv_len = jnp.minimum(jnp.asarray(pos, jnp.int32) + 1, cap)
+    o = flash_attention(q, kc, vc, causal=False, kv_len=kv_len, block=2048)
+    o = o.reshape(b, 1, cfg.n_heads * hd)
+    out = o @ p["wo"].astype(o.dtype)
+    return shard(out, ("pod", "data"), None, None), {"k": kc, "v": vc}
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None):
+    """Prefill forward: returns last-position logits (cache write is modeled
+    by the decode path; the prefill benchmark measures the forward)."""
+    x = forward(params, cfg, tokens=tokens, embeds=embeds)
+    logits = lm_logits(params["embed"], x[:, -1:], cfg)
+    return logits

@@ -1,0 +1,47 @@
+"""LLaVA-NeXT-style VLM: stub anyres patch frontend + Mistral LM backbone.
+
+Per the assignment, `[vlm]` specifies the transformer BACKBONE only; the
+vision tower is a STUB — `input_specs()` provides precomputed patch
+embeddings (B, P, d_model), already projected.  The model splices them over
+the first P token positions (prefix layout) and runs the standard decoder.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import cdtype, embed_tokens, lm_logits, shard, \
+    softmax_xent
+from repro.models import transformer as tfm
+
+
+def init_vlm(key, cfg: ArchConfig) -> dict:
+    return tfm.init_lm(key, cfg)
+
+
+def splice_embeds(params: dict, tokens: jax.Array, patch_embeds: jax.Array,
+                  cfg: ArchConfig) -> jax.Array:
+    """Prefix splice: positions [0, P) take patch embeddings."""
+    x = embed_tokens(params["embed"], tokens, cfg)
+    p = patch_embeds.shape[1]
+    pe = patch_embeds.astype(x.dtype)
+    x = jnp.concatenate([pe, x[:, p:]], axis=1)
+    return shard(x, ("pod", "data"), None, None)
+
+
+def vlm_loss(params: dict, batch: dict, cfg: ArchConfig) -> jax.Array:
+    embeds = splice_embeds(params, batch["tokens"], batch["patch_embeds"],
+                           cfg)
+    x = tfm.forward(params, cfg, embeds=embeds)
+    logits = lm_logits(params["embed"], x, cfg)
+    # image-prefix positions are masked out of the LM loss
+    p = batch["patch_embeds"].shape[1]
+    mask = batch["mask"].at[:, :p].set(0.0)
+    return softmax_xent(logits, batch["targets"], mask)
+
+
+def vlm_prefill(params: dict, cfg: ArchConfig, tokens: jax.Array,
+                patch_embeds: jax.Array):
+    embeds = splice_embeds(params, tokens, patch_embeds, cfg)
+    return tfm.prefill(params, cfg, embeds=embeds)

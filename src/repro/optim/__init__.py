@@ -1,0 +1,7 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule)
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ef_compress_grads)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "compress_int8", "decompress_int8", "ef_compress_grads"]

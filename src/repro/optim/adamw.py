@@ -1,0 +1,75 @@
+"""AdamW with configurable state dtype (ZeRO-style sharding is applied by
+the launcher's partition rules — optimizer states inherit the weights'
+sharding plus full sharding over the data axis for fsdp archs)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"    # bfloat16 halves optimizer memory
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(grads: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def adamw_update(params: Any, grads: Any, state: dict,
+                 cfg: AdamWConfig) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * (update + decay)
+        return newp.astype(p.dtype), mf.astype(sdt), vf.astype(sdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newm = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    newv = jax.tree.map(lambda t: t[2], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,4 @@
+from repro.serving.engine import ServeEngine
+from repro.serving.rag import RetrievalAugmentedServer
+
+__all__ = ["ServeEngine", "RetrievalAugmentedServer"]

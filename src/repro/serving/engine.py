@@ -1,0 +1,79 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+This is the substrate the decode_* dry-run shapes lower: `decode_fn` is the
+exact jitted `serve_step` (one new token against a seq_len cache).  The
+engine adds batched request handling on top: greedy/temperature sampling,
+per-request stop handling, and cache reuse across steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.api import ModelBundle
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+    steps: int = 0
+
+
+class ServeEngine:
+    def __init__(self, bundle: ModelBundle, params, max_seq: int,
+                 batch_size: int, temperature: float = 0.0):
+        self.bundle = bundle
+        self.params = params
+        self.max_seq = max_seq
+        self.batch_size = batch_size
+        self.temperature = temperature
+        self.stats = ServeStats()
+        self._decode = jax.jit(
+            lambda p, c, b, pos: bundle.decode(p, c, b, pos))
+        self._prefill = jax.jit(lambda p, b: bundle.prefill(p, b))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        logits = logits[:, -1, :]
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(key, logits / self.temperature)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 seed: int = 0, stop_token: Optional[int] = None
+                 ) -> np.ndarray:
+        """prompts: (B, P) int32 token ids (uniform length — the engine pads
+        batches upstream).  Returns (B, max_new_tokens)."""
+        b, plen = prompts.shape
+        assert b == self.batch_size
+        logits = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        self.stats.prefill_tokens += b * plen
+        cache = self.bundle.init_cache(b, self.max_seq)
+        # replay the prompt through the decode path to fill the cache
+        key = jax.random.PRNGKey(seed)
+        for t in range(plen):
+            _, cache = self._decode(self.params, cache,
+                                    {"tokens": jnp.asarray(prompts[:, t:t+1])},
+                                    jnp.int32(t))
+        tok = self._sample(logits, key)
+        out = [np.asarray(tok)]
+        done = np.zeros(b, bool)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(
+                self.params, cache, {"tokens": tok[:, None]},
+                jnp.int32(plen + i))
+            tok = self._sample(logits, sub)
+            self.stats.decoded_tokens += int(b)
+            self.stats.steps += 1
+            if stop_token is not None:
+                done |= np.asarray(tok) == stop_token
+                if done.all():
+                    out.append(np.asarray(tok))
+                    break
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)

@@ -1,0 +1,67 @@
+"""Retrieval-augmented serving: the paper's FVS as a first-class feature.
+
+The server pairs an LM (any assigned architecture) with the distributed
+filtered vector store: at request time it embeds the prompt (mean-pooled
+hidden state projected into store space), runs FILTERED top-k retrieval
+(the request's structured predicate becomes the bitmap — e.g. tenant id,
+document freshness), and splices retrieved rows into the context.  This is
+the e-commerce query of the paper's introduction, served end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import ShardedFVS, distributed_search_fn
+from repro.core.types import SearchParams
+from repro.models.api import ModelBundle
+
+
+@dataclasses.dataclass
+class RetrievalResult:
+    ids: np.ndarray        # (B, k) retrieved row ids
+    dists: np.ndarray      # (B, k)
+    tokens: np.ndarray     # (B, P + k*chunk) augmented prompts
+
+
+class RetrievalAugmentedServer:
+    def __init__(self, bundle: ModelBundle, params, sharded: ShardedFVS,
+                 search_params: SearchParams,
+                 doc_tokens: np.ndarray, chunk_len: int = 32,
+                 embed_fn: Optional[Callable] = None):
+        """doc_tokens: (N, chunk_len) token rows aligned with store rows."""
+        self.bundle = bundle
+        self.params = params
+        self.search = distributed_search_fn(sharded, search_params)
+        self.k = search_params.k
+        self.doc_tokens = doc_tokens
+        self.chunk_len = chunk_len
+        dim = sharded.store.dim
+        if embed_fn is None:
+            d_model = bundle.cfg.d_model
+            key = jax.random.PRNGKey(7)
+            proj = jax.random.normal(key, (d_model, dim),
+                                     jnp.float32) / np.sqrt(d_model)
+
+            def embed_fn(p, tokens):
+                emb = p["embed"]["tok"].astype(jnp.float32)[tokens]
+                return jnp.mean(emb, axis=1) @ proj
+
+        self._embed = jax.jit(embed_fn)
+
+    def retrieve(self, prompts: np.ndarray,
+                 bitmaps: jax.Array) -> RetrievalResult:
+        """prompts (B, P) int32; bitmaps (B, words) — the evaluated filter."""
+        q = self._embed(self.params, jnp.asarray(prompts))
+        d, ids = self.search(q, bitmaps)
+        idn = np.asarray(ids)
+        chunks = self.doc_tokens[np.maximum(idn, 0)]       # (B, k, chunk)
+        chunks = np.where((idn >= 0)[..., None], chunks, 0)
+        aug = np.concatenate(
+            [chunks.reshape(idn.shape[0], -1), prompts], axis=1)
+        return RetrievalResult(ids=idn, dists=np.asarray(d),
+                               tokens=aug.astype(np.int32))

@@ -1,0 +1,148 @@
+"""Training loop substrate: jitted step factory + fault-tolerant driver.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * data is a pure function of (config, step) — restart replays exactly;
+  * checkpoints are atomic + async (CheckpointManager), cadence-based;
+  * on restart the Trainer resumes from the latest step, optionally onto a
+    DIFFERENT mesh (elastic: restore_checkpoint reshards);
+  * a per-step deadline hook flags stragglers: the loop records the stall
+    and (configurably) skips the step — on real fleets this is where you'd
+    trigger re-slicing; here the control flow is implemented and tested
+    with an injectable clock/failure source.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step, \
+    restore_checkpoint
+from repro.models.api import ModelBundle
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    ef_compress_grads
+from repro.optim.compression import init_error_buffers
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1              # gradient accumulation factor
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    step_deadline_s: float = 0.0       # 0 = no deadline (straggler hook off)
+    grad_compression: bool = False     # int8 error-feedback DP compression
+    log_every: int = 10
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,
+                    train_cfg: TrainConfig,
+                    donate: bool = True) -> Callable:
+    """Returns jitted fn: (params, opt_state, batch) -> (params, opt_state,
+    metrics).  With microbatches > 1, `batch` leaves carry a leading
+    (microbatches, ...) axis and grads are accumulated with a scan."""
+
+    def loss_fn(p, b):
+        return bundle.loss(p, b)
+
+    def step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            def acc(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), batch)
+            scale = 1.0 / train_cfg.microbatches
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            loss = loss * scale
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if train_cfg.grad_compression:
+            grads, err = ef_compress_grads(grads, opt_state["ef_error"])
+        new_params, new_inner, metrics = adamw_update(
+            params, grads, opt_state["adamw"], opt_cfg)
+        new_state = {"adamw": new_inner}
+        if train_cfg.grad_compression:
+            new_state["ef_error"] = err
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def init_opt_state(bundle: ModelBundle, params: Any, opt_cfg: AdamWConfig,
+                   train_cfg: TrainConfig) -> dict:
+    state = {"adamw": adamw_init(params, opt_cfg)}
+    if train_cfg.grad_compression:
+        state["ef_error"] = init_error_buffers(params)
+    return state
+
+
+class Trainer:
+    """Fault-tolerant driver around the jitted step."""
+
+    def __init__(self, bundle: ModelBundle, opt_cfg: AdamWConfig,
+                 train_cfg: TrainConfig,
+                 batch_fn: Callable[[int], Any],
+                 clock: Callable[[], float] = time.monotonic):
+        self.bundle = bundle
+        self.opt_cfg = opt_cfg
+        self.cfg = train_cfg
+        self.batch_fn = batch_fn
+        self.clock = clock
+        self.step_fn = make_train_step(bundle, opt_cfg, train_cfg)
+        self.ckpt = (CheckpointManager(train_cfg.checkpoint_dir)
+                     if train_cfg.checkpoint_dir else None)
+        self.stragglers: list[int] = []
+        self.history: list[dict] = []
+
+    def init_or_restore(self, key, shardings: Optional[Any] = None):
+        params = self.bundle.init(key)
+        opt_state = init_opt_state(self.bundle, params, self.opt_cfg,
+                                   self.cfg)
+        start = 0
+        if self.ckpt:
+            last = latest_step(self.ckpt.directory)
+            if last is not None:
+                tree = {"params": params, "opt": opt_state}
+                tree, extra = restore_checkpoint(
+                    self.ckpt.directory, last, tree, shardings)
+                params, opt_state = tree["params"], tree["opt"]
+                start = last
+        return params, opt_state, start
+
+    def run(self, params, opt_state, start_step: int = 0,
+            fail_at: Optional[int] = None):
+        """fail_at injects a crash (tests exercise restart-and-replay)."""
+        step = start_step
+        while step < self.cfg.steps:
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = self.clock()
+            batch = self.batch_fn(step)
+            params, opt_state, metrics = self.step_fn(params, opt_state,
+                                                      batch)
+            dt = self.clock() - t0
+            if self.cfg.step_deadline_s and dt > self.cfg.step_deadline_s:
+                self.stragglers.append(step)
+            step += 1
+            if step % self.cfg.log_every == 0 or step == self.cfg.steps:
+                self.history.append({"step": step,
+                                     "loss": float(metrics["loss"]),
+                                     "grad_norm": float(
+                                         metrics["grad_norm"]),
+                                     "sec": dt})
+            if self.ckpt and (step % self.cfg.checkpoint_every == 0
+                              or step == self.cfg.steps):
+                self.ckpt.save_async(step, {"params": params,
+                                            "opt": opt_state})
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state

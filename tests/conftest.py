@@ -1,0 +1,32 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import VectorStore, build_graph
+from repro.data import DatasetSpec, make_dataset
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    spec = DatasetSpec("t-small", 4000, 48, "l2", clusters=16)
+    store, queries = make_dataset(spec, num_queries=8, seed=0)
+    return store, jnp.asarray(queries)
+
+
+@pytest.fixture(scope="session")
+def small_graph(small_dataset):
+    store, _ = small_dataset
+    return build_graph(store, m=12, ef_construction=48, seed=0)
+
+
+@pytest.fixture(scope="session")
+def full_bitmaps(small_dataset):
+    store, queries = small_dataset
+    words = (store.n + 31) // 32
+    return jnp.ones((queries.shape[0], words), jnp.uint32) * jnp.uint32(
+        0xFFFFFFFF)

@@ -1,0 +1,82 @@
+"""Property tests: bitmap pack/probe and the workload generator (paper §4)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CORRELATIONS, VectorStore, WorkloadSpec, pack_bitmap,
+                        pack_bool_bitmap, probe_bitmap, unpack_bitmap)
+from repro.core.workload import (empirical_correlation,
+                                 generate_passing_rows, generate_bitmaps)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 10_000))
+def test_bitmap_roundtrip(n, seed):
+    rng = np.random.RandomState(seed)
+    bits = rng.rand(n) < rng.rand()
+    bm = pack_bool_bitmap(bits)
+    assert bm.shape == ((n + 31) // 32,)
+    back = unpack_bitmap(bm, n)
+    assert (back == bits).all()
+    ids = jnp.arange(n)
+    probed = probe_bitmap(bm, ids)
+    assert (np.asarray(probed) == bits).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(32, 500), k=st.integers(1, 50), seed=st.integers(0, 99))
+def test_probe_negative_ids_false(n, k, seed):
+    rng = np.random.RandomState(seed)
+    rows = rng.choice(n, size=min(k, n), replace=False)
+    bm = pack_bitmap(rows, n)
+    assert not bool(probe_bitmap(bm, jnp.array([-1]))[0])
+    assert bool(np.asarray(probe_bitmap(bm, jnp.asarray(rows))).all())
+
+
+@pytest.mark.parametrize("sel", [0.01, 0.1, 0.5, 0.9])
+def test_selectivity_exact(small_dataset, sel):
+    store, queries = small_dataset
+    rows = generate_passing_rows(store, queries[:3],
+                                 WorkloadSpec(sel, "none"), seed=1)
+    want = max(1, round(sel * store.n))
+    for r in rows:
+        assert len(np.unique(r)) == len(r) == want
+
+
+def test_correlation_ordering(small_dataset):
+    """high_pos > med_pos > low_pos > none > negative (paper Fig. 8)."""
+    store, queries = small_dataset
+    means = {}
+    for corr in CORRELATIONS:
+        rows = generate_passing_rows(store, queries,
+                                     WorkloadSpec(0.1, corr), seed=2)
+        vals = [empirical_correlation(store, queries[i], rows[i], k=50)
+                for i in range(queries.shape[0])]
+        means[corr] = float(np.mean(vals))
+    assert means["high_pos"] > means["med_pos"] > means["low_pos"]
+    assert means["low_pos"] > means["none"] > means["negative"]
+    assert means["negative"] < 0.05
+
+
+def test_bitmaps_match_rows(small_dataset):
+    store, queries = small_dataset
+    spec = WorkloadSpec(0.2, "med_pos")
+    rows = generate_passing_rows(store, queries[:2], spec, seed=3)
+    bms = generate_bitmaps(store, queries[:2], spec, seed=3)
+    for i in range(2):
+        bits = unpack_bitmap(np.asarray(bms[i]), store.n)
+        assert set(np.where(bits)[0]) == set(np.asarray(rows[i]).tolist())
+
+
+def test_high_pos_within_pool(small_dataset):
+    """High positive correlation samples only from the closest third."""
+    store, queries = small_dataset
+    from repro.core.workload import full_distances
+    rows = generate_passing_rows(store, queries[:2],
+                                 WorkloadSpec(0.05, "high_pos"), seed=4)
+    d = np.asarray(full_distances(store, queries[:2]))
+    for i, r in enumerate(rows):
+        order = np.argsort(d[i])
+        pool = set(order[: int(np.ceil(store.n / 3))].tolist())
+        assert set(np.asarray(r).tolist()) <= pool

@@ -1,0 +1,103 @@
+"""Cost model (Fig. 1/10 semantics) + serving engine + RAG."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (LIBRARY, SYSTEM, SearchParams, SearchStats,
+                        WorkloadSpec, cycle_breakdown, generate_bitmaps,
+                        modeled_qps, search_batch)
+from repro.configs import smoke_config
+from repro.launch.specs import make_smoke_batch
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def _stats(dc=100, fc=50, hops=10, pai=20, pah=120, tm=30, rr=0):
+    z = lambda v: jnp.asarray(v, jnp.int32)
+    return SearchStats(z(dc), z(fc), z(hops), z(pai), z(pah), z(tm), z(rr))
+
+
+def test_system_tax_dominates():
+    """Paper §6.2.2: page access costs dwarf distance computation in the
+    SYSTEM regime but not in the LIBRARY regime."""
+    s = _stats()
+    sys_b = cycle_breakdown(s, dim=1536, constants=SYSTEM)
+    lib_b = cycle_breakdown(s, dim=1536, constants=LIBRARY)
+    sys_overhead = sys_b["index_page_access"] + sys_b["vector_retrieval"]
+    assert sys_overhead > sys_b["distance_compute"]
+    assert lib_b["total"] < sys_b["total"] / 5        # Fig. 1: up to 10x gap
+    assert lib_b["translation_map"] == 0.0
+
+
+def test_crossover_shift(small_dataset, small_graph):
+    """Fig. 1's point: the acorn-vs-sweeping cost RATIO differs between the
+    SYSTEM and LIBRARY regimes (so crossover points move)."""
+    store, queries = small_dataset
+    ratios = {}
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.1, "none"), seed=0)
+    rowss = {}
+    for strat in ("acorn", "sweeping"):
+        p = SearchParams(k=10, ef_search=96, beam_width=1024,
+                         strategy=strat, max_hops=2048)
+        _, _, stats = search_batch(small_graph, store, queries, bm, p)
+        rowss[strat] = stats
+    for regime, consts in (("system", SYSTEM), ("library", LIBRARY)):
+        a = cycle_breakdown(rowss["acorn"], store.dim, consts)["total"]
+        s = cycle_breakdown(rowss["sweeping"], store.dim, consts)["total"]
+        ratios[regime] = a / s
+    assert abs(ratios["system"] - ratios["library"]) > 0.1
+
+
+def test_modeled_qps_monotonic():
+    s = _stats()
+    q1 = modeled_qps(s, 128, SYSTEM, threads=1, thread_overhead={1: 1.0})
+    q16 = modeled_qps(s, 128, SYSTEM, threads=16)
+    assert q16 > q1                       # throughput scales (sub-linearly)
+    assert q16 < q1 * 16
+
+
+def test_serve_engine_greedy_deterministic():
+    cfg = smoke_config("llama3.2-3b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab, (2, 8)).astype(np.int32)
+    eng = ServeEngine(bundle, params, max_seq=32, batch_size=2)
+    out1 = eng.generate(prompts, 6)
+    out2 = ServeEngine(bundle, params, max_seq=32,
+                       batch_size=2).generate(prompts, 6)
+    assert out1.shape == (2, 6)
+    assert (out1 == out2).all()
+    assert (out1 >= 0).all() and (out1 < cfg.vocab).all()
+
+
+def test_rag_retrieval_respects_filter():
+    from repro.core.distributed import build_sharded_scann
+    from repro.core.types import probe_bitmap
+    from repro.data import DatasetSpec, make_dataset
+    from repro.serving import RetrievalAugmentedServer
+    from repro.launch.mesh import make_mesh
+
+    cfg = smoke_config("llama3.2-3b")
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    spec = DatasetSpec("t-rag", 2000, 32, "l2", clusters=8)
+    store, _ = make_dataset(spec, num_queries=1, seed=0)
+    mesh = make_mesh((1,), ("data",))
+    sharded = build_sharded_scann(store, mesh, "data", num_leaves=32,
+                                  levels=1)
+    sp = SearchParams(k=4, num_leaves_to_search=16)
+    rng = np.random.RandomState(1)
+    docs = rng.randint(0, cfg.vocab, (2000, 8)).astype(np.int32)
+    srv = RetrievalAugmentedServer(bundle, params, sharded, sp, docs,
+                                   chunk_len=8)
+    prompts = rng.randint(0, cfg.vocab, (2, 16)).astype(np.int32)
+    queries = jnp.asarray(rng.randn(2, 32).astype(np.float32))
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=2)
+    res = srv.retrieve(prompts, bm)
+    assert res.tokens.shape == (2, 16 + 4 * 8)
+    for i in range(2):
+        valid = res.ids[i][res.ids[i] >= 0]
+        ok = probe_bitmap(bm[i], jnp.asarray(valid))
+        assert np.asarray(ok).all()

@@ -1,0 +1,144 @@
+"""Strategy behaviour tests: recall, counters, ablations (paper §6)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SearchParams, WorkloadSpec, filtered_knn,
+                        generate_bitmaps, knn, recall_at_k, search_batch,
+                        stats_table_row)
+
+STRATS = ("sweeping", "acorn", "navix", "iterative_scan")
+
+
+def _recall(ids, tid, k=10):
+    return float(np.mean(np.asarray(
+        jax.vmap(lambda f, t: recall_at_k(f, t, k))(ids, tid))))
+
+
+def test_unfiltered_recall(small_dataset, small_graph, full_bitmaps):
+    store, queries = small_dataset
+    _, tid = knn(store, queries, 10)
+    p = SearchParams(k=10, ef_search=96, beam_width=512,
+                     strategy="unfiltered")
+    _, ids, stats = search_batch(small_graph, store, queries, full_bitmaps, p)
+    assert _recall(ids, tid) >= 0.95
+    row = stats_table_row(stats)
+    assert row["filter_checks"] == 0          # unfiltered: no probes
+    assert row["distance_comps"] > 0
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_filtered_recall_mid_selectivity(small_dataset, small_graph,
+                                         strategy):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=1)
+    _, tid = filtered_knn(store, queries, bm, 10)
+    p = SearchParams(k=10, ef_search=128, beam_width=1024, strategy=strategy,
+                     max_hops=2048)
+    _, ids, _ = search_batch(small_graph, store, queries, bm, p)
+    assert _recall(ids, tid) >= 0.9, strategy
+
+
+def test_results_respect_filter(small_dataset, small_graph):
+    """Every returned id must pass the filter — across strategies/sels."""
+    from repro.core import probe_bitmap
+    store, queries = small_dataset
+    for sel in (0.05, 0.5):
+        bm = generate_bitmaps(store, queries, WorkloadSpec(sel, "none"),
+                              seed=2)
+        for strategy in STRATS:
+            p = SearchParams(k=10, ef_search=64, beam_width=512,
+                             strategy=strategy, max_hops=1024)
+            _, ids, _ = search_batch(small_graph, store, queries, bm, p)
+            ok = jax.vmap(probe_bitmap)(bm, jnp.maximum(ids, 0))
+            valid = np.asarray(ids) >= 0
+            assert np.asarray(ok)[valid].all(), (strategy, sel)
+
+
+def test_results_sorted_and_unique(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=3)
+    p = SearchParams(k=10, ef_search=64, beam_width=512, strategy="acorn")
+    d, ids, _ = search_batch(small_graph, store, queries, bm, p)
+    d, ids = np.asarray(d), np.asarray(ids)
+    for i in range(ids.shape[0]):
+        v = ids[i][ids[i] >= 0]
+        assert len(np.unique(v)) == len(v)
+        dv = d[i][np.isfinite(d[i])]
+        assert (np.diff(dv) >= -1e-6).all()
+
+
+def test_paper_trend_filter_first_vs_traversal_first(small_dataset,
+                                                     small_graph):
+    """Paper Table 6 @ low selectivity: filter-first does FEWER distance
+    comps and hops but MORE filter checks than traversal-first."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.05, "none"), seed=4)
+    rows = {}
+    for strategy in ("acorn", "sweeping"):
+        p = SearchParams(k=10, ef_search=96, beam_width=1024,
+                         strategy=strategy, max_hops=2048)
+        _, _, stats = search_batch(small_graph, store, queries, bm, p)
+        rows[strategy] = stats_table_row(stats)
+    assert rows["acorn"]["distance_comps"] < rows["sweeping"][
+        "distance_comps"]
+    assert rows["acorn"]["hops"] < rows["sweeping"]["hops"]
+    assert rows["acorn"]["filter_checks"] > rows["sweeping"]["filter_checks"]
+
+
+def test_translation_map_ablation(small_dataset, small_graph):
+    """Fig. 13: disabling the TM converts map lookups into index-page
+    accesses (the dominant cost class)."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.1, "none"), seed=5)
+    rows = {}
+    for tm in (True, False):
+        p = SearchParams(k=10, ef_search=64, beam_width=512,
+                         strategy="acorn", translation_map=tm)
+        _, _, stats = search_batch(small_graph, store, queries, bm, p)
+        rows[tm] = stats_table_row(stats)
+    assert rows[True]["tmap_lookups"] > 0
+    assert rows[False]["tmap_lookups"] == 0
+    assert rows[False]["page_accesses_index"] > rows[True][
+        "page_accesses_index"] * 2
+
+
+def test_iterative_scan_subsumes_post_filter(small_dataset, small_graph):
+    """Paper §2.1: with a large enough first batch, iterative scan IS
+    post-filtering: one round, and results equal filtering the unfiltered
+    top-batch."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.5, "none"), seed=6)
+    _, tid = filtered_knn(store, queries, bm, 10)
+    p = SearchParams(k=10, ef_search=256, beam_width=512,
+                     strategy="iterative_scan", batch_tuples=256,
+                     max_rounds=4)
+    _, ids, stats = search_batch(small_graph, store, queries, bm, p)
+    assert _recall(ids, tid) >= 0.9
+
+
+def test_navix_heuristics_run(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=7)
+    _, tid = filtered_knn(store, queries, bm, 10)
+    for h in ("blind", "directed", "onehop", "adaptive"):
+        p = SearchParams(k=10, ef_search=96, beam_width=1024,
+                         strategy="navix", navix_heuristic=h, max_hops=2048)
+        _, ids, _ = search_batch(small_graph, store, queries, bm, p)
+        assert _recall(ids, tid) >= 0.75, h
+
+
+def test_hardened_acorn_reduces_page_accesses(small_dataset, small_graph):
+    """Paper §3.1 opt (ii): skipping 2-hop expansion for passing branches
+    cuts index-page accesses at high selectivity."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.8, "none"), seed=8)
+    rows = {}
+    for skip in (True, False):
+        p = SearchParams(k=10, ef_search=64, beam_width=512,
+                         strategy="acorn", adaptive_skip_2hop=skip)
+        _, _, stats = search_batch(small_graph, store, queries, bm, p)
+        rows[skip] = stats_table_row(stats)
+    assert rows[True]["page_accesses_index"] < rows[False][
+        "page_accesses_index"]

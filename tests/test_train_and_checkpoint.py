@@ -1,0 +1,132 @@
+"""Fault tolerance: checkpoint/restart replay, stragglers, compression."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs import smoke_config
+from repro.launch.specs import make_smoke_batch
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train.loop import TrainConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("llama3.2-3b")
+    bundle = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100)
+
+    def batch_fn(step):
+        return make_smoke_batch(cfg, batch=2, seq=32, kind="train",
+                                seed=step)
+
+    return bundle, opt_cfg, batch_fn
+
+
+def _leaves_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+               for x, y in zip(fa, fb))
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    bundle, opt_cfg, batch_fn = setup
+    params = bundle.init(jax.random.PRNGKey(0))
+    path = save_checkpoint(str(tmp_path), 7, {"params": params},
+                           extra={"note": "x"})
+    assert os.path.isdir(path)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(lambda p: jnp.zeros_like(p), {"params": params})
+    restored, extra = restore_checkpoint(str(tmp_path), 7, like)
+    assert extra == {"note": "x"}
+    assert _leaves_equal(restored, {"params": params})
+
+
+def test_crash_restart_replays_exactly(tmp_path, setup):
+    """Train 10 steps straight vs crash-at-6 + restore + resume: identical
+    final params (deterministic data pipeline + atomic checkpoints)."""
+    bundle, opt_cfg, batch_fn = setup
+
+    tc = TrainConfig(steps=10, checkpoint_every=3,
+                     checkpoint_dir=str(tmp_path / "a"), log_every=100)
+    tr = Trainer(bundle, opt_cfg, tc, batch_fn)
+    p0, o0, _ = tr.init_or_restore(jax.random.PRNGKey(1))
+    p_straight, _ = tr.run(p0, o0, 0)
+
+    tc2 = TrainConfig(steps=10, checkpoint_every=3,
+                      checkpoint_dir=str(tmp_path / "b"), log_every=100)
+    tr2 = Trainer(bundle, opt_cfg, tc2, batch_fn)
+    p0, o0, _ = tr2.init_or_restore(jax.random.PRNGKey(1))
+    with pytest.raises(RuntimeError, match="injected failure"):
+        tr2.run(p0, o0, 0, fail_at=7)
+    tr2.ckpt.wait()
+    # "restart": a fresh trainer restores from the last checkpoint (step 6)
+    tr3 = Trainer(bundle, opt_cfg, tc2, batch_fn)
+    p1, o1, start = tr3.init_or_restore(jax.random.PRNGKey(1))
+    assert start == 6
+    p_resumed, _ = tr3.run(p1, o1, start)
+    assert _leaves_equal(p_straight, p_resumed)
+
+
+def test_straggler_deadline_hook(setup):
+    bundle, opt_cfg, batch_fn = setup
+    times = iter([0.0, 10.0, 10.0, 10.1, 10.1, 10.2] + [10.2 + i * 0.01
+                                                        for i in range(50)])
+    tc = TrainConfig(steps=3, step_deadline_s=1.0, log_every=100)
+    tr = Trainer(bundle, opt_cfg, tc, batch_fn,
+                 clock=lambda: next(times))
+    p0, o0, _ = tr.init_or_restore(jax.random.PRNGKey(0))
+    tr.run(p0, o0, 0)
+    assert 0 in tr.stragglers                 # first step exceeded deadline
+
+
+def test_grad_compression_converges(setup):
+    """int8 EF compression still trains (loss decreases)."""
+    bundle, opt_cfg, batch_fn = setup
+    tc = TrainConfig(steps=6, grad_compression=True, log_every=1)
+    tr = Trainer(bundle, opt_cfg, tc, lambda s: batch_fn(0))
+    p0, o0, _ = tr.init_or_restore(jax.random.PRNGKey(0))
+    tr.run(p0, o0, 0)
+    losses = [h["loss"] for h in tr.history]
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_accumulation_matches_big_batch(setup):
+    """2 microbatches of 2 == 1 batch of 4 (up to fp error)."""
+    bundle, opt_cfg, _ = setup
+    cfg = bundle.cfg
+    big = make_smoke_batch(cfg, batch=4, seq=32, kind="train", seed=0)
+    micro = jax.tree.map(lambda a: a.reshape((2, 2) + a.shape[1:]), big)
+    from repro.train.loop import make_train_step, init_opt_state
+    params = bundle.init(jax.random.PRNGKey(2))
+
+    tc1 = TrainConfig(microbatches=1)
+    s1 = make_train_step(bundle, opt_cfg, tc1, donate=False)
+    o1 = init_opt_state(bundle, params, opt_cfg, tc1)
+    p1, _, m1 = s1(params, o1, big)
+
+    tc2 = TrainConfig(microbatches=2)
+    s2 = make_train_step(bundle, opt_cfg, tc2, donate=False)
+    o2 = init_opt_state(bundle, params, opt_cfg, tc2)
+    p2, _, m2 = s2(params, o2, micro)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    assert _leaves_equal(p1, p2)
+
+
+def test_elastic_restore_resharding(tmp_path, setup):
+    """Restore with explicit shardings (single-device here) exercises the
+    device_put path used for elastic re-mesh."""
+    bundle, opt_cfg, _ = setup
+    params = bundle.init(jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), 1, {"params": params})
+    sh = jax.tree.map(
+        lambda p: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+        {"params": params})
+    restored, _ = restore_checkpoint(str(tmp_path), 1, {"params": params},
+                                     shardings=sh)
+    assert _leaves_equal(restored, {"params": params})
