@@ -16,7 +16,9 @@ def run(ds="openai5m") -> list[dict]:
     rows = []
     for sel in SELS:
         for m in METHODS:
-            rec, srow, wall, _ = run_method(ds, m, sel, "none")
+            # per-query page accounting: Fig. 10 models one standalone query
+            rec, srow, wall, _ = run_method(ds, m, sel, "none",
+                                            page_accounting="per_query")
             z = lambda v: jnp.asarray(round(v), jnp.int32)
             stats = SearchStats(z(srow["distance_comps"]),
                                 z(srow["filter_checks"]), z(srow["hops"]),

@@ -15,7 +15,8 @@ def run(ds="openai5m") -> list[dict]:
     rows = []
     for sel in SELS:
         for tm in (True, False):
-            rec, srow, wall, _ = run_method(ds, "navix", sel, "none", tm=tm)
+            rec, srow, wall, _ = run_method(ds, "navix", sel, "none", tm=tm,
+                                            page_accounting="per_query")
             z = lambda v: jnp.asarray(round(v), jnp.int32)
             stats = SearchStats(z(srow["distance_comps"]),
                                 z(srow["filter_checks"]), z(srow["hops"]),

@@ -25,7 +25,10 @@ def run(datasets=("sift10m", "openai5m"), sels=SELECTIVITIES) -> list[dict]:
         store, _ = get_dataset(ds)
         for sel in sels:
             for method in ALL_METHODS:
-                rec, srow, wall, p = run_method(ds, method, sel, "none")
+                # batch page accounting: QPS under concurrent load, where
+                # the batched ScaNN pipeline amortizes leaf fetches
+                rec, srow, wall, p = run_method(ds, method, sel, "none",
+                                                page_accounting="batch")
                 qps = modeled_qps(_row_to_stats(srow), store.dim, SYSTEM)
                 rows.append({
                     "name": f"fig9/{ds}/{method}/sel={sel}",

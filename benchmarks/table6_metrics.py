@@ -12,7 +12,9 @@ def run(ds="openai5m", sels=SELECTIVITIES) -> list[dict]:
     rows = []
     for sel in sels:
         for m in METHODS:
-            rec, srow, wall, _ = run_method(ds, m, sel, "none")
+            # Table 6 tabulates per-query counters; keep legacy accounting
+            rec, srow, wall, _ = run_method(ds, m, sel, "none",
+                                            page_accounting="per_query")
             rows.append({
                 "name": f"table6/{ds}/{m}/sel={sel}",
                 "us_per_call": wall,

@@ -9,7 +9,8 @@ from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
 from repro.core.bruteforce import filtered_knn, knn
 from repro.core.hnsw import HNSWGraph, build_graph, build_incremental
 from repro.core.graph_search import search_batch
-from repro.core.scann import ScannIndex, build_scann, scann_search_batch
+from repro.core.scann import (ScannIndex, build_scann, scann_search_batch,
+                              scann_search_batch_vmapped)
 from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants,
                                   cycle_breakdown, modeled_qps,
                                   stats_table_row)
@@ -21,6 +22,7 @@ __all__ = [
     "PAPER_SELECTIVITIES", "WorkloadSpec", "generate_bitmaps",
     "generate_grid", "generate_passing_rows", "filtered_knn", "knn",
     "HNSWGraph", "build_graph", "build_incremental", "search_batch",
-    "ScannIndex", "build_scann", "scann_search_batch", "LIBRARY", "SYSTEM",
+    "ScannIndex", "build_scann", "scann_search_batch",
+    "scann_search_batch_vmapped", "LIBRARY", "SYSTEM",
     "CostConstants", "cycle_breakdown", "modeled_qps", "stats_table_row",
 ]

@@ -47,8 +47,18 @@ class ScannIndex:
     branch_leaves: jax.Array     # (B, Lb) int32
     # optional PCA projection from original d to dp
     pca: jax.Array               # (d, dp) f32 (identity-like if disabled)
+    # build-time ||x||² of the dequantized rows (L2 fast path; None on
+    # indexes built before this field existed — recomputed lazily)
+    row_norms_sq: jax.Array | None = None   # (L, C) f32
     metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
     levels: int = dataclasses.field(metadata=dict(static=True), default=2)
+
+    def __getattr__(self, name):
+        # indexes pickled before row_norms_sq existed unpickle without the
+        # attribute; treat them as "not precomputed"
+        if name == "row_norms_sq":
+            return None
+        raise AttributeError(name)
 
     @property
     def num_leaves(self) -> int:
@@ -141,16 +151,28 @@ def build_scann(store: VectorStore, num_leaves: int, levels: int = 2,
     # store the PCA mean by folding it into `mean` of the quantizer space:
     # query projection must also subtract pca_mu — stash it in pca row space
     # by augmenting: qp = (q - pca_mu) @ pca. We keep pca_mu separately:
+    tiles_j = jnp.asarray(tiles)
+    scale_j, mean_j = jnp.asarray(scale), jnp.asarray(mean)
     idx = ScannIndex(
-        leaf_tiles=jnp.asarray(tiles),
+        leaf_tiles=tiles_j,
         leaf_rowids=jnp.asarray(rowids, jnp.int32),
         leaf_centroids=jnp.asarray(cent),
-        scale=jnp.asarray(scale), mean=jnp.asarray(mean),
+        scale=scale_j, mean=mean_j,
         branch_centroids=jnp.asarray(bcent),
         branch_leaves=jnp.asarray(bleaves, jnp.int32),
         pca=jnp.asarray(np.concatenate([pca, pca_mu[None, :] @ pca], 0)),
+        row_norms_sq=_row_norms_sq(tiles_j, scale_j, mean_j),
         metric=store.metric, levels=levels)
     return idx
+
+
+@jax.jit
+def _row_norms_sq(tiles: jax.Array, scale: jax.Array,
+                  mean: jax.Array) -> jax.Array:
+    """||x||² of every dequantized leaf row, (L, C) f32 — same dequant +
+    reduction the kernels apply, so precomputed and inline norms agree."""
+    x = tiles.astype(jnp.float32) * scale + mean
+    return jnp.sum(x * x, axis=-1)
 
 
 def project_query(index: ScannIndex, q: jax.Array) -> jax.Array:
@@ -233,9 +255,169 @@ def _search_single(index: ScannIndex, store: VectorStore, q, bitmap,
 
 
 @partial(jax.jit, static_argnames=("params", "use_pallas"))
+def scann_search_batch_vmapped(index: ScannIndex, store: VectorStore,
+                               queries, bitmaps, params: SearchParams,
+                               use_pallas: bool = False):
+    """Legacy per-query path: vmap of the single-query search.  Every leaf
+    tile is re-fetched and re-scored once per query — kept as the
+    equivalence oracle and microbenchmark baseline for the batched
+    pipeline below."""
+    return jax.vmap(lambda q, b: _search_single(
+        index, store, q, b, params, use_pallas))(queries, bitmaps)
+
+
+def _unique_pad(ids: jax.Array, domain: int, cap: int):
+    """Static-shape set union: distinct values of `ids` (all in
+    [0, domain)), padded to `cap` entries.  Returns (members (cap,) int32,
+    valid (cap,) bool, inv (domain,) int32) with inv[members[i]] == i for
+    valid slots.  Order: ascending id, members first (lax.top_k tie-break
+    is lowest-index-first)."""
+    present = jnp.zeros((domain,), jnp.int32).at[ids].set(1)
+    pv, members = jax.lax.top_k(present, cap)
+    valid = pv > 0
+    inv = jnp.zeros((domain,), jnp.int32).at[members].set(
+        jnp.arange(cap, dtype=jnp.int32))
+    return members.astype(jnp.int32), valid, inv
+
+
+def _select_leaves(index: ScannIndex, qp: jax.Array, nl: int,
+                   use_pallas: bool):
+    """Stage ①/② of Fig. 5, batched: one distance_matrix call per centroid
+    level instead of per-query loops.  Returns (leaves (Q, nl), cent_scored
+    per query)."""
+    L = index.leaf_tiles.shape[0]
+    if index.levels >= 2:
+        B, Lb = index.branch_leaves.shape
+        bd = kops.distance_matrix(qp, index.branch_centroids,
+                                  metric=index.metric,
+                                  use_pallas=use_pallas)          # (Q, B)
+        nb = min(B, max(1, -(-nl * 2 * B // L)))
+        _, bsel = topk_smallest(bd, nb)                           # (Q, nb)
+        cand = index.branch_leaves[bsel].reshape(qp.shape[0], -1)  # (Q, nb*Lb)
+        cl = jnp.maximum(cand, 0)
+        ldf = kops.distance_matrix(qp, index.leaf_centroids,
+                                   metric=index.metric,
+                                   use_pallas=use_pallas)         # (Q, L)
+        ld = jnp.where(cand >= 0, jnp.take_along_axis(ldf, cl, 1), jnp.inf)
+        _, pos = topk_smallest(ld, nl)
+        leaves = jnp.take_along_axis(cl, pos, 1)                  # (Q, nl)
+        return leaves, B + cand.shape[1]
+    ld = kops.distance_matrix(qp, index.leaf_centroids,
+                              metric=index.metric, use_pallas=use_pallas)
+    _, leaves = topk_smallest(ld, nl)
+    return leaves, L
+
+
+@partial(jax.jit, static_argnames=("params", "use_pallas"))
 def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
                        bitmaps, params: SearchParams,
                        use_pallas: bool = False):
-    """Filtered ScaNN search over a query batch."""
-    return jax.vmap(lambda q, b: _search_single(
-        index, store, q, b, params, use_pallas))(queries, bitmaps)
+    """Filtered ScaNN search, query-batched (DESIGN.md §4).
+
+    The whole batch moves through each stage together: ① one
+    distance_matrix call per centroid level, ② the union of opened leaves
+    is scanned ONCE by the batched fused kernel (MXU (Q, d) × (d, C)
+    contraction per tile, per-query bitmap probes), ③ per-query candidate
+    selection over the gathered scores, ④ the union of reordering
+    candidates is gathered full-precision once and each query rescores its
+    own r candidates in one batched contraction.  Counters
+    keep Table 6 semantics; index-page accounting follows
+    params.scann_page_accounting (DESIGN.md §5)."""
+    if index.metric not in ("l2", "ip") or store.metric not in ("l2", "ip"):
+        # distance_matrix (and the leaf-scan kernels) only implement L2/IP;
+        # fail loudly instead of silently ranking cos stores by L2
+        raise NotImplementedError(
+            f"batched ScaNN pipeline supports 'l2'/'ip' metrics, got "
+            f"index={index.metric!r} store={store.metric!r}; use "
+            f"scann_search_batch_vmapped for other metrics")
+    Q = queries.shape[0]
+    L, C, dp = index.leaf_tiles.shape
+    nl = min(params.num_leaves_to_search, L)
+    qp = project_query(index, queries)                            # (Q, dp)
+
+    leaves, cent_scored = _select_leaves(index, qp, nl, use_pallas)
+
+    # ② union of opened leaves — each tile fetched/scored once per batch
+    cap = min(L, Q * nl)
+    uleaves, uvalid, inv = _unique_pad(leaves.reshape(-1), L, cap)
+    tiles = index.leaf_tiles[uleaves]                             # (U, C, dp)
+    rowids_u = jnp.where(uvalid[:, None], index.leaf_rowids[uleaves], -1)
+    if index.metric == "ip":
+        norms_u = jnp.zeros((cap, C), jnp.float32)                # unused
+    elif index.row_norms_sq is not None:
+        norms_u = index.row_norms_sq[uleaves]
+    else:
+        norms_u = _row_norms_sq(tiles, index.scale, index.mean)
+    scores_u = kops.leaf_scan_batched(qp, tiles, rowids_u, index.scale,
+                                      index.mean, bitmaps, norms_u,
+                                      metric=index.metric,
+                                      use_pallas=use_pallas)      # (Q, U, C)
+
+    # gather each query's opened leaves back out of the union scan
+    pos_in_u = inv[leaves]                                        # (Q, nl)
+    scores = jnp.take_along_axis(scores_u, pos_in_u[:, :, None], 1)
+    rowids = rowids_u[pos_in_u]                                   # (Q, nl, C)
+
+    valid = rowids >= 0
+    n_valid = valid.sum(axis=(1, 2))                              # (Q,)
+    n_pass = jnp.isfinite(scores).sum(axis=(1, 2))
+
+    # ③ per-query candidate selection (paper §6.2.2)
+    r = min(params.k * params.reorder_factor, nl * C)
+    flat_s, flat_pos = topk_smallest(scores.reshape(Q, -1), r)
+    cand_rows = jnp.take_along_axis(rowids.reshape(Q, -1), flat_pos, 1)
+    cand_ok = jnp.isfinite(flat_s) & (cand_rows >= 0)
+
+    # ④ full-precision reordering: the union of candidate heap rows is
+    # gathered from the store ONCE (the shared-fetch amortization), then
+    # each query rescores only its own r candidates out of the fetched
+    # block — one batched (Q, r, d) contraction at the legacy FLOP count,
+    # not Q × |union| distances.  Dedup via sort + searchsorted —
+    # O(Q·r log Q·r), independent of store.n.
+    safe_rows = jnp.maximum(cand_rows, 0)
+    rcap = min(store.n, Q * r)
+    flat = safe_rows.reshape(-1)
+    srt = jnp.sort(flat)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), srt[1:] != srt[:-1]])
+    uslot = jnp.cumsum(is_new) - 1              # unique slot of each sorted id
+    urows = jnp.zeros((rcap,), jnp.int32).at[uslot].set(srt)
+    rows_u = store.vectors[urows]                                 # (rcap, d)
+    norms_u2 = store.norms_sq[urows]
+    pos = uslot[jnp.searchsorted(srt, flat)].reshape(Q, r)
+    exact = distance(store.metric, queries[:, None, :],
+                     rows_u[pos], norms_u2[pos])                  # (Q, r)
+    exact = jnp.where(cand_ok, exact, jnp.inf)
+    dk, pos = topk_smallest(exact, params.k)
+    ids = jnp.where(jnp.isinf(dk),
+                    -1, jnp.take_along_axis(cand_rows, pos, 1))
+    n_reorder = cand_ok.sum(axis=1)
+
+    # counters (Table 6 semantics, per query)
+    qppl = _quant_pages_per_leaf(index)
+    if params.scann_page_accounting not in ("batch", "per_query"):
+        raise ValueError(
+            f"scann_page_accounting must be 'batch' or 'per_query', got "
+            f"{params.scann_page_accounting!r}")
+    if params.scann_page_accounting == "per_query":
+        idx_pages = jnp.full((Q,), nl * qppl, jnp.int32)
+    else:
+        # batch accounting: each opened leaf page is charged once per
+        # batch, to the first query that opened it (DESIGN.md §5)
+        opened = jnp.zeros((Q, cap), bool).at[
+            jnp.arange(Q)[:, None], pos_in_u].set(True)
+        first = jnp.argmax(opened, axis=0)                        # (cap,)
+        idx_pages = jnp.sum(
+            uvalid[None, :] & (first[None, :] == jnp.arange(Q)[:, None]),
+            axis=1).astype(jnp.int32) * qppl
+    z = jnp.zeros((Q,), jnp.int32)
+    stats = SearchStats(
+        distance_comps=(n_pass + cent_scored + n_reorder).astype(jnp.int32),
+        filter_checks=n_valid.astype(jnp.int32),
+        hops=z + nl,
+        page_accesses_index=idx_pages,
+        page_accesses_heap=(n_reorder
+                            * _heap_pages_per_vector(store.dim)).astype(
+                                jnp.int32),
+        tmap_lookups=z,
+        reorder_rows=n_reorder.astype(jnp.int32))
+    return dk, ids, stats

@@ -155,6 +155,12 @@ class SearchParams:
     # ScaNN knobs:
     num_leaves_to_search: int = 32
     reorder_factor: int = 4        # rescoring budget = k * reorder_factor
+    # Index-page accounting for the batched ScaNN pipeline (DESIGN.md §5):
+    # "batch" charges each quantized leaf page once per opened leaf per
+    # query *batch* (attributed to the first query that opens it); the
+    # legacy "per_query" mode charges every query for every leaf it opens
+    # (the pre-batching semantics — use for Fig. 10/13 reproduction).
+    scann_page_accounting: str = "batch"
     # Iterative-scan knobs (pgvector max_scan_tuples analogue):
     batch_tuples: int = 128
     max_rounds: int = 16

@@ -1,22 +1,37 @@
-"""Fused filtered quantized leaf-scan Pallas kernel (the paper's Fig. 7 flow).
+"""Fused filtered quantized leaf-scan Pallas kernels (the paper's Fig. 7 flow).
 
-One grid step processes one ScaNN leaf: the int8 tile is DMA'd HBM→VMEM
-(the TPU analogue of the paper's sequential leaf-page walk), rows are
-filter-checked against the packed bitmap (batched probe — the paper's
-§6.2.3(iii) SIMD advantage), dequantized, and scored against the query in a
-single VMEM-resident pass.  Filtered-out and padded rows emit +inf.
+Two variants share the layout:
+
+`leaf_scan_pallas` — one grid step processes one ScaNN leaf for ONE query:
+the int8 tile is DMA'd HBM→VMEM (the TPU analogue of the paper's sequential
+leaf-page walk), rows are filter-checked against the packed bitmap (batched
+probe — the paper's §6.2.3(iii) SIMD advantage), dequantized, and scored
+against the query in a single VMEM-resident pass.  Filtered-out and padded
+rows emit +inf.
+
+`leaf_scan_batched_pallas` — the query-batched pipeline (DESIGN.md §4): one
+grid step DMAs one int8 leaf tile into VMEM ONCE and scores it against the
+whole query block via a single MXU (Q, d) × (d, C) contraction (the
+transpose of the (C, d) × (d, Q) form — same contraction, friendlier
+padding: Q rides the 8-sublane axis, C the 128-lane axis).  Per-query
+packed bitmaps are probed with one word-gather per (query, row) and
+precomputed row norms replace the per-query ||x||² reduction of the single
+query kernel.  This is what amortizes leaf fetch + filter + score across a
+concurrent query batch, instead of re-streaming every tile per query under
+`jax.vmap`.
 
 Fusion rationale (DESIGN.md §3): in an unfused pipeline the f32 dequantized
 tile and the boolean mask each round-trip through HBM; fusing keeps the
 working set at (C × d) int8 + (C × d) f32 in VMEM and streams the bitmap
 words once.  With C=512, d=1024: 0.5 MB int8 + 2 MB f32 — comfortably
 inside the 16 MB/core VMEM envelope of v5e, MXU-aligned (C, d multiples of
-8/128 after padding).
+8/128 after padding).  VMEM budget math for the batched tile is in
+DESIGN.md §4.
 
 The bitmap probe uses a gather of one uint32 word per row.  On TPU this
 lowers to a dynamic-slice loop over the (small) rowid vector — cheap next to
 the (C × d) contraction; correctness is validated in interpret mode against
-ref.leaf_scan_ref.
+ref.leaf_scan_ref / ref.leaf_scan_batched_ref.
 """
 from __future__ import annotations
 
@@ -82,3 +97,72 @@ def leaf_scan_pallas(query: jax.Array, tiles: jax.Array, rowids: jax.Array,
         interpret=interpret,
     )(q, tiles_p, rowids_p, s, m, bm)
     return out[:, :c]
+
+
+def _leaf_scan_batched_kernel(q_ref, tile_ref, rowid_ref, scale_ref,
+                              mean_ref, norms_ref, bitmap_ref, out_ref, *,
+                              metric: str):
+    q = q_ref[...]                                   # (Qp, d) f32
+    t = tile_ref[...][0]                             # (C, d) int8
+    rid = rowid_ref[...][0]                          # (C,) int32
+    scale = scale_ref[...]                           # (1, d)
+    mean = mean_ref[...]                             # (1, d)
+    x = t.astype(jnp.float32) * scale + mean         # dequant (C, d)
+    # MXU: score the whole query block against the resident tile at once
+    ip = jnp.dot(q, x.T, preferred_element_type=jnp.float32)   # (Qp, C)
+    if metric == "ip":
+        d = -ip
+    else:
+        xn = norms_ref[...][0]                       # (C,) precomputed ||x||²
+        qn = jnp.sum(q * q, axis=1, keepdims=True)   # (Qp, 1)
+        d = qn + xn[None, :] - 2.0 * ip
+    # per-query batched bitmap probe: one word gather per (query, row)
+    safe = jnp.maximum(rid, 0)
+    words = bitmap_ref[...]                          # (Qp, W) uint32
+    w = jnp.take(words, safe >> 5, axis=1)           # (Qp, C)
+    bit = (w >> (safe & 31).astype(jnp.uint32)[None, :]) & jnp.uint32(1)
+    ok = (bit == 1) & (rid >= 0)[None, :]
+    out_ref[...] = jnp.where(ok, d, jnp.inf)[None]
+
+
+def leaf_scan_batched_pallas(queries: jax.Array, tiles: jax.Array,
+                             rowids: jax.Array, scale: jax.Array,
+                             mean: jax.Array, bitmaps: jax.Array,
+                             row_norms_sq: jax.Array, metric: str = "l2",
+                             interpret: bool = False) -> jax.Array:
+    """queries (Q, d) f32, tiles (U, C, d) int8, rowids (U, C) int32,
+    scale/mean (d,) f32, bitmaps (Q, W) uint32, row_norms_sq (U, C) f32
+    → scores (Q, U, C) f32 (+inf = filtered/padded).
+
+    Grid is (U,): each step fetches one leaf tile once and scores the whole
+    query batch against it (DESIGN.md §4)."""
+    u, c, d = tiles.shape
+    nq = queries.shape[0]
+    pd = (-d) % 128
+    pc = (-c) % 128          # C is the lane axis of the (Qp, C) output
+    pq = (-nq) % 8
+    tiles_p = jnp.pad(tiles, ((0, 0), (0, pc), (0, pd)))
+    rowids_p = jnp.pad(rowids, ((0, 0), (0, pc)), constant_values=-1)
+    norms_p = jnp.pad(row_norms_sq.astype(jnp.float32), ((0, 0), (0, pc)))
+    q = jnp.pad(queries.astype(jnp.float32), ((0, pq), (0, pd)))
+    s = jnp.pad(scale.astype(jnp.float32), (0, pd))[None, :]
+    m = jnp.pad(mean.astype(jnp.float32), (0, pd))[None, :]
+    bm = jnp.pad(bitmaps, ((0, pq), (0, 0)))         # padded queries: all 0
+    qp, cp, dp, w = nq + pq, c + pc, d + pd, bitmaps.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_leaf_scan_batched_kernel, metric=metric),
+        grid=(u,),
+        in_specs=[
+            pl.BlockSpec((qp, dp), lambda i: (0, 0)),         # query block
+            pl.BlockSpec((1, cp, dp), lambda i: (i, 0, 0)),   # leaf tile
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # rowids
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # scale
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # mean
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # row norms
+            pl.BlockSpec((qp, w), lambda i: (0, 0)),          # bitmaps
+        ],
+        out_specs=pl.BlockSpec((1, qp, cp), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, qp, cp), jnp.float32),
+        interpret=interpret,
+    )(q, tiles_p, rowids_p, s, m, norms_p, bm)
+    return out.transpose(1, 0, 2)[:nq, :, :c]

@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.leaf_scan import leaf_scan_pallas
+from repro.kernels.leaf_scan import leaf_scan_batched_pallas, leaf_scan_pallas
 from repro.kernels.topk import topk_pallas
 
 
@@ -42,6 +42,20 @@ def leaf_scan(query, tiles, rowids, scale, mean, bitmap, metric: str = "l2",
                                 metric, interpret=_interpret())
     return ref.leaf_scan_ref(query, tiles, rowids, scale, mean, bitmap,
                              metric)
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def leaf_scan_batched(queries, tiles, rowids, scale, mean, bitmaps,
+                      row_norms_sq, metric: str = "l2",
+                      use_pallas: bool = True):
+    """Query-batched fused leaf scan: each tile is fetched once and scored
+    against the whole query block (DESIGN.md §4). Returns (Q, U, C)."""
+    if use_pallas:
+        return leaf_scan_batched_pallas(queries, tiles, rowids, scale, mean,
+                                        bitmaps, row_norms_sq, metric,
+                                        interpret=_interpret())
+    return ref.leaf_scan_batched_ref(queries, tiles, rowids, scale, mean,
+                                     bitmaps, row_norms_sq, metric)
 
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))

@@ -46,7 +46,50 @@ def leaf_scan_ref(query: jax.Array, tiles: jax.Array, rowids: jax.Array,
     return jnp.where(ok, d, jnp.inf)
 
 
+def leaf_scan_batched_ref(queries: jax.Array, tiles: jax.Array,
+                          rowids: jax.Array, scale: jax.Array,
+                          mean: jax.Array, bitmaps: jax.Array,
+                          row_norms_sq: jax.Array | None = None,
+                          metric: str = "l2") -> jax.Array:
+    """Query-batched fused filtered leaf scoring, reference semantics.
+
+    Each leaf tile is read once for the whole query batch and scored via a
+    single (Q, d) × (d, C) contraction per leaf (DESIGN.md §4).
+
+    queries (Q, d) f32        — already PCA-projected if applicable
+    tiles   (U, C, d) int8    — SQ8-quantized rows of the leaves to scan
+    rowids  (U, C) int32      — heap row ids, -1 padded
+    scale/mean (d,) f32       — dequantization: x = tile * scale + mean
+    bitmaps (Q, words) uint32 — one packed filter bitmap per query
+    row_norms_sq (U, C) f32   — optional precomputed ||x||² of the
+                                dequantized rows (L2 fast path)
+    returns (Q, U, C) f32 scores with +inf where padded or filtered out.
+    """
+    x = tiles.astype(jnp.float32) * scale + mean          # (U, C, d)
+    ip = jnp.einsum("qd,ucd->quc", queries, x)
+    if metric == "ip":
+        d = -ip
+    else:
+        xn = (row_norms_sq if row_norms_sq is not None
+              else jnp.sum(x * x, axis=-1))               # (U, C)
+        qn = jnp.sum(queries * queries, axis=-1)          # (Q,)
+        d = qn[:, None, None] + xn[None] - 2.0 * ip
+    ok = jax.vmap(lambda bm: probe_bitmap_ref(bm, rowids))(bitmaps)
+    return jnp.where(ok, d, jnp.inf)
+
+
 def topk_partial_ref(values: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
-    """Global k smallest (values, indices) over a 1-D array."""
-    neg, idx = jax.lax.top_k(-values, k)
-    return -neg, idx
+    """Global k smallest (values, indices) over a 1-D array.
+
+    Mirrors topk_pallas's sentinel contract: +inf entries (the universal
+    filtered/padded marker) and k > n overflow slots report index -1."""
+    n = values.shape[0]
+    kk = min(k, n)
+    neg, idx = jax.lax.top_k(-values, kk)
+    vals = -neg
+    idx = jnp.where(vals == jnp.inf, -1, idx)
+    if kk < k:
+        vals = jnp.concatenate(
+            [vals, jnp.full((k - kk,), jnp.inf, vals.dtype)])
+        idx = jnp.concatenate([idx, jnp.full((k - kk,), -1, idx.dtype)])
+    return vals, idx

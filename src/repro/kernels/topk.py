@@ -27,7 +27,11 @@ def _topk_block_kernel(v_ref, outv_ref, outi_ref, *, k: int, block: int):
     for j in range(k):                               # k masked-min extractions
         i = jnp.argmin(cur)
         vals = vals.at[j].set(cur[i])
-        idxs = idxs.at[j].set(idx_base + i)
+        # +inf means filtered/padded everywhere in this codebase: once a
+        # block is exhausted argmin degenerates to 0, so a +inf extraction
+        # must report -1, not a bogus real index (k > n case).  Only +inf:
+        # -inf is a legitimate smallest value and keeps its real index.
+        idxs = idxs.at[j].set(jnp.where(cur[i] == jnp.inf, -1, idx_base + i))
         cur = cur.at[i].set(jnp.inf)
     outv_ref[...] = vals[None, :]
     outi_ref[...] = idxs[None, :]

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI smoke: tier-1 test suite + the leaf-scan microbenchmark.
+# The microbenchmark emits one JSON line (also written to
+# BENCH_leaf_scan.json) so the perf trajectory gets populated run-over-run;
+# it runs even when tier-1 fails, but the tier-1 status is propagated.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+tier1=$?
+
+python benchmarks/bench_leaf_scan.py || exit 1
+
+exit "$tier1"
