@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (SearchParams, WorkloadSpec, build_graph, build_scann,
-                        filtered_knn, generate_bitmaps, recall_at_k,
-                        scann_search_batch, search_batch, stats_table_row)
+                        filtered_knn, generate_bitmaps, make_executor,
+                        recall_at_k, stats_table_row)
 from repro.data import DatasetSpec, make_dataset
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
@@ -110,11 +110,45 @@ def mean_recall(ids, tid, k=10) -> float:
         jax.vmap(lambda f, t: recall_at_k(f, t, k))(ids, tid))))
 
 
+def get_executor(name: str, method: str, use_pallas: bool = False):
+    """Executor-registry dispatch for a benchmark dataset: builds (cached)
+    whichever components `method` needs and returns the executor."""
+    store, _ = get_dataset(name)
+    graph = index = None
+    if method in ("scann", "scann_vmapped", "adaptive"):
+        index = get_scann(name)
+    if method not in ("scann", "scann_vmapped", "bruteforce"):
+        graph = get_graph(name)
+    return make_executor(method, store, graph=graph, index=index,
+                         use_pallas=use_pallas, graph_m=16)
+
+
+def _ladder(method: str, k: int, tm: bool, page_accounting: str):
+    """Param ladder per method (paper §5: climb until target recall)."""
+    if method in ("scann", "scann_vmapped"):
+        return [SearchParams(k=k, num_leaves_to_search=nl, reorder_factor=4,
+                             scann_page_accounting=page_accounting)
+                for nl in LEAVES_LADDER]
+    if method in ("bruteforce",):
+        return [SearchParams(k=k)]
+    ladder = []
+    for ef in EF_LADDER:
+        ef = max(ef, 2 * k)
+        ladder.append(SearchParams(
+            k=k, ef_search=ef, beam_width=max(512, 4 * ef), strategy=method,
+            max_hops=3000, translation_map=tm,
+            scann_page_accounting=page_accounting,
+            batch_tuples=max(64, k * 8), max_rounds=16))
+    return ladder
+
+
 def run_method(name: str, method: str, sel: float, corr: str, k: int = 10,
                target_recall: float = 0.95, tm: bool = True,
                page_accounting: str = "batch"):
-    """Tuning-ladder run (paper §5: highest QPS at 95% recall). Returns
-    (recall, stats_row, wall_us_per_query, params_used).
+    """Tuning-ladder run (paper §5: highest QPS at 95% recall) through the
+    executor registry.  Returns (recall, stats_row, wall_us_per_query,
+    params_used).  `method` is any registered executor ("adaptive"
+    included).
 
     `page_accounting` picks the ScaNN index-page counter semantics:
     "batch" amortizes each opened leaf over the query batch (the batched
@@ -123,34 +157,23 @@ def run_method(name: str, method: str, sel: float, corr: str, k: int = 10,
     store, queries = get_dataset(name)
     bm = get_bitmaps(name, sel, corr)
     _, tid = ground_truth(name, sel, corr, k)
+    executor = get_executor(name, method)
     best = None
-    if method == "scann":
-        for nl in LEAVES_LADDER:
-            p = SearchParams(k=k, num_leaves_to_search=nl, reorder_factor=4,
-                             scann_page_accounting=page_accounting)
-            idx = get_scann(name)
-            t0 = time.perf_counter()
-            _, ids, stats = scann_search_batch(idx, store, queries, bm, p)
-            jax.block_until_ready(ids)
-            wall = (time.perf_counter() - t0) / queries.shape[0] * 1e6
-            rec = mean_recall(ids, tid, k)
-            best = (rec, stats_table_row(stats), wall, p)
-            if rec >= target_recall:
-                break
-        return best
-    graph = get_graph(name)
-    for ef in EF_LADDER:
-        ef = max(ef, 2 * k)
-        p = SearchParams(k=k, ef_search=ef, beam_width=max(512, 4 * ef),
-                         strategy=method, max_hops=3000,
-                         translation_map=tm,
-                         batch_tuples=max(64, k * 8), max_rounds=16)
+    if method == "adaptive":
+        # the planner picks its own strategy; one balanced config
+        ladder = [SearchParams(k=k, ef_search=128, beam_width=512,
+                               max_hops=3000, translation_map=tm,
+                               scann_page_accounting=page_accounting,
+                               batch_tuples=max(64, k * 8), max_rounds=16)]
+    else:
+        ladder = _ladder(method, k, tm, page_accounting)
+    for p in ladder:
         t0 = time.perf_counter()
-        _, ids, stats = search_batch(graph, store, queries, bm, p)
-        jax.block_until_ready(ids)
+        res = executor.search(queries, bm, p)
+        jax.block_until_ready(res.ids)
         wall = (time.perf_counter() - t0) / queries.shape[0] * 1e6
-        rec = mean_recall(ids, tid, k)
-        best = (rec, stats_table_row(stats), wall, p)
+        rec = mean_recall(res.ids, tid, k)
+        best = (rec, stats_table_row(res.stats), wall, p)
         if rec >= target_recall:
             break
     return best

@@ -1,0 +1,139 @@
+"""Planner regret sweep (companion to paper Fig. 1): selectivity ×
+correlation grid, all fixed strategies vs the AdaptivePlanner.
+
+At every grid point each fixed executor runs with the SAME balanced params,
+its measured SearchStats are converted to SYSTEM-modeled cycles
+(per-query accounting — one standalone query, Fig. 10 semantics), and the
+"best fixed" is the cheapest strategy meeting the recall floor (the
+paper's QPS-at-recall framing: a strategy that can't hit recall doesn't
+get to be called fast).  Regret = own cycles / best-fixed cycles; a
+strategy below the recall floor at a point scores regret = inf there.
+
+The paper's Fig. 1 finding is that no fixed strategy stays near-optimal
+across the grid; the planner's job is to track the per-point best within
+1.5x everywhere.  Emits one JSON record to BENCH_planner.json with the
+full grid + the max-regret summary so the trajectory is tracked
+run-over-run.
+
+    PYTHONPATH=src python benchmarks/fig_planner.py [--tiny] [--ds sift10m]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+from benchmarks.common import (emit, get_bitmaps, get_dataset, get_executor,
+                               ground_truth, mean_recall)
+from repro.core import SYSTEM, SearchParams, cycle_breakdown
+
+SELS = (0.01, 0.05, 0.2, 0.5, 0.9)
+CORRS = ("none", "high_pos", "negative")
+FIXED = ("bruteforce", "sweeping", "navix", "iterative_scan", "scann")
+RECALL_FLOOR = 0.9
+REGRET_TARGET = 1.5
+
+
+def _params(k: int = 10) -> SearchParams:
+    return SearchParams(k=k, ef_search=128, beam_width=512, max_hops=3000,
+                        num_leaves_to_search=32, reorder_factor=4,
+                        scann_page_accounting="per_query",
+                        batch_tuples=max(64, k * 8), max_rounds=16)
+
+
+def run(ds: str = "sift10m", sels=SELS, corrs=CORRS,
+        methods=FIXED) -> tuple[list[dict], dict]:
+    store, queries = get_dataset(ds)
+    p = _params()
+    executors = {m: get_executor(ds, m) for m in (*methods, "adaptive")}
+    # warm the jit caches once per executor (shapes/params are identical
+    # across grid points) so timed rows exclude compile time
+    warm_bm = get_bitmaps(ds, sels[0], corrs[0])
+    for ex in executors.values():
+        jax.block_until_ready(ex.search(queries, warm_bm, p).ids)
+    rows, grid = [], []
+    for corr in corrs:
+        for sel in sels:
+            bm = get_bitmaps(ds, sel, corr)
+            _, tid = ground_truth(ds, sel, corr, p.k)
+            cyc, rec, wall, chosen = {}, {}, {}, {}
+            for m, ex in executors.items():
+                t0 = time.perf_counter()
+                res = ex.search(queries, bm, p)
+                jax.block_until_ready(res.ids)
+                wall[m] = (time.perf_counter() - t0) / queries.shape[0] * 1e6
+                cyc[m] = cycle_breakdown(res.stats, store.dim, SYSTEM)[
+                    "total"]
+                rec[m] = mean_recall(res.ids, tid, p.k)
+                chosen[m] = res.strategy
+            qualified = {m: cyc[m] for m in methods
+                         if rec[m] >= RECALL_FLOOR}
+            best_pool = qualified or {m: cyc[m] for m in methods}
+            best = min(best_pool, key=best_pool.get)
+            point = {"sel": sel, "corr": corr, "best_fixed": best,
+                     "chosen": chosen["adaptive"], "regret": {}, "recall": {},
+                     "mcycles": {}}
+            for m in (*methods, "adaptive"):
+                r = cyc[m] / cyc[best]
+                if rec[m] < RECALL_FLOOR:
+                    r = math.inf
+                point["regret"][m] = round(r, 3) if math.isfinite(r) \
+                    else "inf"
+                point["recall"][m] = round(rec[m], 3)
+                point["mcycles"][m] = round(cyc[m] / 1e6, 3)
+            grid.append(point)
+            rows.append({
+                "name": f"fig_planner/{ds}/{corr}/sel={sel}",
+                "us_per_call": wall["adaptive"],
+                "chosen": chosen["adaptive"], "best_fixed": best,
+                "regret_adaptive": point["regret"]["adaptive"],
+                "recall_adaptive": point["recall"]["adaptive"],
+                "best_mcycles": round(cyc[best] / 1e6, 3),
+            })
+
+    def max_regret(m):
+        vals = [pt["regret"][m] for pt in grid]
+        return math.inf if "inf" in vals else max(vals)
+
+    summary = {
+        "bench": "planner", "dataset": ds, "recall_floor": RECALL_FLOOR,
+        "regret_target": REGRET_TARGET,
+        "grid": grid,
+        "max_regret": {m: (round(v, 3) if math.isfinite(v) else "inf")
+                       for m in (*methods, "adaptive")
+                       for v in [max_regret(m)]},
+        "planner_within_target": max_regret("adaptive") <= REGRET_TARGET,
+        "fixed_within_target": sorted(
+            m for m in methods if max_regret(m) <= REGRET_TARGET),
+    }
+    return rows, summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="2-point CI grid (smoke.sh)")
+    ap.add_argument("--ds", default="sift10m")
+    args = ap.parse_args()
+    sels = (0.05, 0.5) if args.tiny else SELS
+    corrs = ("none",) if args.tiny else CORRS
+    rows, summary = run(args.ds, sels, corrs)
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_planner.json")
+    with open(path, "w") as f:
+        f.write(json.dumps(summary) + "\n")
+    emit(rows, "fig_planner")
+    print(f"# planner max regret: {summary['max_regret']['adaptive']}, "
+          f"fixed strategies within {REGRET_TARGET}x everywhere: "
+          f"{summary['fixed_within_target'] or 'none'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,14 +14,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig9,table6,fig10,fig11,fig12,fig13,"
-                         "table2,table3,table4,table5,table7")
+                         "fig_planner,table2,table3,table4,table5,table7")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
 
     from benchmarks import (fig9_qps, fig10_breakdown, fig11_limit_k,
-                            fig12_correlation, fig13_tmap, table2_datasets,
-                            table3_build, table4_hnsw_quant, table5_quant,
-                            table6_metrics, table7_concurrency)
+                            fig12_correlation, fig13_tmap, fig_planner,
+                            table2_datasets, table3_build,
+                            table4_hnsw_quant, table5_quant, table6_metrics,
+                            table7_concurrency)
     from benchmarks.common import emit
 
     suites = {
@@ -38,6 +39,9 @@ def main() -> None:
         "fig11": lambda: fig11_limit_k.run(),
         "fig12": lambda: fig12_correlation.run(),
         "fig13": lambda: fig13_tmap.run(),
+        "fig_planner": lambda: fig_planner.run(
+            sels=(0.05, 0.5) if args.fast else fig_planner.SELS,
+            corrs=("none",) if args.fast else fig_planner.CORRS)[0],
         "table4": lambda: table4_hnsw_quant.run(),
         "table5": lambda: table5_quant.run(),
         "table7": lambda: table7_concurrency.run(),

@@ -8,16 +8,16 @@ import jax
 
 from benchmarks.common import (emit, get_bitmaps, get_dataset, get_scann,
                                ground_truth, mean_recall)
-from repro.core import SearchParams, scann_search_batch
+from repro.core import ScannExecutor, SearchParams
 
 SELS = (0.01, 0.05, 0.2, 0.5, 0.8)
 
 
 def _run_once(idx, store, queries, bm, p):
-    _, ids, _ = scann_search_batch(idx, store, queries, bm, p)
-    jax.block_until_ready(ids)
+    ex = ScannExecutor(idx, store, pipeline="batched")
+    jax.block_until_ready(ex.search(queries, bm, p).ids)
     t0 = time.perf_counter()
-    _, ids, _ = scann_search_batch(idx, store, queries, bm, p)
+    ids = ex.search(queries, bm, p).ids
     jax.block_until_ready(ids)
     return (time.perf_counter() - t0) / queries.shape[0] * 1e6, ids
 

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import (emit, get_bitmaps, get_dataset, get_graph,
                                run_method)
-from repro.core import (SYSTEM, SearchParams, SearchStats, cycle_breakdown,
-                        search_batch)
+from repro.core import (SYSTEM, GraphExecutor, SearchParams, SearchStats,
+                        cycle_breakdown)
 
 
 def run(ds="openai5m", sel=0.1) -> list[dict]:
@@ -38,12 +38,12 @@ def run(ds="openai5m", sel=0.1) -> list[dict]:
     # measured TPU-native batching effect
     p = SearchParams(k=10, ef_search=128, beam_width=512,
                      strategy="sweeping", max_hops=2048)
+    ex = GraphExecutor(graph, store, strategy="sweeping")
     for b in (1, 16):
         q, m = queries[:b], bm[:b]
-        _, ids, _ = search_batch(graph, store, q, m, p)
-        jax.block_until_ready(ids)
+        jax.block_until_ready(ex.search(q, m, p).ids)
         t0 = time.perf_counter()
-        _, ids, _ = search_batch(graph, store, q, m, p)
+        ids = ex.search(q, m, p).ids
         jax.block_until_ready(ids)
         us = (time.perf_counter() - t0) / b * 1e6
         rows.append({"name": f"table7/{ds}/sweeping/batch={b}",

@@ -15,13 +15,13 @@ import numpy as np
 
 from repro.core import (LIBRARY, SYSTEM, SearchParams, WorkloadSpec,
                         build_graph, build_scann, cycle_breakdown,
-                        filtered_knn, generate_bitmaps, modeled_qps,
-                        recall_at_k, scann_search_batch, search_batch)
+                        filtered_knn, generate_bitmaps, make_executor,
+                        modeled_qps, recall_at_k)
 from repro.data import DatasetSpec, make_dataset
 
 SELS = (0.05, 0.2, 0.5)
 CORRS = ("high_pos", "none", "negative")
-METHODS = ("navix", "sweeping", "iterative_scan", "scann")
+METHODS = ("navix", "sweeping", "iterative_scan", "scann", "adaptive")
 
 
 def main() -> None:
@@ -38,21 +38,17 @@ def main() -> None:
             bm = generate_bitmaps(store, queries,
                                   WorkloadSpec(sel, corr), seed=7)
             _, tid = filtered_knn(store, queries, bm, 10)
+            p = SearchParams(k=10, ef_search=96, beam_width=512,
+                             max_hops=2048, num_leaves_to_search=24)
             for m in METHODS:
-                if m == "scann":
-                    p = SearchParams(k=10, num_leaves_to_search=24)
-                    _, ids, stats = scann_search_batch(scann, store,
-                                                       queries, bm, p)
-                else:
-                    p = SearchParams(k=10, ef_search=96, beam_width=512,
-                                     strategy=m, max_hops=2048)
-                    _, ids, stats = search_batch(graph, store, queries, bm,
-                                                 p)
+                ex = make_executor(m, store, graph=graph, index=scann)
+                res = ex.search(queries, bm, p)
                 rec = float(np.mean(np.asarray(jax.vmap(
-                    lambda f, t: recall_at_k(f, t, 10))(ids, tid))))
-                qs = modeled_qps(stats, store.dim, SYSTEM)
-                ql = modeled_qps(stats, store.dim, LIBRARY)
-                print(f"{corr:9s} {sel:5.2f} {m:15s} {rec:6.3f} "
+                    lambda f, t: recall_at_k(f, t, 10))(res.ids, tid))))
+                qs = modeled_qps(res.stats, store.dim, SYSTEM)
+                ql = modeled_qps(res.stats, store.dim, LIBRARY)
+                tag = m if m != "adaptive" else f"adaptive>{res.strategy}"
+                print(f"{corr:9s} {sel:5.2f} {tag:15s} {rec:6.3f} "
                       f"{qs:8.0f} {ql:8.0f}")
     print("\nThe SYSTEM/LIBRARY QPS columns reproduce Fig. 1's point: the "
           "method ranking differs between the two regimes.")

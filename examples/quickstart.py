@@ -13,8 +13,8 @@ import numpy as np
 
 from repro.core import (SYSTEM, SearchParams, WorkloadSpec, build_graph,
                         build_scann, cycle_breakdown, filtered_knn,
-                        generate_bitmaps, recall_at_k, scann_search_batch,
-                        search_batch, stats_table_row)
+                        generate_bitmaps, make_executor, recall_at_k,
+                        stats_table_row)
 from repro.data import DatasetSpec, make_dataset
 
 
@@ -36,34 +36,40 @@ def main() -> None:
     bitmaps = generate_bitmaps(store, queries, ws, seed=1)
     _, true_ids = filtered_knn(store, queries, bitmaps, 10)
 
-    print("== 4. five filter-agnostic strategies ==")
+    print("== 4. strategies behind the one executor API ==")
+    p = SearchParams(k=10, ef_search=96, beam_width=512, max_hops=2048,
+                     num_leaves_to_search=24, reorder_factor=4)
     print(f"   {'method':16s} {'recall':>6s} {'dist':>7s} {'filter':>8s} "
           f"{'hops':>6s} {'pages':>7s} {'Mcycles':>8s}")
-    for strat in ("sweeping", "acorn", "navix", "iterative_scan"):
-        p = SearchParams(k=10, ef_search=96, beam_width=512, strategy=strat,
-                         max_hops=2048)
-        _, ids, stats = search_batch(graph, store, queries, bitmaps, p)
+    for method in ("sweeping", "acorn", "navix", "iterative_scan", "scann",
+                   "bruteforce"):
+        ex = make_executor(method, store, graph=graph, index=scann)
+        res = ex.search(queries, bitmaps, p)
         rec = float(np.mean(np.asarray(jax.vmap(
-            lambda f, t: recall_at_k(f, t, 10))(ids, true_ids))))
-        row = stats_table_row(stats)
-        cyc = cycle_breakdown(stats, store.dim, SYSTEM)["total"] / 1e6
-        print(f"   {strat:16s} {rec:6.3f} {row['distance_comps']:7.0f} "
+            lambda f, t: recall_at_k(f, t, 10))(res.ids, true_ids))))
+        row = stats_table_row(res.stats)
+        cyc = cycle_breakdown(res.stats, store.dim, SYSTEM)["total"] / 1e6
+        print(f"   {method:16s} {rec:6.3f} {row['distance_comps']:7.0f} "
               f"{row['filter_checks']:8.0f} {row['hops']:6.0f} "
-              f"{row['page_accesses_index']+row['page_accesses_heap']:7.0f}"
-              f" {cyc:8.2f}")
-    p = SearchParams(k=10, num_leaves_to_search=24, reorder_factor=4)
-    _, ids, stats = scann_search_batch(scann, store, queries, bitmaps, p)
-    rec = float(np.mean(np.asarray(jax.vmap(
-        lambda f, t: recall_at_k(f, t, 10))(ids, true_ids))))
-    row = stats_table_row(stats)
-    cyc = cycle_breakdown(stats, store.dim, SYSTEM)["total"] / 1e6
-    print(f"   {'scann':16s} {rec:6.3f} {row['distance_comps']:7.0f} "
-          f"{row['filter_checks']:8.0f} {row['hops']:6.0f} "
           f"{row['page_accesses_index']+row['page_accesses_heap']:7.0f}"
-          f" {cyc:8.2f}")
+              f" {cyc:8.2f}")
     print("\nNote the paper's Table-6 pattern: filter-first (acorn/navix) "
           "trades filter checks for distance computations; ScaNN batches "
           "both.")
+
+    print("== 5. the system-aware adaptive planner ==")
+    planner = make_executor("adaptive", store, graph=graph, index=scann)
+    for sel in (0.01, 0.10, 0.8):
+        bm = generate_bitmaps(store, queries, WorkloadSpec(sel, "none"),
+                              seed=2)
+        res = planner.search(queries, bm, p)
+        preds = {m: round(c / 1e6, 2)
+                 for m, c in res.plan.predicted_cycles.items()}
+        print(f"   sel={sel:<5} -> chose {res.strategy:15s} "
+              f"(predicted Mcycles: {preds})")
+    print("\nThe planner picks the cheapest recall-feasible strategy per "
+          "batch from bitmap popcounts + a leaf-probe correlation proxy "
+          "(DESIGN.md \u00a76).")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.core import SearchParams, WorkloadSpec, generate_bitmaps
-from repro.core.distributed import build_sharded_scann
+from repro.core.distributed import (DistributedScannExecutor,
+                                    build_sharded_scann)
 from repro.data import DatasetSpec, make_dataset
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
@@ -40,8 +41,8 @@ def main() -> None:
     sharded = build_sharded_scann(store, mesh, "data", num_leaves=64,
                                   levels=1)
     server = RetrievalAugmentedServer(
-        bundle, params, sharded, SearchParams(k=4, num_leaves_to_search=32),
-        docs, chunk_len=8)
+        bundle, params, DistributedScannExecutor(sharded),
+        SearchParams(k=4, num_leaves_to_search=32), docs, chunk_len=8)
 
     # two requests with different predicates (20% vs 5% selectivity)
     prompts = rng.randint(0, cfg.vocab, (2, 16)).astype(np.int32)

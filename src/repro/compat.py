@@ -1,0 +1,77 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+The repo targets the modern mesh-context API (`jax.set_mesh`,
+`jax.sharding.get_abstract_mesh`), which landed after jax 0.4.x.  On older
+runtimes the same thread-local state exists behind `Mesh.__enter__` and
+`jax._src.mesh.thread_resources`; these wrappers pick whichever is present
+so every module imports from here instead of probing `jax` directly.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def get_abstract_mesh():
+    """Active abstract mesh, or None when no mesh context is active."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh  # 0.4.x thread-local fallback
+    pm = _mesh.thread_resources.env.physical_mesh
+    if pm is None or pm.empty:
+        return None
+    return pm.abstract_mesh
+
+
+def get_concrete_mesh():
+    """Active concrete Mesh (needed by 0.4.x shard_map), or None."""
+    fn = getattr(jax.sharding, "get_concrete_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh
+    pm = _mesh.thread_resources.env.physical_mesh
+    if pm is None or pm.empty:
+        return None
+    return pm
+
+
+def set_mesh(mesh) -> contextlib.AbstractContextManager:
+    """Context manager activating `mesh` (jax.set_mesh on new runtimes,
+    the Mesh's own context manager on 0.4.x)."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map on new runtimes; the 0.4.x experimental entry point
+    (kwarg `check_rep`, concrete-Mesh-only for plain-array inputs) else."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    if not isinstance(mesh, jax.sharding.Mesh):
+        concrete = get_concrete_mesh()
+        if concrete is not None:
+            mesh = concrete
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """jax.make_mesh with Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils  # pre-0.4.35 fallback
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)

@@ -1,6 +1,7 @@
 """Core filter-agnostic FVS library (the paper's contribution in JAX)."""
 from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, SearchParams,
-                              SearchStats, VectorStore, pack_bitmap,
+                              SearchResult, SearchStats, VectorStore,
+                              heap_pages_per_vector, pack_bitmap,
                               pack_bool_bitmap, probe_bitmap, recall_at_k,
                               topk_smallest, unpack_bitmap)
 from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
@@ -11,18 +12,26 @@ from repro.core.hnsw import HNSWGraph, build_graph, build_incremental
 from repro.core.graph_search import search_batch
 from repro.core.scann import (ScannIndex, build_scann, scann_search_batch,
                               scann_search_batch_vmapped)
-from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants,
-                                  cycle_breakdown, modeled_qps,
-                                  stats_table_row)
+from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
+                                  component_cycles, cycle_breakdown,
+                                  modeled_qps, predict_counters,
+                                  predict_cycles, stats_table_row)
+from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
+                                 Executor, GraphExecutor, ScannExecutor,
+                                 SearchPlan, make_executor,
+                                 REGISTERED_METHODS)
 
 __all__ = [
-    "METRIC_COS", "METRIC_IP", "METRIC_L2", "SearchParams", "SearchStats",
-    "VectorStore", "pack_bitmap", "pack_bool_bitmap", "probe_bitmap",
-    "recall_at_k", "topk_smallest", "unpack_bitmap", "CORRELATIONS",
-    "PAPER_SELECTIVITIES", "WorkloadSpec", "generate_bitmaps",
-    "generate_grid", "generate_passing_rows", "filtered_knn", "knn",
-    "HNSWGraph", "build_graph", "build_incremental", "search_batch",
-    "ScannIndex", "build_scann", "scann_search_batch",
-    "scann_search_batch_vmapped", "LIBRARY", "SYSTEM",
-    "CostConstants", "cycle_breakdown", "modeled_qps", "stats_table_row",
+    "METRIC_COS", "METRIC_IP", "METRIC_L2", "SearchParams", "SearchResult",
+    "SearchStats", "VectorStore", "heap_pages_per_vector", "pack_bitmap",
+    "pack_bool_bitmap", "probe_bitmap", "recall_at_k", "topk_smallest",
+    "unpack_bitmap", "CORRELATIONS", "PAPER_SELECTIVITIES", "WorkloadSpec",
+    "generate_bitmaps", "generate_grid", "generate_passing_rows",
+    "filtered_knn", "knn", "HNSWGraph", "build_graph", "build_incremental",
+    "search_batch", "ScannIndex", "build_scann", "scann_search_batch",
+    "scann_search_batch_vmapped", "LIBRARY", "SYSTEM", "CostConstants",
+    "IndexShape", "component_cycles", "cycle_breakdown", "modeled_qps",
+    "predict_counters", "predict_cycles", "stats_table_row",
+    "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
+    "ScannExecutor", "SearchPlan", "make_executor", "REGISTERED_METHODS",
 ]

@@ -1,7 +1,20 @@
 """System-tax cost model (paper §3.4, §6.2, Fig. 10).
 
-Translates the measured SearchStats counters into modeled CPU cycles under
-two architectural regimes:
+Two modes share one set of per-operation constants:
+
+  post-hoc     — `cycle_breakdown` translates MEASURED SearchStats counters
+                 into modeled CPU cycles (Fig. 10 bars, Table 7 rows);
+  predictive   — `predict_counters`/`predict_cycles` produce closed-form
+                 EXPECTED counters per strategy as a function of
+                 (n, dim, selectivity estimate, correlation proxy, index
+                 shape), before running anything.  This is what turns the
+                 paper's "the best strategy is a system-aware decision"
+                 finding (Fig. 1 crossover, §6.2) into an actual planner:
+                 `executor.AdaptivePlanner` evaluates `predict_cycles` for
+                 every registered strategy per query batch and dispatches
+                 to the argmin.  Equations in DESIGN.md §6.
+
+The constants translate counters into cycles under two regimes:
 
   SYSTEM  — PostgreSQL-like page engine: every page access pays buffer-pool
             lookup + pin + shared lock + release; every scored vector pays
@@ -20,11 +33,11 @@ two regimes reproduce Fig. 1's crossover-point shift.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Optional
 
 import numpy as np
 
-from repro.core.types import SearchStats
+from repro.core.types import SearchParams, SearchStats, heap_pages_per_vector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,25 +70,37 @@ LIBRARY = CostConstants(
 )
 
 
+def component_cycles(counters: Mapping[str, float], dim: int,
+                     constants: CostConstants = SYSTEM) -> dict[str, float]:
+    """Per-component modeled cycles for one query from a counter mapping
+    (the Table 6 column names).  Shared by the post-hoc path (measured
+    counters) and the predictive path (closed-form expected counters)."""
+    vec_bytes = dim * 4
+    comp = {
+        "index_page_access": counters["page_accesses_index"]
+        * constants.page_access,
+        "vector_retrieval": counters["page_accesses_heap"]
+        * constants.page_access
+        + counters["distance_comps"] * vec_bytes
+        * constants.tuple_materialize,
+        "distance_compute": counters["distance_comps"] * dim
+        * constants.distance_per_dim,
+        "filter_checks": counters["filter_checks"] * constants.filter_check,
+        "translation_map": counters["tmap_lookups"] * constants.tmap_lookup,
+        "reordering": counters["reorder_rows"]
+        * constants.reorder_sort_per_row,
+    }
+    comp["total"] = sum(comp.values())
+    return comp
+
+
 def cycle_breakdown(stats: SearchStats, dim: int,
                     constants: CostConstants = SYSTEM) -> dict[str, float]:
     """Per-component modeled cycles for one query (Fig. 10 bars)."""
     s = {k: float(np.asarray(v).mean()) for k, v in stats.as_dict().items()} \
         if _is_batched(stats) else {k: float(np.asarray(v))
                                     for k, v in stats.as_dict().items()}
-    vec_bytes = dim * 4
-    comp = {
-        "index_page_access": s["page_accesses_index"] * constants.page_access,
-        "vector_retrieval": s["page_accesses_heap"] * constants.page_access
-        + s["distance_comps"] * vec_bytes * constants.tuple_materialize,
-        "distance_compute": s["distance_comps"] * dim
-        * constants.distance_per_dim,
-        "filter_checks": s["filter_checks"] * constants.filter_check,
-        "translation_map": s["tmap_lookups"] * constants.tmap_lookup,
-        "reordering": s["reorder_rows"] * constants.reorder_sort_per_row,
-    }
-    comp["total"] = sum(comp.values())
-    return comp
+    return component_cycles(s, dim, constants)
 
 
 def _is_batched(stats: SearchStats) -> bool:
@@ -103,3 +128,146 @@ def stats_table_row(stats: SearchStats) -> dict[str, float]:
     """Mean counters over a query batch — one row of the paper's Table 6."""
     return {k: float(np.asarray(v).mean())
             for k, v in stats.as_dict().items()}
+
+
+# ---------------------------------------------------------------------------
+# Predictive mode (DESIGN.md §6).
+#
+# Closed-form EXPECTED Table 6 counters per strategy, as a function of the
+# dataset/index shape, a per-batch selectivity estimate s (bitmap popcount
+# / n) and a correlation proxy γ (local selectivity around the query ÷
+# global selectivity; >1 = positively correlated predicate).  The effective
+# selectivity s̃ = clip(s·γ, 1/n, 1) is what graph traversal locally sees.
+#
+# Calibration anchors (measured on the repo's strategies, see
+# tests/test_executor.py and DESIGN.md §6 for the derivations):
+#   * sweeping visits ~ef/s̃ hops before W fills with passing rows;
+#   * iterative scan emits ~k/s̃ candidates before k pass the post-filter,
+#     in batches of `batch_tuples`;
+#   * each traversal hop newly scores ~GRAPH_NEW_PER_HOP rows (the rest of
+#     the 2M neighborhood is already visited);
+#   * filter-first checks all 2M 1-hop neighbors per hop and 2M more per
+#     EXPANDED branch — non-passing branches under the hardened-ACORN skip,
+#     a heuristic-gated fraction for NaviX.
+# ---------------------------------------------------------------------------
+
+GRAPH_NEW_PER_HOP = 2.5     # newly scored rows per hop (visited overlap)
+SWEEP_FC_PER_DC = 0.6       # would-enter-W checks per scored row
+NAVIX_EXPAND_FRAC = 0.5     # adaptive-heuristic 2-hop gating vs ACORN's 1.0
+FILTER_FIRST_HOPS = 1.06    # hops ≈ FILTER_FIRST_HOPS · ef when connected
+FILTER_FIRST_POOL = 0.7     # subgraph-exhaustion cap: hops ≤ 0.7·n·s̃
+ITER_HOP_FACTOR = 1.6       # iterative-scan hops per emitted candidate
+ITER_HOP_BASE = 40.0        # beam settle-down tail per scan round-trip
+
+PREDICTABLE_STRATEGIES = ("bruteforce", "scann", "sweeping", "acorn",
+                          "navix", "iterative_scan", "unfiltered")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexShape:
+    """Static shape facts the predictive model needs (SYSTEM-agnostic)."""
+
+    n: int
+    dim: int
+    graph_m: int = 16                    # HNSW M; level-0 degree = 2M
+    scann_leaves: Optional[int] = None   # L
+    scann_rows_per_leaf: Optional[int] = None    # C (capacity, padded)
+    scann_cent_scored: Optional[int] = None      # centroids scored (①+②)
+    scann_pages_per_leaf: int = 1
+
+
+def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
+                     selectivity: float,
+                     correlation: float = 1.0) -> dict[str, float]:
+    """Expected per-query Table 6 counters for `strategy` (DESIGN.md §6)."""
+    n, k = shape.n, params.k
+    ppv = heap_pages_per_vector(shape.dim)
+    s = min(max(selectivity, 1.0 / n), 1.0)
+    s_eff = min(max(s * max(correlation, 1e-3), 1.0 / n), 1.0)
+    c = dict(distance_comps=0.0, filter_checks=0.0, hops=0.0,
+             page_accesses_index=0.0, page_accesses_heap=0.0,
+             tmap_lookups=0.0, reorder_rows=0.0)
+
+    if strategy == "bruteforce":
+        # seqscan over the bitmap: probe every row, fetch+score the passing
+        c["filter_checks"] = float(n)
+        c["distance_comps"] = s * n
+        c["page_accesses_heap"] = s * n * ppv
+        return c
+
+    if strategy == "scann":
+        if shape.scann_leaves is None or shape.scann_rows_per_leaf is None:
+            raise ValueError("scann prediction needs scann_* shape facts")
+        nl = min(params.num_leaves_to_search, shape.scann_leaves)
+        rows = nl * shape.scann_rows_per_leaf
+        r = min(k * params.reorder_factor, rows)
+        cent = shape.scann_cent_scored or shape.scann_leaves
+        c["filter_checks"] = float(rows)
+        c["distance_comps"] = s_eff * rows + cent + r
+        c["hops"] = float(nl)
+        c["page_accesses_index"] = float(nl * shape.scann_pages_per_leaf)
+        c["page_accesses_heap"] = float(r * ppv)
+        c["reorder_rows"] = float(r)
+        return c
+
+    deg = 2.0 * shape.graph_m
+    ef = max(params.ef_search, 2 * k)
+    tm = 1.0 if params.translation_map else 0.0
+
+    if strategy in ("sweeping", "unfiltered"):
+        # traversal-first: W fills once ~ef passing rows were seen, and the
+        # traversal sees passing rows at rate s̃ → ~ef/s̃ hops (capped by
+        # max_hops and by graph exhaustion: ≲ n/NEW hops score all n rows).
+        s_nav = 1.0 if strategy == "unfiltered" else s_eff
+        hops = min(ef / s_nav, float(params.max_hops), n / GRAPH_NEW_PER_HOP)
+        dc = min(GRAPH_NEW_PER_HOP * hops + ef, float(n))
+        fc = 0.0 if strategy == "unfiltered" else SWEEP_FC_PER_DC * dc
+        c.update(distance_comps=dc, filter_checks=fc, hops=hops,
+                 page_accesses_index=hops + (1 - tm) * fc,
+                 page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
+        return c
+
+    if strategy == "iterative_scan":
+        # pgvector post-filter: emit batches of `batch_tuples` unfiltered
+        # candidates until k pass — E[emitted] ≈ k/s̃, rounded up to whole
+        # batches, capped by the round budget.
+        bt = params.batch_tuples
+        emitted = float(min(bt * np.ceil((k / s_eff) / bt),
+                            bt * params.max_rounds))
+        hops = min(ITER_HOP_FACTOR * emitted + ITER_HOP_BASE,
+                   float(params.max_hops), n / GRAPH_NEW_PER_HOP)
+        dc = min(GRAPH_NEW_PER_HOP * hops, float(n))
+        c.update(distance_comps=dc, filter_checks=emitted, hops=hops,
+                 page_accesses_index=hops + (1 - tm) * emitted,
+                 page_accesses_heap=dc * ppv, tmap_lookups=tm * emitted)
+        return c
+
+    if strategy in ("acorn", "navix"):
+        # filter-first: traversal stays on the predicate subgraph — hop
+        # count is ~ef until the subgraph runs out of nodes; every hop
+        # checks the full 1-hop neighborhood and 2M more per expanded
+        # branch (hardened-ACORN expands the non-passing (1-s̃) fraction,
+        # NaviX's adaptive heuristic a further NAVIX_EXPAND_FRAC of that).
+        gate = 1.0 if strategy == "acorn" else NAVIX_EXPAND_FRAC
+        if strategy == "navix" and s_eff > 0.35:
+            gate = 0.05                      # adaptive-local: onehop zone
+        hops = min(FILTER_FIRST_HOPS * ef, FILTER_FIRST_POOL * n * s_eff)
+        hops = max(hops, 1.0)
+        expand = deg * (1.0 - s_eff) * gate  # branches expanded per hop
+        fc = hops * (deg + expand * deg)
+        dc = min(hops * GRAPH_NEW_PER_HOP * (1.0 + gate), float(n))
+        c.update(distance_comps=dc, filter_checks=fc, hops=hops,
+                 page_accesses_index=hops * (1.0 + expand) + (1 - tm) * fc,
+                 page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
+        return c
+
+    raise ValueError(f"no predictive model for strategy {strategy!r}")
+
+
+def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
+                   selectivity: float, correlation: float = 1.0,
+                   constants: CostConstants = SYSTEM) -> float:
+    """Expected per-query modeled cycles (the planner's ranking metric)."""
+    counters = predict_counters(strategy, shape, params, selectivity,
+                                correlation)
+    return component_cycles(counters, shape.dim, constants)["total"]

@@ -25,6 +25,8 @@ import dataclasses
 from functools import partial
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -142,7 +144,7 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
     pspec = P(axis)
     rep = P()
     vspec = P(axis) if heap_layout == "leaf_ordered" else rep
-    return jax.shard_map(
+    return compat.shard_map(
         local_search, mesh=mesh,
         in_specs=(pspec, pspec, pspec, rep, rep, rep, vspec, vspec,
                   rep, rep),
@@ -150,10 +152,12 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
 
 
 def distributed_search_fn(sharded: ShardedFVS, params: SearchParams,
-                          use_pallas: bool = False):
+                          use_pallas: bool = False,
+                          heap_layout: str = "replicated"):
     """Jittable distributed filtered-search step bound to a concrete store:
     (queries (Q, d), bitmaps (Q, W)) -> (dists (Q, k), ids)."""
-    fn = distributed_search_raw(sharded, params, use_pallas=use_pallas)
+    fn = distributed_search_raw(sharded, params, use_pallas=use_pallas,
+                                heap_layout=heap_layout)
     idx, store = sharded.index, sharded.store
 
     def search(queries, bitmaps):
@@ -189,7 +193,7 @@ def distributed_kmeans_fn(mesh: Mesh, axis: str, k: int, iters: int,
         cent, _ = jax.lax.scan(step, cent, None, length=iters)
         return cent
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
+    fn = compat.shard_map(local, mesh=mesh, in_specs=(P(axis), P()),
                        out_specs=P(), check_vma=False)
     return jax.jit(fn)
 
@@ -203,3 +207,51 @@ def build_sharded_scann(store: VectorStore, mesh: Mesh, axis: str,
     """
     idx = build_scann(store, num_leaves=num_leaves, **kw)
     return shard_index(idx, store, mesh, axis)
+
+
+class DistributedScannExecutor:
+    """Executor-protocol port of the sharded ScaNN path (DESIGN.md §6).
+
+    Consumers (serving/rag.py, launch/fvs_dryrun.py) hold an Executor and
+    never touch the mesh plumbing.  The collective pipeline does not carry
+    SearchStats across devices, so `SearchResult.stats` is None here.
+    """
+
+    name = "scann_distributed"
+
+    def __init__(self, sharded: ShardedFVS, use_pallas: bool = False,
+                 heap_layout: str = "replicated"):
+        self.sharded = sharded
+        self.store = sharded.store
+        self.use_pallas = use_pallas
+        self.heap_layout = heap_layout
+        self._fns: dict = {}      # params -> jitted bound search fn
+
+    def plan(self, queries, bitmaps, params: SearchParams):
+        from repro.core.executor import SearchPlan
+        if params.strategy != "scann":
+            params = dataclasses.replace(params, strategy="scann")
+        return SearchPlan("scann", params, queries, bitmaps)
+
+    def execute(self, plan):
+        from repro.core.types import SearchResult
+        fn = self._fns.get(plan.params)
+        if fn is None:
+            fn = self._fns[plan.params] = distributed_search_fn(
+                self.sharded, plan.params, use_pallas=self.use_pallas,
+                heap_layout=self.heap_layout)
+        d, ids = fn(plan.queries, plan.bitmaps)
+        return SearchResult(dists=d, ids=ids, stats=None, strategy="scann",
+                            plan=plan)
+
+    def search(self, queries, bitmaps, params: SearchParams):
+        return self.execute(self.plan(queries, bitmaps, params))
+
+    def raw_search_fn(self, params: SearchParams, use_pallas=None,
+                      heap_layout=None):
+        """The shard_map'd explicit-args fn (lowerable against
+        ShapeDtypeStructs) — what launch/fvs_dryrun.py compiles."""
+        return distributed_search_raw(
+            self.sharded, params,
+            use_pallas=self.use_pallas if use_pallas is None else use_pallas,
+            heap_layout=heap_layout or self.heap_layout)

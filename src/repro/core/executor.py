@@ -1,0 +1,405 @@
+"""Unified executor/planner layer — every search strategy behind one API.
+
+The paper's central finding is that the best filter-agnostic strategy is a
+*system-aware decision* (Fig. 1 crossover, §6.2): it flips with
+selectivity, vector-predicate correlation, and the per-architecture access
+costs.  The repo's strategies historically lived behind three divergent
+entry points (`graph_search.search_batch`, `scann.scann_search_batch[...]`,
+`bruteforce.filtered_knn`) with three return conventions; this module
+collapses them into one protocol so callers — benchmarks, serving, launch —
+never hard-code an index again:
+
+    Executor.plan(queries, bitmaps, params)  -> SearchPlan
+    Executor.execute(plan)                   -> SearchResult
+    Executor.search(queries, bitmaps, params) = execute(plan(...))
+
+Fixed executors (`GraphExecutor`, `ScannExecutor`, `BruteForceExecutor`)
+are thin, *bit-identical* ports of the legacy entry points — same jitted
+kernels, same SearchStats counters (equivalence-tested in
+tests/test_executor.py).  `AdaptivePlanner` is where the paper's finding
+becomes machinery: per query batch it estimates selectivity from bitmap
+popcounts, estimates correlation from the bitmap density inside the
+query's nearest ScaNN leaves, runs `costmodel.predict_cycles` for every
+registered candidate, and dispatches to the cheapest recall-feasible one
+(decision boundaries in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Mapping, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.bruteforce import filtered_knn
+from repro.core.graph_search import search_batch
+from repro.core.hnsw import HNSWGraph
+from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
+                              project_query, scann_search_batch,
+                              scann_search_batch_vmapped)
+from repro.core.types import (SearchParams, SearchResult, SearchStats,
+                              VectorStore, heap_pages_per_vector,
+                              probe_bitmap, topk_smallest)
+
+GRAPH_STRATEGIES = ("unfiltered", "sweeping", "acorn", "navix",
+                    "iterative_scan")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPlan:
+    """What an executor decided to run for one query batch."""
+
+    strategy: str                  # resolved strategy name
+    params: SearchParams           # resolved knobs (strategy field set)
+    queries: Any                   # (Q, d)
+    bitmaps: Any                   # (Q, words) uint32
+    # Planner annotations (None for fixed executors):
+    est_selectivity: Optional[np.ndarray] = None    # (Q,) popcount/n
+    correlation_proxy: Optional[float] = None       # local/global density
+    predicted_cycles: Optional[Mapping[str, float]] = None
+
+
+@runtime_checkable
+class Executor(Protocol):
+    """Anything that can plan and execute filtered top-k search."""
+
+    name: str
+    store: VectorStore
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan: ...
+
+    def execute(self, plan: SearchPlan) -> SearchResult: ...
+
+    def search(self, queries, bitmaps,
+               params: SearchParams) -> SearchResult: ...
+
+
+class BaseExecutor:
+    """plan/execute split with the one-call convenience wrapper."""
+
+    name: str = "base"
+
+    def search(self, queries, bitmaps, params: SearchParams) -> SearchResult:
+        return self.execute(self.plan(queries, bitmaps, params))
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        raise NotImplementedError
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        raise NotImplementedError
+
+
+class GraphExecutor(BaseExecutor):
+    """All five graph strategies (paper §2.3) behind the executor API.
+
+    Bit-identical port of `graph_search.search_batch` — the same jitted
+    vmapped beam search runs underneath."""
+
+    def __init__(self, graph: HNSWGraph, store: VectorStore,
+                 strategy: str = "sweeping"):
+        if strategy not in GRAPH_STRATEGIES:
+            raise ValueError(f"unknown graph strategy {strategy!r}")
+        self.graph = graph
+        self.store = store
+        self.strategy = strategy
+        self.name = strategy
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        if params.strategy != self.strategy:
+            params = dataclasses.replace(params, strategy=self.strategy)
+        return SearchPlan(self.strategy, params, queries, bitmaps)
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        d, ids, stats = search_batch(self.graph, self.store, plan.queries,
+                                     plan.bitmaps, plan.params)
+        return SearchResult(dists=d, ids=ids, stats=stats,
+                            strategy=self.strategy, plan=plan)
+
+
+class ScannExecutor(BaseExecutor):
+    """Filtered ScaNN (paper §2.3.7) behind the executor API.
+
+    pipeline="batched" is the query-batched union-scan hot path
+    (DESIGN.md §4, with optional query-block tiling); "vmapped" is the
+    legacy per-query path kept as the equivalence oracle."""
+
+    def __init__(self, index: ScannIndex, store: VectorStore,
+                 pipeline: str = "batched", use_pallas: bool = False):
+        if pipeline not in ("batched", "vmapped"):
+            raise ValueError(f"unknown scann pipeline {pipeline!r}")
+        self.index = index
+        self.store = store
+        self.pipeline = pipeline
+        self.use_pallas = use_pallas
+        self.name = "scann" if pipeline == "batched" else "scann_vmapped"
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        if params.strategy != "scann":
+            params = dataclasses.replace(params, strategy="scann")
+        return SearchPlan("scann", params, queries, bitmaps)
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        fn = scann_search_batch if self.pipeline == "batched" \
+            else scann_search_batch_vmapped
+        d, ids, stats = fn(self.index, self.store, plan.queries,
+                           plan.bitmaps, plan.params,
+                           use_pallas=self.use_pallas)
+        return SearchResult(dists=d, ids=ids, stats=stats, strategy="scann",
+                            plan=plan)
+
+
+@jax.jit
+def _bitmap_popcount(bitmaps):
+    """Per-query popcount over packed bitmap words. (Q, W) -> (Q,) int32."""
+    return jax.lax.population_count(bitmaps).sum(axis=-1).astype(jnp.int32)
+
+
+class BruteForceExecutor(BaseExecutor):
+    """Exact filtered KNN (`bruteforce.filtered_knn`) with seqscan-semantic
+    counters: every row is filter-checked; passing rows are fetched from
+    the heap and scored.  Ground-truth recall by construction — the
+    planner's refuge at very low selectivity, where (paper Fig. 9, left
+    edge) every index strategy pays more than a scan of the survivors."""
+
+    name = "bruteforce"
+
+    def __init__(self, store: VectorStore):
+        self.store = store
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        if params.strategy != "bruteforce":
+            params = dataclasses.replace(params, strategy="bruteforce")
+        return SearchPlan("bruteforce", params, queries, bitmaps)
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        d, ids = filtered_knn(self.store, plan.queries, plan.bitmaps,
+                              plan.params.k)
+        q = plan.queries.shape[0]
+        n = self.store.n
+        ppv = heap_pages_per_vector(self.store.dim)
+        npass = _bitmap_popcount(plan.bitmaps)              # (Q,)
+        z = jnp.zeros((q,), jnp.int32)
+        stats = SearchStats(
+            distance_comps=npass, filter_checks=z + n, hops=z,
+            page_accesses_index=z, page_accesses_heap=npass * ppv,
+            tmap_lookups=z, reorder_rows=z)
+        return SearchResult(dists=d, ids=ids, stats=stats,
+                            strategy="bruteforce", plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# The system-aware adaptive planner.
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("probe_leaves",))
+def _leaf_local_selectivity(index: ScannIndex, queries, bitmaps,
+                            probe_leaves: int):
+    """Bitmap density inside each query's nearest `probe_leaves` ScaNN
+    leaves — the correlation proxy numerator.  (Q,) float32.
+
+    The centroid scan here is repeated by ScannExecutor when the planner
+    picks scann — accepted cost (O(Q·L·dp), trivial next to the leaf
+    scan) so the fixed executors' jitted entry points stay byte-for-byte
+    the legacy ones (the equivalence guarantee)."""
+    qp = project_query(index, queries)                        # (Q, dp)
+    cents = index.leaf_centroids
+    cn = jnp.sum(cents * cents, -1)
+    d = (jnp.sum(qp * qp, -1)[:, None] + cn[None, :]
+         - 2.0 * qp @ cents.T)                                # (Q, L)
+    _, leaves = topk_smallest(d, probe_leaves)                # (Q, P)
+    rows = index.leaf_rowids[leaves]                          # (Q, P, C)
+    ok = jax.vmap(lambda bm, r: probe_bitmap(bm, r))(
+        bitmaps, rows.reshape(rows.shape[0], -1))
+    valid = (rows >= 0).reshape(rows.shape[0], -1)
+    return (ok & valid).sum(-1) / jnp.maximum(valid.sum(-1), 1)
+
+
+class AdaptivePlanner(BaseExecutor):
+    """Per-batch system-aware strategy selection (DESIGN.md §6).
+
+    plan():  s_q   = popcount(bitmap_q)/n           (exact, ~n/32 word reads)
+             γ     = mean local leaf density / mean s  (ScaNN-probe proxy;
+                     1.0 when no ScaNN index is registered)
+             pick  = argmin over recall-feasible candidates of
+                     predict_cycles(strategy, shape, params, s̄, γ)
+    execute(): delegates to the chosen fixed executor, then adds the
+    planning overhead to the counters (n/32 filter-word reads per query
+    plus the proxy's centroid scans + leaf probes) so regret accounting
+    stays honest.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, candidates: Mapping[str, Executor],
+                 store: VectorStore,
+                 constants: costmodel.CostConstants = costmodel.SYSTEM,
+                 graph_m: int = 16, probe_leaves: int = 4,
+                 recall_margin: float = 2.0,
+                 scann_recall_margin: float = 10.0):
+        if not candidates:
+            raise ValueError("AdaptivePlanner needs at least one candidate")
+        for name, ex in candidates.items():
+            kind = _strategy_kind(ex)
+            if kind not in costmodel.PREDICTABLE_STRATEGIES:
+                raise ValueError(
+                    f"candidate {name!r} ({kind!r}) has no predictive "
+                    f"model; supported: {costmodel.PREDICTABLE_STRATEGIES}")
+        self.candidates = dict(candidates)
+        self.store = store
+        self.constants = constants
+        self.graph_m = graph_m
+        self.probe_leaves = probe_leaves
+        self.recall_margin = recall_margin
+        self.scann_recall_margin = scann_recall_margin
+        self._scann = next((ex for ex in self.candidates.values()
+                            if isinstance(ex, ScannExecutor)), None)
+
+    # -- shape facts for the predictive model --------------------------------
+    def _shape(self) -> costmodel.IndexShape:
+        kw = dict(n=self.store.n, dim=self.store.dim, graph_m=self.graph_m)
+        if self._scann is not None:
+            idx = self._scann.index
+            L, C, _ = idx.leaf_tiles.shape
+            if idx.levels >= 2:
+                B, Lb = idx.branch_leaves.shape
+                nb = max(1, -(-32 * 2 * B // L))
+                cent = B + nb * Lb
+            else:
+                cent = L
+            # average VALID rows per leaf (padded capacity C over-counts:
+            # the stats only charge rowids >= 0)
+            fill = max(1, round(self.store.n / L))
+            kw.update(scann_leaves=L, scann_rows_per_leaf=min(fill, C),
+                      scann_cent_scored=cent,
+                      scann_pages_per_leaf=_quant_pages_per_leaf(idx))
+        return costmodel.IndexShape(**kw)
+
+    def _recall_feasible(self, strategy: str, shape: costmodel.IndexShape,
+                         params: SearchParams, s_eff: float) -> bool:
+        """Cheap guards against picking a strategy whose expected candidate
+        pool cannot even contain k passing rows (decision boundaries,
+        DESIGN.md §6).  bruteforce is always feasible (exact)."""
+        k = params.k * self.recall_margin
+        if strategy == "scann":
+            # the opened leaves must hold comfortably more passing rows
+            # than k — ScaNN's recall collapses quietly when the predicate
+            # is sparse/anti-correlated (few survivors land in the nearest
+            # leaves), so the margin is deliberately wide
+            nl = min(params.num_leaves_to_search, shape.scann_leaves or 1)
+            return s_eff * nl * (shape.scann_rows_per_leaf or 0) >= \
+                params.k * self.scann_recall_margin
+        if strategy in ("acorn", "navix"):
+            # predicate subgraph must hold at least ~ef nodes to navigate
+            return shape.n * s_eff * costmodel.FILTER_FIRST_POOL >= \
+                max(params.ef_search, k)
+        if strategy in ("sweeping", "iterative_scan"):
+            # traversal must reach k passing rows within the hop budget
+            hops = min(max(params.ef_search, 2 * params.k) / max(s_eff, 1e-9),
+                       float(params.max_hops))
+            return costmodel.GRAPH_NEW_PER_HOP * hops * s_eff >= k
+        return True
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        n = self.store.n
+        sel = np.asarray(_bitmap_popcount(bitmaps)).astype(np.float64) / n
+        s_mean = float(sel.mean())
+        gamma = 1.0
+        if self._scann is not None:
+            local = np.asarray(_leaf_local_selectivity(
+                self._scann.index, queries, bitmaps, self.probe_leaves))
+            gamma = float(np.clip(local.mean() / max(s_mean, 1.0 / n),
+                                  0.05, 20.0))
+        shape = self._shape()
+        s_eff = min(max(s_mean * gamma, 1.0 / n), 1.0)
+        preds = {name: costmodel.predict_cycles(
+            _strategy_kind(ex), shape, params, s_mean, gamma,
+            self.constants) for name, ex in self.candidates.items()}
+        feasible = {name: p for name, p in preds.items()
+                    if self._recall_feasible(_strategy_kind(
+                        self.candidates[name]), shape, params, s_eff)}
+        pool = feasible or preds          # never empty: fall back to argmin
+        chosen = min(pool, key=pool.get)
+        inner = self.candidates[chosen].plan(queries, bitmaps, params)
+        return SearchPlan(strategy=chosen, params=inner.params,
+                          queries=queries, bitmaps=bitmaps,
+                          est_selectivity=sel, correlation_proxy=gamma,
+                          predicted_cycles=preds)
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        res = self.candidates[plan.strategy].execute(plan)
+        if res.stats is not None:
+            # planning overhead: popcount reads every bitmap word (n/32
+            # filter-word probes) + the proxy's centroid scan and leaf
+            # probes — charged so the regret curve includes the planner.
+            words = int(plan.bitmaps.shape[1])
+            probe_fc = 0
+            probe_dc = 0
+            if self._scann is not None:
+                idx = self._scann.index
+                probe_fc = self.probe_leaves * idx.leaf_rowids.shape[1]
+                probe_dc = idx.leaf_centroids.shape[0]
+            st = res.stats
+            stats = dataclasses.replace(
+                st,
+                filter_checks=st.filter_checks + words + probe_fc,
+                distance_comps=st.distance_comps + probe_dc)
+            res = dataclasses.replace(res, stats=stats, plan=plan)
+        return res
+
+
+def _strategy_kind(ex: Executor) -> str:
+    """Predictive-model strategy key for an executor instance."""
+    return "scann" if isinstance(ex, ScannExecutor) else ex.name
+
+
+# ---------------------------------------------------------------------------
+# Registry — the one dispatch point for benchmarks/serving/launch.
+# ---------------------------------------------------------------------------
+
+REGISTERED_METHODS = GRAPH_STRATEGIES + ("scann", "scann_vmapped",
+                                         "bruteforce", "adaptive")
+
+
+def make_executor(method: str, store: VectorStore, *,
+                  graph: Optional[HNSWGraph] = None,
+                  index: Optional[ScannIndex] = None,
+                  use_pallas: bool = False,
+                  constants: costmodel.CostConstants = costmodel.SYSTEM,
+                  graph_m: int = 16,
+                  planner_candidates: tuple[str, ...] = (
+                      "bruteforce", "scann", "sweeping", "navix",
+                      "iterative_scan")) -> Executor:
+    """Build the executor for `method`.
+
+    Graph strategies need `graph`; "scann"/"scann_vmapped" need `index`;
+    "adaptive" builds every candidate the provided components support."""
+    if method in GRAPH_STRATEGIES:
+        if graph is None:
+            raise ValueError(f"{method!r} needs graph=")
+        return GraphExecutor(graph, store, strategy=method)
+    if method in ("scann", "scann_vmapped"):
+        if index is None:
+            raise ValueError(f"{method!r} needs index=")
+        return ScannExecutor(index, store,
+                             pipeline="batched" if method == "scann"
+                             else "vmapped", use_pallas=use_pallas)
+    if method == "bruteforce":
+        return BruteForceExecutor(store)
+    if method == "adaptive":
+        cands: dict[str, Executor] = {}
+        for name in planner_candidates:
+            if name == "bruteforce":
+                cands[name] = BruteForceExecutor(store)
+            elif name in GRAPH_STRATEGIES and graph is not None:
+                cands[name] = GraphExecutor(graph, store, strategy=name)
+            elif name in ("scann", "scann_vmapped") and index is not None:
+                cands[name] = ScannExecutor(
+                    index, store, pipeline="batched" if name == "scann"
+                    else "vmapped", use_pallas=use_pallas)
+        return AdaptivePlanner(cands, store, constants=constants,
+                               graph_m=graph_m)
+    raise ValueError(
+        f"unknown method {method!r}; registered: {REGISTERED_METHODS}")

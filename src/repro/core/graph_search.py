@@ -33,14 +33,12 @@ import jax.numpy as jnp
 
 from repro.core.hnsw import HNSWGraph
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
-                              distance, probe_bitmap, topk_smallest)
+                              distance, heap_pages_per_vector,
+                              probe_bitmap, topk_smallest)
 
 INF = jnp.inf
 
-
-def _pages_per_vector(dim: int) -> int:
-    """Heap pages touched per full-precision vector fetch (8 KB pages)."""
-    return max(1, -(-dim * 4 // 8192))
+_pages_per_vector = heap_pages_per_vector  # shared formula (types.py)
 
 
 def _dedup_first(ids: jax.Array) -> jax.Array:

@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
-                              distance, probe_bitmap, topk_smallest)
+                              distance, heap_pages_per_vector,
+                              probe_bitmap, topk_smallest)
 from repro.kernels import ops as kops
 
 PAGE_BYTES = 8192
@@ -186,8 +187,7 @@ def _quant_pages_per_leaf(index: ScannIndex) -> int:
     return max(1, -(-c * dp // PAGE_BYTES))
 
 
-def _heap_pages_per_vector(d: int) -> int:
-    return max(1, -(-d * 4 // PAGE_BYTES))
+_heap_pages_per_vector = heap_pages_per_vector  # shared formula (types.py)
 
 
 def _search_single(index: ScannIndex, store: VectorStore, q, bitmap,
@@ -322,7 +322,15 @@ def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
     candidates is gathered full-precision once and each query rescores its
     own r candidates in one batched contraction.  Counters
     keep Table 6 semantics; index-page accounting follows
-    params.scann_page_accounting (DESIGN.md §5)."""
+    params.scann_page_accounting (DESIGN.md §5).
+
+    `params.scann_query_block` > 0 tiles the query batch: each tile of B
+    queries runs the full pipeline over its own leaf union, so the
+    (Q, U, C) union-scan block — which grows ~quadratically with batch
+    size when query leaf sets are disjoint — stays VMEM/HBM-bounded
+    (DESIGN.md §4 "Scaling envelope").  ids/dists are tile-size-invariant
+    (each query only ever reads its own leaves' scores); "batch"
+    index-page accounting amortizes per tile instead of per batch."""
     if index.metric not in ("l2", "ip") or store.metric not in ("l2", "ip"):
         # distance_matrix (and the leaf-scan kernels) only implement L2/IP;
         # fail loudly instead of silently ranking cos stores by L2
@@ -330,6 +338,26 @@ def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
             f"batched ScaNN pipeline supports 'l2'/'ip' metrics, got "
             f"index={index.metric!r} store={store.metric!r}; use "
             f"scann_search_batch_vmapped for other metrics")
+    Q = queries.shape[0]
+    B = params.scann_query_block
+    if B < 0:
+        raise ValueError(f"scann_query_block must be >= 0, got {B}")
+    if 0 < B < Q:
+        outs = [_scann_search_block(index, store, queries[s:s + B],
+                                    bitmaps[s:s + B], params, use_pallas)
+                for s in range(0, Q, B)]
+        dk = jnp.concatenate([o[0] for o in outs])
+        ids = jnp.concatenate([o[1] for o in outs])
+        stats = jax.tree.map(lambda *xs: jnp.concatenate(xs),
+                             *[o[2] for o in outs])
+        return dk, ids, stats
+    return _scann_search_block(index, store, queries, bitmaps, params,
+                               use_pallas)
+
+
+def _scann_search_block(index: ScannIndex, store: VectorStore, queries,
+                        bitmaps, params: SearchParams, use_pallas: bool):
+    """One query tile through the batched pipeline (stages ①–④ above)."""
     Q = queries.shape[0]
     L, C, dp = index.leaf_tiles.shape
     nl = min(params.num_leaves_to_search, L)

@@ -161,9 +161,43 @@ class SearchParams:
     # legacy "per_query" mode charges every query for every leaf it opens
     # (the pre-batching semantics — use for Fig. 10/13 reproduction).
     scann_page_accounting: str = "batch"
+    # Query-block tiling for the batched ScaNN pipeline (DESIGN.md §4
+    # "Scaling envelope"): the (Q, U, C) union-scan block is processed in
+    # query tiles of this size so huge batches stay VMEM/HBM-bounded.
+    # 0 = one tile (the whole batch).  ids/dists are tile-size-invariant;
+    # "batch" index-page accounting amortizes per tile (DESIGN.md §5).
+    scann_query_block: int = 0
     # Iterative-scan knobs (pgvector max_scan_tuples analogue):
     batch_tuples: int = 128
     max_rounds: int = 16
+
+
+HEAP_PAGE_BYTES = 8192
+
+
+def heap_pages_per_vector(dim: int) -> int:
+    """Heap pages touched per full-precision vector fetch (8 KB pages)."""
+    return max(1, -(-dim * 4 // HEAP_PAGE_BYTES))
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Unified return convention of every executor (DESIGN.md §6).
+
+    ids/dists: (Q, k), ids -1-padded where fewer than k rows pass.
+    stats: per-query SearchStats ((Q,) leaves), or None when the backend
+    cannot carry counters (e.g. the collective distributed path).
+    strategy: the strategy that actually executed (for the AdaptivePlanner
+    this is the *chosen* fixed strategy, not "adaptive").
+    plan: the SearchPlan that produced this result (selectivity estimates,
+    predicted cycles — executor.py).
+    """
+
+    dists: Array
+    ids: Array
+    stats: Optional[SearchStats]
+    strategy: str
+    plan: Any = None
 
 
 def topk_smallest(values: Array, k: int) -> tuple[Array, Array]:

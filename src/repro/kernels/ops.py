@@ -11,6 +11,8 @@ from functools import partial
 
 import jax
 
+from repro import compat
+
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -69,7 +71,7 @@ def flash_attention_fused(q, k, v, causal: bool = True):
     """Pallas flash attention, shard_map-wrapped when a mesh is active:
     batch shards over (pod, data), kv heads over `model` (when divisible).
     Interpret mode on non-TPU backends."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     interp = _interpret()
     if mesh is None or mesh.empty:
         return flash_attention_pallas(q, k, v, causal=causal,
@@ -84,7 +86,7 @@ def flash_attention_fused(q, k, v, causal: bool = True):
     kvspec = "model" if ("model" in sizes
                          and k.shape[2] % sizes["model"] == 0) else None
     qs = P(bspec, None, kvspec, None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda q_, k_, v_: flash_attention_pallas(q_, k_, v_, causal=causal,
                                                   interpret=interp),
         mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs, check_vma=False)

@@ -18,13 +18,15 @@ import json
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.scann import ScannIndex
 from repro.core.types import SearchParams, VectorStore
-from repro.core.distributed import ShardedFVS, distributed_search_raw
+from repro.core.distributed import DistributedScannExecutor, ShardedFVS
 from repro.launch.dryrun import (HBM_BW, ICI_BW, PEAK_FLOPS,
                                  collective_bytes)
 from repro.launch.jaxpr_cost import step_cost
@@ -81,10 +83,11 @@ def main() -> None:
     params = SearchParams(k=args.k,
                           num_leaves_to_search=args.leaves_searched,
                           reorder_factor=4)
+    executor = DistributedScannExecutor(sharded, use_pallas=args.pallas,
+                                        heap_layout="leaf_ordered")
     t0 = time.time()
-    with jax.set_mesh(mesh):
-        fn = distributed_search_raw(sharded, params, use_pallas=args.pallas,
-                                    heap_layout="leaf_ordered")
+    with compat.set_mesh(mesh):
+        fn = executor.raw_search_fn(params)
         idx, store = sharded.index, sharded.store
         sargs = (idx.leaf_tiles, idx.leaf_rowids, idx.leaf_centroids,
                  idx.scale, idx.mean, idx.pca, store.vectors,

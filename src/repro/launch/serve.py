@@ -16,7 +16,8 @@ import numpy as np
 
 from repro.configs import get_config, smoke_config
 from repro.core import SearchParams, WorkloadSpec, generate_bitmaps
-from repro.core.distributed import build_sharded_scann
+from repro.core.distributed import (DistributedScannExecutor,
+                                    build_sharded_scann)
 from repro.data import DatasetSpec, make_dataset
 from repro.launch.mesh import make_mesh
 from repro.models import build_model
@@ -49,9 +50,10 @@ def main() -> None:
         mesh = make_mesh((jax.device_count(),), ("data",))
         sharded = build_sharded_scann(store, mesh, "data", num_leaves=64,
                                       levels=1)
+        executor = DistributedScannExecutor(sharded)
         sp = SearchParams(k=4, num_leaves_to_search=16)
         doc_tokens = rng.randint(0, cfg.vocab, (4096, 8)).astype(np.int32)
-        server = RetrievalAugmentedServer(bundle, params, sharded, sp,
+        server = RetrievalAugmentedServer(bundle, params, executor, sp,
                                           doc_tokens, chunk_len=8)
         bitmaps = generate_bitmaps(
             store, jnp.asarray(rng.randn(args.batch, 64).astype(np.float32)),

@@ -1,11 +1,17 @@
 """Retrieval-augmented serving: the paper's FVS as a first-class feature.
 
-The server pairs an LM (any assigned architecture) with the distributed
-filtered vector store: at request time it embeds the prompt (mean-pooled
-hidden state projected into store space), runs FILTERED top-k retrieval
-(the request's structured predicate becomes the bitmap — e.g. tenant id,
-document freshness), and splices retrieved rows into the context.  This is
-the e-commerce query of the paper's introduction, served end to end.
+The server pairs an LM (any assigned architecture) with a filtered vector
+search *executor* (core/executor.py): at request time it embeds the prompt
+(mean-pooled hidden state projected into store space), runs FILTERED top-k
+retrieval (the request's structured predicate becomes the bitmap — e.g.
+tenant id, document freshness), and splices retrieved rows into the
+context.  This is the e-commerce query of the paper's introduction, served
+end to end.
+
+Any Executor works: a local `ScannExecutor`/`GraphExecutor`, the
+`AdaptivePlanner` (the server then picks the strategy per batch), or the
+mesh-sharded `DistributedScannExecutor` — the server never hard-codes an
+index type.
 """
 from __future__ import annotations
 
@@ -16,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import ShardedFVS, distributed_search_fn
-from repro.core.types import SearchParams
+from repro.core.executor import Executor
+from repro.core.types import SearchParams, SearchResult
 from repro.models.api import ModelBundle
 
 
@@ -26,21 +32,23 @@ class RetrievalResult:
     ids: np.ndarray        # (B, k) retrieved row ids
     dists: np.ndarray      # (B, k)
     tokens: np.ndarray     # (B, P + k*chunk) augmented prompts
+    strategy: str          # strategy that served the batch (planner-aware)
 
 
 class RetrievalAugmentedServer:
-    def __init__(self, bundle: ModelBundle, params, sharded: ShardedFVS,
+    def __init__(self, bundle: ModelBundle, params, executor: Executor,
                  search_params: SearchParams,
                  doc_tokens: np.ndarray, chunk_len: int = 32,
                  embed_fn: Optional[Callable] = None):
         """doc_tokens: (N, chunk_len) token rows aligned with store rows."""
         self.bundle = bundle
         self.params = params
-        self.search = distributed_search_fn(sharded, search_params)
+        self.executor = executor
+        self.search_params = search_params
         self.k = search_params.k
         self.doc_tokens = doc_tokens
         self.chunk_len = chunk_len
-        dim = sharded.store.dim
+        dim = executor.store.dim
         if embed_fn is None:
             d_model = bundle.cfg.d_model
             key = jax.random.PRNGKey(7)
@@ -57,11 +65,13 @@ class RetrievalAugmentedServer:
                  bitmaps: jax.Array) -> RetrievalResult:
         """prompts (B, P) int32; bitmaps (B, words) — the evaluated filter."""
         q = self._embed(self.params, jnp.asarray(prompts))
-        d, ids = self.search(q, bitmaps)
-        idn = np.asarray(ids)
+        res: SearchResult = self.executor.search(q, bitmaps,
+                                                 self.search_params)
+        idn = np.asarray(res.ids)
         chunks = self.doc_tokens[np.maximum(idn, 0)]       # (B, k, chunk)
         chunks = np.where((idn >= 0)[..., None], chunks, 0)
         aug = np.concatenate(
             [chunks.reshape(idn.shape[0], -1), prompts], axis=1)
-        return RetrievalResult(ids=idn, dists=np.asarray(d),
-                               tokens=aug.astype(np.int32))
+        return RetrievalResult(ids=idn, dists=np.asarray(res.dists),
+                               tokens=aug.astype(np.int32),
+                               strategy=res.strategy)

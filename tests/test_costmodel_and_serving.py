@@ -73,7 +73,8 @@ def test_serve_engine_greedy_deterministic():
 
 
 def test_rag_retrieval_respects_filter():
-    from repro.core.distributed import build_sharded_scann
+    from repro.core.distributed import (DistributedScannExecutor,
+                                        build_sharded_scann)
     from repro.core.types import probe_bitmap
     from repro.data import DatasetSpec, make_dataset
     from repro.serving import RetrievalAugmentedServer
@@ -90,8 +91,9 @@ def test_rag_retrieval_respects_filter():
     sp = SearchParams(k=4, num_leaves_to_search=16)
     rng = np.random.RandomState(1)
     docs = rng.randint(0, cfg.vocab, (2000, 8)).astype(np.int32)
-    srv = RetrievalAugmentedServer(bundle, params, sharded, sp, docs,
-                                   chunk_len=8)
+    srv = RetrievalAugmentedServer(bundle, params,
+                                   DistributedScannExecutor(sharded), sp,
+                                   docs, chunk_len=8)
     prompts = rng.randint(0, cfg.vocab, (2, 16)).astype(np.int32)
     queries = jnp.asarray(rng.randn(2, 32).astype(np.float32))
     bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=2)

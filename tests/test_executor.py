@@ -1,0 +1,220 @@
+"""Executor layer (core/executor.py): port equivalence + planner props.
+
+Equivalence: every pre-refactor strategy entry point must be reproduced
+bit-identically by its executor port — same ids AND same SearchStats
+counters (the executor layer is plumbing, not a reimplementation).
+
+Planner: over a selectivity sweep the AdaptivePlanner must stay within
+1.5x of the per-point best *recall-qualified* fixed strategy's modeled
+SYSTEM cycles — the paper's Fig. 1 claim turned into a regression test.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (SYSTEM, AdaptivePlanner, BruteForceExecutor,
+                        GraphExecutor, ScannExecutor, SearchParams,
+                        WorkloadSpec, build_scann, cycle_breakdown,
+                        filtered_knn, generate_bitmaps, make_executor,
+                        predict_counters, recall_at_k, scann_search_batch,
+                        scann_search_batch_vmapped, search_batch,
+                        stats_table_row)
+from repro.core.costmodel import IndexShape
+from repro.core.executor import GRAPH_STRATEGIES
+
+GRAPH_PARAMS = SearchParams(k=10, ef_search=96, beam_width=512,
+                            max_hops=2048)
+SCANN_PARAMS = SearchParams(k=10, num_leaves_to_search=32, reorder_factor=4,
+                            scann_page_accounting="per_query")
+
+
+@pytest.fixture(scope="module")
+def scann_index(small_dataset):
+    store, _ = small_dataset
+    return build_scann(store, num_leaves=64, levels=2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def bitmaps_mid(small_dataset):
+    store, queries = small_dataset
+    return generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"),
+                            seed=11)
+
+
+def _assert_stats_equal(a, b, ctx=""):
+    for f in dataclasses.fields(a):
+        av, bv = np.asarray(getattr(a, f.name)), np.asarray(getattr(b, f.name))
+        assert np.array_equal(av, bv), (ctx, f.name, av, bv)
+
+
+# ---------------- port equivalence (bit-identical) ----------------
+
+@pytest.mark.parametrize("strategy", GRAPH_STRATEGIES)
+def test_graph_executor_equivalence(small_dataset, small_graph, bitmaps_mid,
+                                    strategy):
+    store, queries = small_dataset
+    ex = GraphExecutor(small_graph, store, strategy=strategy)
+    res = ex.search(queries, bitmaps_mid, GRAPH_PARAMS)
+    legacy_p = dataclasses.replace(GRAPH_PARAMS, strategy=strategy)
+    d0, i0, s0 = search_batch(small_graph, store, queries, bitmaps_mid,
+                              legacy_p)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(i0)), strategy
+    assert np.array_equal(np.asarray(res.dists), np.asarray(d0)), strategy
+    _assert_stats_equal(res.stats, s0, strategy)
+    assert res.strategy == strategy
+
+
+@pytest.mark.parametrize("pipeline", ("batched", "vmapped"))
+def test_scann_executor_equivalence(small_dataset, scann_index, bitmaps_mid,
+                                    pipeline):
+    store, queries = small_dataset
+    ex = ScannExecutor(scann_index, store, pipeline=pipeline)
+    res = ex.search(queries, bitmaps_mid, SCANN_PARAMS)
+    legacy = scann_search_batch if pipeline == "batched" \
+        else scann_search_batch_vmapped
+    d0, i0, s0 = legacy(scann_index, store, queries, bitmaps_mid,
+                        res.plan.params, use_pallas=False)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(i0))
+    assert np.array_equal(np.asarray(res.dists), np.asarray(d0))
+    _assert_stats_equal(res.stats, s0, pipeline)
+
+
+def test_bruteforce_executor_equivalence(small_dataset, bitmaps_mid):
+    store, queries = small_dataset
+    ex = BruteForceExecutor(store)
+    res = ex.search(queries, bitmaps_mid, SCANN_PARAMS)
+    d0, i0 = filtered_knn(store, queries, bitmaps_mid, SCANN_PARAMS.k)
+    assert np.array_equal(np.asarray(res.ids), np.asarray(i0))
+    assert np.array_equal(np.asarray(res.dists), np.asarray(d0))
+    # seqscan counters: fc = n, dc = popcount, closed-form predictable
+    row = stats_table_row(res.stats)
+    assert row["filter_checks"] == store.n
+    pred = predict_counters("bruteforce", IndexShape(store.n, store.dim),
+                            SCANN_PARAMS, row["distance_comps"] / store.n)
+    assert row["distance_comps"] == pytest.approx(pred["distance_comps"])
+    assert row["page_accesses_heap"] == pytest.approx(
+        pred["page_accesses_heap"])
+
+
+def test_scann_query_block_tiling_oracle(small_dataset, scann_index,
+                                         bitmaps_mid):
+    """Satellite: query-block tiling must not change ids/dists (nor any
+    counter under per_query accounting) for ANY tile size."""
+    store, queries = small_dataset
+    base = scann_search_batch(scann_index, store, queries, bitmaps_mid,
+                              SCANN_PARAMS)
+    for block in (1, 3, 8):
+        p = dataclasses.replace(SCANN_PARAMS, scann_query_block=block)
+        d, ids, stats = scann_search_batch(scann_index, store, queries,
+                                           bitmaps_mid, p)
+        assert np.array_equal(np.asarray(ids), np.asarray(base[1])), block
+        assert np.array_equal(np.asarray(d), np.asarray(base[0])), block
+        _assert_stats_equal(stats, base[2], f"block={block}")
+
+
+def test_registry_dispatch_and_errors(small_dataset, small_graph,
+                                      scann_index):
+    store, _ = small_dataset
+    assert make_executor("navix", store, graph=small_graph).name == "navix"
+    assert make_executor("scann", store, index=scann_index).name == "scann"
+    assert make_executor("bruteforce", store).name == "bruteforce"
+    with pytest.raises(ValueError):
+        make_executor("navix", store)          # graph missing
+    with pytest.raises(ValueError):
+        make_executor("scann", store)          # index missing
+    with pytest.raises(ValueError):
+        make_executor("no_such_method", store)
+
+
+# ---------------- the adaptive planner ----------------
+
+def _recall(ids, tid, k=10):
+    return float(np.mean(np.asarray(
+        jax.vmap(lambda f, t: recall_at_k(f, t, k))(ids, tid))))
+
+
+@pytest.fixture(scope="module")
+def planner_setup(small_dataset, small_graph, scann_index):
+    store, _ = small_dataset
+    planner = make_executor("adaptive", store, graph=small_graph,
+                            index=scann_index, graph_m=small_graph.m)
+    fixed = {name: ex for name, ex in planner.candidates.items()}
+    return store, planner, fixed
+
+
+PLANNER_PARAMS = SearchParams(k=10, ef_search=96, beam_width=512,
+                              max_hops=2048,
+                              scann_page_accounting="per_query")
+RECALL_FLOOR = 0.85
+
+
+@pytest.mark.parametrize("corr", ("none", "high_pos"))
+def test_planner_regret_selectivity_sweep(small_dataset, planner_setup,
+                                          corr):
+    """Property: at every selectivity the planner's modeled SYSTEM cycles
+    stay within 1.5x of the best recall-qualified fixed strategy — while
+    (asserted once per sweep) the winning strategy changes with
+    selectivity, i.e. the decision is real."""
+    store, queries = small_dataset
+    _, planner, fixed = planner_setup
+    seen_best = set()
+    for i, sel in enumerate((0.02, 0.1, 0.3, 0.7)):
+        bm = generate_bitmaps(store, queries, WorkloadSpec(sel, corr),
+                              seed=20 + i)
+        _, tid = filtered_knn(store, queries, bm, PLANNER_PARAMS.k)
+        cyc, rec = {}, {}
+        for name, ex in fixed.items():
+            r = ex.search(queries, bm, PLANNER_PARAMS)
+            cyc[name] = cycle_breakdown(r.stats, store.dim, SYSTEM)["total"]
+            rec[name] = _recall(r.ids, tid, PLANNER_PARAMS.k)
+        qualified = {m: c for m, c in cyc.items()
+                     if rec[m] >= RECALL_FLOOR} or cyc
+        best = min(qualified, key=qualified.get)
+        seen_best.add(best)
+        pres = planner.search(queries, bm, PLANNER_PARAMS)
+        pcyc = cycle_breakdown(pres.stats, store.dim, SYSTEM)["total"]
+        assert pcyc <= 1.5 * qualified[best], (
+            corr, sel, pres.strategy, best,
+            {m: round(c / 1e6, 2) for m, c in cyc.items()})
+        assert _recall(pres.ids, tid, PLANNER_PARAMS.k) >= RECALL_FLOOR, (
+            corr, sel, pres.strategy)
+    if corr == "none":
+        assert len(seen_best) >= 2      # the crossover exists (Fig. 1)
+
+
+def test_planner_decision_boundaries(small_dataset, planner_setup):
+    """Sanity on the closed-form boundaries: very low selectivity →
+    bruteforce (scan the few survivors); high selectivity → never
+    bruteforce (heap-page traffic explodes)."""
+    store, queries = small_dataset
+    _, planner, _ = planner_setup
+    lo = generate_bitmaps(store, queries, WorkloadSpec(0.005, "none"),
+                          seed=31)
+    hi = generate_bitmaps(store, queries, WorkloadSpec(0.8, "none"),
+                          seed=32)
+    assert planner.search(queries, lo, PLANNER_PARAMS).strategy == \
+        "bruteforce"
+    assert planner.search(queries, hi, PLANNER_PARAMS).strategy != \
+        "bruteforce"
+
+
+def test_planner_annotations_and_overhead(small_dataset, planner_setup,
+                                          bitmaps_mid):
+    """The plan carries estimates; the result carries the chosen strategy
+    and the stats include the planning overhead (popcount word reads)."""
+    store, queries = small_dataset
+    _, planner, fixed = planner_setup
+    plan = planner.plan(queries, bitmaps_mid, PLANNER_PARAMS)
+    np.testing.assert_allclose(plan.est_selectivity, 0.2, atol=0.01)
+    assert plan.correlation_proxy is not None
+    assert set(plan.predicted_cycles) == set(fixed)
+    res = planner.execute(plan)
+    assert res.strategy == plan.strategy
+    delegate = fixed[plan.strategy].search(queries, bitmaps_mid,
+                                           PLANNER_PARAMS)
+    extra = (np.asarray(res.stats.filter_checks)
+             - np.asarray(delegate.stats.filter_checks))
+    assert (extra >= bitmaps_mid.shape[1]).all()   # ≥ one read per word

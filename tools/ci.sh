@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# One-command CI: the full tier-1 pytest suite, then the smoke benchmarks
+# (which skip their own pytest phase — SMOKE_SKIP_TESTS — so tests run
+# exactly once).  Exit status: tests win; benchmark failures also fail.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q
+tier1=$?
+
+SMOKE_SKIP_TESTS=1 tools/smoke.sh || exit 1
+
+exit "$tier1"
