@@ -1,6 +1,7 @@
 """Core filter-agnostic FVS library (the paper's contribution in JAX)."""
 from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, SearchParams,
                               SearchResult, SearchStats, VectorStore,
+                              bitset_mark, bitset_words, bitset_zeros,
                               heap_pages_per_vector, pack_bitmap,
                               pack_bool_bitmap, probe_bitmap, recall_at_k,
                               topk_smallest, unpack_bitmap)
@@ -14,8 +15,9 @@ from repro.core.scann import (ScannIndex, build_scann, scann_search_batch,
                               scann_search_batch_vmapped)
 from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
                                   component_cycles, cycle_breakdown,
-                                  modeled_qps, predict_counters,
-                                  predict_cycles, stats_table_row)
+                                  engine_scale, modeled_qps,
+                                  predict_counters, predict_cycles,
+                                  stats_table_row)
 from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
                                  Executor, GraphExecutor, ScannExecutor,
                                  SearchPlan, make_executor,
@@ -25,13 +27,14 @@ __all__ = [
     "METRIC_COS", "METRIC_IP", "METRIC_L2", "SearchParams", "SearchResult",
     "SearchStats", "VectorStore", "heap_pages_per_vector", "pack_bitmap",
     "pack_bool_bitmap", "probe_bitmap", "recall_at_k", "topk_smallest",
-    "unpack_bitmap", "CORRELATIONS", "PAPER_SELECTIVITIES", "WorkloadSpec",
+    "unpack_bitmap", "bitset_mark", "bitset_words", "bitset_zeros",
+    "CORRELATIONS", "PAPER_SELECTIVITIES", "WorkloadSpec",
     "generate_bitmaps", "generate_grid", "generate_passing_rows",
     "filtered_knn", "knn", "HNSWGraph", "build_graph", "build_incremental",
     "search_batch", "ScannIndex", "build_scann", "scann_search_batch",
     "scann_search_batch_vmapped", "LIBRARY", "SYSTEM", "CostConstants",
-    "IndexShape", "component_cycles", "cycle_breakdown", "modeled_qps",
-    "predict_counters", "predict_cycles", "stats_table_row",
+    "IndexShape", "component_cycles", "cycle_breakdown", "engine_scale",
+    "modeled_qps", "predict_counters", "predict_cycles", "stats_table_row",
     "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
     "ScannExecutor", "SearchPlan", "make_executor", "REGISTERED_METHODS",
 ]

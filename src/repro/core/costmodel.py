@@ -70,11 +70,44 @@ LIBRARY = CostConstants(
 )
 
 
+GRAPH_STRATEGIES = ("unfiltered", "sweeping", "acorn", "navix",
+                    "iterative_scan")
+
+# Frontier-engine page-cost amortization (DESIGN.md §7): the batch-
+# synchronous engine fetches each superstep's candidate union once for the
+# whole batch (measured unique-fetch fraction ≈ 0.83–0.93 for 32 distinct
+# queries on the bench workloads) and runs the fetch+probe as batched
+# gathers instead of Q per-query scalar chains — together the effective
+# per-page cost lands at roughly half the per-query engine's (the ≥3×
+# wall-clock win in BENCH_frontier.json is page/fetch-side; distance FLOPs
+# and filter probes are counter-for-counter unchanged).  A single query
+# amortizes nothing (engine_scale returns None at batch_q ≤ 1).
+FRONTIER_PAGE_AMORT = 0.5
+
+
+def engine_scale(strategy: str, params: SearchParams,
+                 batch_q: int = 1) -> Optional[dict[str, float]]:
+    """Per-component cycle multipliers for the execution engine that will
+    actually run `strategy` (None = legacy per-query costs).  Applied
+    identically by the planner's predictions and the post-hoc breakdowns
+    so regret accounting stays in one currency."""
+    if strategy not in GRAPH_STRATEGIES or batch_q <= 1:
+        return None
+    if params.graph_exec_mode != "frontier":
+        return None
+    return {"index_page_access": FRONTIER_PAGE_AMORT,
+            "vector_retrieval": FRONTIER_PAGE_AMORT}
+
+
 def component_cycles(counters: Mapping[str, float], dim: int,
-                     constants: CostConstants = SYSTEM) -> dict[str, float]:
+                     constants: CostConstants = SYSTEM,
+                     scale: Optional[Mapping[str, float]] = None
+                     ) -> dict[str, float]:
     """Per-component modeled cycles for one query from a counter mapping
     (the Table 6 column names).  Shared by the post-hoc path (measured
-    counters) and the predictive path (closed-form expected counters)."""
+    counters) and the predictive path (closed-form expected counters).
+    `scale` (see `engine_scale`) multiplies named components — the
+    engine-mode-aware weights."""
     vec_bytes = dim * 4
     comp = {
         "index_page_access": counters["page_accesses_index"]
@@ -90,17 +123,22 @@ def component_cycles(counters: Mapping[str, float], dim: int,
         "reordering": counters["reorder_rows"]
         * constants.reorder_sort_per_row,
     }
+    if scale:
+        for k, f in scale.items():
+            comp[k] *= f
     comp["total"] = sum(comp.values())
     return comp
 
 
 def cycle_breakdown(stats: SearchStats, dim: int,
-                    constants: CostConstants = SYSTEM) -> dict[str, float]:
+                    constants: CostConstants = SYSTEM,
+                    scale: Optional[Mapping[str, float]] = None
+                    ) -> dict[str, float]:
     """Per-component modeled cycles for one query (Fig. 10 bars)."""
     s = {k: float(np.asarray(v).mean()) for k, v in stats.as_dict().items()} \
         if _is_batched(stats) else {k: float(np.asarray(v))
                                     for k, v in stats.as_dict().items()}
-    return component_cycles(s, dim, constants)
+    return component_cycles(s, dim, constants, scale)
 
 
 def _is_batched(stats: SearchStats) -> bool:
@@ -177,9 +215,15 @@ class IndexShape:
 
 
 def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
-                     selectivity: float,
-                     correlation: float = 1.0) -> dict[str, float]:
-    """Expected per-query Table 6 counters for `strategy` (DESIGN.md §6)."""
+                     selectivity: float, correlation: float = 1.0,
+                     batch_q: int = 1) -> dict[str, float]:
+    """Expected per-query Table 6 counters for `strategy` (DESIGN.md §6).
+
+    `batch_q` matters for scann under "batch" page accounting (DESIGN.md
+    §5): the batched pipeline opens each leaf once per *batch*, so the
+    expected per-query index pages shrink to E[unique leaves]/Q — with
+    leaf choices modeled as uniform draws, E[unique] = L·(1−(1−nl/L)^Q).
+    All other counters are per-query quantities under both modes."""
     n, k = shape.n, params.k
     ppv = heap_pages_per_vector(shape.dim)
     s = min(max(selectivity, 1.0 / n), 1.0)
@@ -205,7 +249,12 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
         c["filter_checks"] = float(rows)
         c["distance_comps"] = s_eff * rows + cent + r
         c["hops"] = float(nl)
-        c["page_accesses_index"] = float(nl * shape.scann_pages_per_leaf)
+        leaves_per_q = float(nl)
+        if params.scann_page_accounting == "batch" and batch_q > 1:
+            lf = float(shape.scann_leaves)
+            uniq = lf * (1.0 - (1.0 - nl / lf) ** batch_q)
+            leaves_per_q = min(uniq / batch_q, float(nl))
+        c["page_accesses_index"] = leaves_per_q * shape.scann_pages_per_leaf
         c["page_accesses_heap"] = float(r * ppv)
         c["reorder_rows"] = float(r)
         return c
@@ -266,8 +315,17 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
 
 def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
                    selectivity: float, correlation: float = 1.0,
-                   constants: CostConstants = SYSTEM) -> float:
-    """Expected per-query modeled cycles (the planner's ranking metric)."""
+                   constants: CostConstants = SYSTEM,
+                   batch_q: int = 1) -> float:
+    """Expected per-query modeled cycles (the planner's ranking metric).
+
+    `batch_q` is the size of the query batch the plan will execute with:
+    graph strategies under the frontier engine amortize page costs across
+    the batch (`engine_scale`), and scann under "batch" accounting opens
+    each leaf once per batch (`predict_counters`), so the planner's
+    graph-vs-scann decision boundary tracks the engines that will
+    actually run."""
     counters = predict_counters(strategy, shape, params, selectivity,
-                                correlation)
-    return component_cycles(counters, shape.dim, constants)["total"]
+                                correlation, batch_q)
+    return component_cycles(counters, shape.dim, constants,
+                            engine_scale(strategy, params, batch_q))["total"]

@@ -44,8 +44,7 @@ from repro.core.types import (SearchParams, SearchResult, SearchStats,
                               VectorStore, heap_pages_per_vector,
                               probe_bitmap, topk_smallest)
 
-GRAPH_STRATEGIES = ("unfiltered", "sweeping", "acorn", "navix",
-                    "iterative_scan")
+GRAPH_STRATEGIES = costmodel.GRAPH_STRATEGIES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,12 +98,13 @@ class GraphExecutor(BaseExecutor):
     vmapped beam search runs underneath."""
 
     def __init__(self, graph: HNSWGraph, store: VectorStore,
-                 strategy: str = "sweeping"):
+                 strategy: str = "sweeping", use_pallas: bool = False):
         if strategy not in GRAPH_STRATEGIES:
             raise ValueError(f"unknown graph strategy {strategy!r}")
         self.graph = graph
         self.store = store
         self.strategy = strategy
+        self.use_pallas = use_pallas
         self.name = strategy
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
@@ -114,7 +114,8 @@ class GraphExecutor(BaseExecutor):
 
     def execute(self, plan: SearchPlan) -> SearchResult:
         d, ids, stats = search_batch(self.graph, self.store, plan.queries,
-                                     plan.bitmaps, plan.params)
+                                     plan.bitmaps, plan.params,
+                                     use_pallas=self.use_pallas)
         return SearchResult(dists=d, ids=ids, stats=stats,
                             strategy=self.strategy, plan=plan)
 
@@ -314,9 +315,11 @@ class AdaptivePlanner(BaseExecutor):
                                   0.05, 20.0))
         shape = self._shape()
         s_eff = min(max(s_mean * gamma, 1.0 / n), 1.0)
+        batch_q = int(queries.shape[0])
         preds = {name: costmodel.predict_cycles(
             _strategy_kind(ex), shape, params, s_mean, gamma,
-            self.constants) for name, ex in self.candidates.items()}
+            self.constants, batch_q=batch_q)
+            for name, ex in self.candidates.items()}
         feasible = {name: p for name, p in preds.items()
                     if self._recall_feasible(_strategy_kind(
                         self.candidates[name]), shape, params, s_eff)}
@@ -379,7 +382,8 @@ def make_executor(method: str, store: VectorStore, *,
     if method in GRAPH_STRATEGIES:
         if graph is None:
             raise ValueError(f"{method!r} needs graph=")
-        return GraphExecutor(graph, store, strategy=method)
+        return GraphExecutor(graph, store, strategy=method,
+                             use_pallas=use_pallas)
     if method in ("scann", "scann_vmapped"):
         if index is None:
             raise ValueError(f"{method!r} needs index=")
@@ -394,7 +398,8 @@ def make_executor(method: str, store: VectorStore, *,
             if name == "bruteforce":
                 cands[name] = BruteForceExecutor(store)
             elif name in GRAPH_STRATEGIES and graph is not None:
-                cands[name] = GraphExecutor(graph, store, strategy=name)
+                cands[name] = GraphExecutor(graph, store, strategy=name,
+                                            use_pallas=use_pallas)
             elif name in ("scann", "scann_vmapped") and index is not None:
                 cands[name] = ScannExecutor(
                     index, store, pipeline="batched" if name == "scann"

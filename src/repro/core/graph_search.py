@@ -33,8 +33,10 @@ import jax.numpy as jnp
 
 from repro.core.hnsw import HNSWGraph
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
-                              distance, heap_pages_per_vector,
-                              probe_bitmap, topk_smallest)
+                              bitset_mark, bitset_words, distance,
+                              heap_pages_per_vector, probe_bitmap,
+                              topk_smallest)
+from repro.kernels import ops as kops
 
 INF = jnp.inf
 
@@ -109,20 +111,31 @@ def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats):
 # Strategies differ only in which masks gate scoring/insertion/counting.
 # ---------------------------------------------------------------------------
 
-def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited):
+def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited,
+            two_hop: bool = True):
+    """1-hop (and, for filter-first strategies, 2-hop) neighborhood fetch.
+
+    `two_hop` is a static flag: traversal-first strategies (unfiltered /
+    sweeping / iterative_scan) never read the 2-hop block, so the (2M, 2M)
+    gather + distance computation is gated out of their traces entirely
+    instead of relying on XLA dead-code elimination.
+    """
     nb1 = graph.neighbors[0, node]                      # (2M,)
     v1 = nb1 >= 0
     unv1 = v1 & ~visited[jnp.maximum(nb1, 0)]
     pass1 = probe_bitmap(bitmap, nb1)
     d1 = jnp.where(v1, _gather_vec_dist(store, q, nb1), INF)
+    e = dict(nb1=nb1, v1=v1, unv1=unv1, pass1=pass1, d1=d1)
+    if not two_hop:
+        return e
     nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]       # (2M, 2M)
     nb2 = jnp.where(v1[:, None], nb2, -1)
     v2 = nb2 >= 0
     pass2 = probe_bitmap(bitmap, nb2)
     unv2 = v2 & ~visited[jnp.maximum(nb2, 0)]
     d2 = jnp.where(v2, _gather_vec_dist(store, q, nb2), INF)
-    return dict(nb1=nb1, v1=v1, unv1=unv1, pass1=pass1, d1=d1,
-                nb2=nb2, v2=v2, unv2=unv2, pass2=pass2, d2=d2)
+    e.update(nb2=nb2, v2=v2, unv2=unv2, pass2=pass2, d2=d2)
+    return e
 
 
 def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
@@ -167,7 +180,8 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
         pool_d = pool_d.at[j].set(INF)
         pool_id = pool_id.at[j].set(-1)
 
-        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited)
+        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited,
+                    two_hop=strat in ("acorn", "navix"))
         dc = fc = pai = pah = tm = jnp.int32(0)
         pai += 1  # step ①: current node's index page
 
@@ -180,8 +194,11 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
             cd = jnp.where(score_m, e["d1"], INF)
             cid = jnp.where(score_m, e["nb1"], -1)
             pool_d, pool_id = _pool_insert(pool_d, pool_id, cd, cid)
-            visited = visited.at[jnp.maximum(e["nb1"], 0)].set(
-                visited[jnp.maximum(e["nb1"], 0)] | score_m)
+            # scatter-max, not gather-or-set: -1 padding also maps to slot
+            # 0, and a duplicate-index .set() would let a padding entry
+            # clobber node 0's freshly written visited bit back to False
+            # (node 0 then re-scores forever via 2-hop cycles)
+            visited = visited.at[jnp.maximum(e["nb1"], 0)].max(score_m)
             if strat == "sweeping":
                 # filter-check only candidates that would enter W
                 would = score_m & (cd < w_worst)
@@ -277,8 +294,8 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
             cd = jnp.where(uniq, cd, INF)
             cid = jnp.where(uniq, cid, -1)
             pool_d, pool_id = _pool_insert(pool_d, pool_id, cd, cid)
-            visited = visited.at[jnp.maximum(cid, 0)].set(
-                visited[jnp.maximum(cid, 0)] | (cid >= 0))
+            # scatter-max: order-safe for the -1 → slot-0 padding collisions
+            visited = visited.at[jnp.maximum(cid, 0)].max(cid >= 0)
             w_d, w_id = _insert_sorted(w_d, w_id, cd, cid)
 
         st = SearchStats(st.distance_comps + dc, st.filter_checks + fc,
@@ -391,14 +408,15 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
         # ---- normal expansion path (only applied when ~batch_done)
         pool_d2 = pool_d.at[j].set(INF)
         pool_id2 = pool_id.at[j].set(-1)
-        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited)
+        e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited,
+                    two_hop=False)
         score_m = e["unv1"]
         n_s = score_m.sum()
         cd = jnp.where(score_m, e["d1"], INF)
         cid = jnp.where(score_m, e["nb1"], -1)
         pool_d2, pool_id2 = _pool_insert(pool_d2, pool_id2, cd, cid)
-        visited2 = visited.at[jnp.maximum(e["nb1"], 0)].set(
-            visited[jnp.maximum(e["nb1"], 0)] | score_m)
+        # scatter-max: order-safe for the -1 → slot-0 padding collisions
+        visited2 = visited.at[jnp.maximum(e["nb1"], 0)].max(score_m)
         w_d2, w_id2 = _insert_sorted(w_d, w_id, cd, cid)
 
         st2 = SearchStats(
@@ -431,12 +449,554 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
     return dk, out_ids, stats
 
 
-@partial(jax.jit, static_argnames=("params",))
+@partial(jax.jit, static_argnames=("params", "use_pallas"))
 def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
-                 params: SearchParams):
-    """vmapped filtered search. queries (Q, d), bitmaps (Q, words).
+                 params: SearchParams, use_pallas: bool = False):
+    """Batched filtered graph search. queries (Q, d), bitmaps (Q, words).
+
+    `params.graph_exec_mode` picks the engine (DESIGN.md §7):
+
+      "frontier"  — batch-synchronous superstep engine: all queries advance
+                    one hop per superstep, candidate vectors are fetched
+                    through a deduplicated union block (Pallas path),
+                    scoring is chunked to the candidates each strategy
+                    actually needs (fused `frontier_scan` kernel / oracle,
+                    lazy 2-hop + visited-probe dedup for filter-first),
+                    visited sets live in packed uint32 bitsets, and the
+                    pool pop folds into the insertion merge.  Bit-identical
+                    ids/dists/SearchStats to the legacy path
+                    (tests/test_frontier.py).
+      "vmapped"   — the legacy per-query beam loop under `jax.vmap`, kept
+                    as the equivalence oracle and microbenchmark baseline.
 
     Returns (dists (Q, k), ids (Q, k), SearchStats with (Q,) leaves).
     """
-    return jax.vmap(lambda q, b: _search_single(graph, store, q, b, params))(
-        queries, bitmaps)
+    mode = params.graph_exec_mode
+    if mode == "vmapped":
+        return jax.vmap(
+            lambda q, b: _search_single(graph, store, q, b, params))(
+                queries, bitmaps)
+    if mode != "frontier":
+        raise ValueError(f"unknown graph_exec_mode {mode!r}; "
+                         "expected 'frontier' or 'vmapped'")
+    return _frontier_search_batch(graph, store, queries, bitmaps, params,
+                                  use_pallas)
+
+
+# ===========================================================================
+# Batch-synchronous frontier engine (DESIGN.md §7).
+#
+# The legacy path above runs Q independent beam searches under `jax.vmap`;
+# every query re-gathers its own neighborhood vectors from HBM each hop and
+# re-sorts its pool/W with a full `lax.top_k`.  The frontier engine keeps
+# the *same per-query state machine* (same pop order, same masks, same
+# counter formulas — bit-identical outputs) but restructures each
+# superstep's hot work batch-wide:
+#
+#   * candidate vectors are fetched once per superstep through the
+#     deduplicated union of every query's candidates (`_union_gather`);
+#   * only candidates a strategy actually needs distances for are scored —
+#     compacted and processed in fixed-size chunks through the fused
+#     `frontier_scan` kernel/oracle (lazy 2-hop for filter-first);
+#   * per-query visited sets are packed uint32 bitsets probed with the
+#     same machinery as the filter bitmaps;
+#   * the filter-first 2-hop stage is lazy: only passing/unvisited/
+#     deduplicated survivors are gathered and scored, with the legacy
+#     per-hop argsort dedup replaced by chunked visited-probe dedup;
+#   * the pool stays sorted (so the pop is always slot 0) and the pop is
+#     folded into the insertion merge (`_merge_smallest`).
+# ===========================================================================
+
+
+def _compact_positions(mask, pad_to: int):
+    """Positions of True entries of `mask`, in order, -1-padded to pad_to.
+
+    Gather-only (cumsum + searchsorted): XLA CPU scatters cost ~250 ns per
+    scalar update, so the scatter formulation would dominate a superstep.
+    """
+    m = mask.shape[0]
+    cs = jnp.cumsum(mask.astype(jnp.int32))
+    pos = jnp.searchsorted(cs, jnp.arange(1, pad_to + 1, dtype=jnp.int32))
+    return jnp.where(jnp.arange(pad_to) < cs[m - 1], pos.astype(jnp.int32),
+                     -1)
+
+
+def _union_gather(store: VectorStore, ids, dedup: bool):
+    """Fetch vectors (+ norms) for a (Q, C) id block.
+
+    With `dedup` (the Pallas/TPU path) the fetch goes through the
+    deduplicated union: each distinct node is gathered from the (n, d)
+    HBM store once per call, then per-query rows are re-gathered from the
+    small union block — the frontier fetch-amortization (DESIGN.md §7).
+    Without it (the CPU oracle path) rows are gathered directly; gathers
+    preserve values exactly, so downstream distances are bit-identical
+    either way.
+    """
+    qn, c = ids.shape
+    safe = jnp.maximum(ids, 0)
+    if not dedup:
+        return store.vectors[safe], store.norms_sq[safe]
+    flat = safe.reshape(-1).astype(jnp.int32)
+    s = jnp.sort(flat)
+    firsts = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
+    rank = jnp.cumsum(firsts) - 1
+    uniq = jnp.full((qn * c,), store.n, jnp.int32).at[rank].set(s)
+    pos = jnp.searchsorted(uniq, flat)
+    safe_u = jnp.minimum(uniq, store.n - 1)
+    blk = store.vectors[safe_u]                 # the one HBM fetch per node
+    bn = store.norms_sq[safe_u]
+    return blk[pos].reshape(qn, c, -1), bn[pos].reshape(qn, c)
+
+
+def _merge_smallest(buf_d, buf_id, cand_d, cand_id, drop_head=None):
+    """Keep the B smallest of buffer ∪ candidates, sorted ascending.
+
+    This is exactly the legacy `_pool_insert`/`_insert_sorted` concat +
+    `topk_smallest` (same multiset, same stable tie order: buffer entries
+    first, then candidates in order), batched over queries — measured
+    faster on CPU than rank-merge or scatter formulations at the queue
+    widths the engine runs (lax.top_k's sort machinery wins once the
+    buffer is register-tiled).  `drop_head` (per-row bool) additionally
+    drops the buffer's slot 0 — the pool pop, folded in as a masked shift
+    so popping never rebuilds the pool separately.
+    """
+    qn, b = buf_d.shape
+    if drop_head is not None:
+        sd = jnp.concatenate([buf_d[:, 1:], jnp.full((qn, 1), INF)], 1)
+        si = jnp.concatenate(
+            [buf_id[:, 1:], jnp.full((qn, 1), -1, jnp.int32)], 1)
+        buf_d = jnp.where(drop_head[:, None], sd, buf_d)
+        buf_id = jnp.where(drop_head[:, None], si, buf_id)
+    d = jnp.concatenate([buf_d, cand_d], 1)
+    i = jnp.concatenate([buf_id, cand_id], 1)
+
+    def one(dq, iq):
+        nd, pos = topk_smallest(dq, b)
+        return nd, iq[pos]
+
+    return jax.vmap(one)(d, i)
+
+
+def _probe_batch(words, ids):
+    """Per-query packed-bitset probe: (Q, W) words × (Q, ...) ids."""
+    flat = ids.reshape(ids.shape[0], -1)
+    return jax.vmap(probe_bitmap)(words, flat).reshape(ids.shape)
+
+
+_mark_batch = jax.vmap(bitset_mark)
+
+
+def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
+                         chunk: int, pool, w, visited, use_pallas: bool,
+                         sweep_worst=None, dedup: bool = False,
+                         drop_head=None):
+    """Score the selected candidates chunk-at-a-time and merge them into
+    the pool and result queue, marking them visited as chunks complete.
+
+    cand_ids (Q, m) int32, sel_mask (Q, m): candidates needing distances.
+    Chunks walk the compacted positions in flat order, so insertion order
+    (and hence tie behaviour) matches the legacy single-shot insert.
+
+    When `sweep_worst` is given (sweeping), W-insertion is gated by
+    d < sweep_worst (captured at superstep start, like the legacy body)
+    AND the filter probe, and the per-query would-enter-W count is
+    returned (the sweeping filter-check counter).
+
+    With `dedup` (filter-first 2-hop), candidates already marked visited —
+    by a previous chunk or by the pre-marked 1-hop stage — are dropped,
+    and first-occurrence wins inside a chunk: together this reproduces the
+    legacy `_dedup_first` over the whole concat, one small chunk at a
+    time, without its O(m log m) argsort over the full 2-hop block.
+    Without `dedup` the caller guarantees distinct candidates (neighbor
+    lists are duplicate-free) and marking happens inside the loop anyway.
+
+    `drop_head` (per-query bool) folds the superstep's pool pop into the
+    first insertion.
+
+    Returns (pool_d, pool_id, w_d, w_id, visited, n_would).
+    """
+    qn, m = cand_ids.shape
+    c = m if chunk <= 0 else min(chunk, m)
+    pool_d, pool_id = pool
+    w_d, w_id = w
+
+    def insert(pd, pi, wd, wi, cd, cids, pch, nw, drop):
+        if sweep_worst is not None:
+            would = (cids >= 0) & (cd < sweep_worst[:, None])
+            nw = nw + would.sum(-1).astype(jnp.int32)
+            wd_in = jnp.where(would & pch, cd, INF)
+            wi_in = jnp.where(would & pch, cids, -1)
+        else:
+            wd_in, wi_in = cd, cids
+        pd, pi = _merge_smallest(pd, pi, cd, cids, drop)
+        wd, wi = _merge_smallest(wd, wi, wd_in, wi_in)
+        return pd, pi, wd, wi, nw
+
+    if c >= m:
+        # single-chunk fast path: no compaction, no inner loop — score the
+        # masked candidates in place (at 1-hop width the compaction
+        # machinery costs more than the gathers it would save)
+        nw = jnp.zeros((qn,), jnp.int32)
+        cids = jnp.where(sel_mask, cand_ids, -1)
+        if dedup:
+            seen = jax.vmap(probe_bitmap)(visited, cids)
+            first = jax.vmap(_dedup_first)(cids)
+            cids = jnp.where(first & ~seen, cids, -1)
+        valid = cids >= 0
+        vecs, nsq = _union_gather(store, cids, dedup=use_pallas)
+        dch, pch = kops.frontier_scan(queries, vecs, nsq, cids, bitmaps,
+                                      metric=store.metric,
+                                      use_pallas=use_pallas)
+        cd = jnp.where(valid, dch, INF)
+        pool_d, pool_id, w_d, w_id, nw = insert(
+            pool_d, pool_id, w_d, w_id, cd, cids, pch, nw, drop_head)
+        visited = _mark_batch(visited, cids, valid)
+        return pool_d, pool_id, w_d, w_id, visited, nw
+
+    # chunked path: pop up front (the loop may run zero iterations)
+    if drop_head is not None:
+        pool_d = jnp.where(
+            drop_head[:, None],
+            jnp.concatenate([pool_d[:, 1:], jnp.full((qn, 1), INF)], 1),
+            pool_d)
+        pool_id = jnp.where(
+            drop_head[:, None],
+            jnp.concatenate(
+                [pool_id[:, 1:], jnp.full((qn, 1), -1, jnp.int32)], 1),
+            pool_id)
+    padlen = -(-m // c) * c
+    pos = jax.vmap(lambda mk: _compact_positions(mk, padlen))(sel_mask)
+    count = sel_mask.sum(-1)
+
+    def chunk_cond(cs):
+        return (cs[0] * c < count).any()
+
+    def chunk_body(cs):
+        i, pd, pi, wd, wi, vis, nw = cs
+        cpos = jax.lax.dynamic_slice_in_dim(pos, i * c, c, axis=1)
+        valid = cpos >= 0
+        cids = jnp.where(
+            valid, jnp.take_along_axis(cand_ids, jnp.maximum(cpos, 0), 1),
+            -1)
+        if dedup:
+            seen = jax.vmap(probe_bitmap)(vis, cids)
+            first = jax.vmap(_dedup_first)(cids)
+            cids = jnp.where(first & ~seen, cids, -1)
+        valid = cids >= 0
+        vecs, nsq = _union_gather(store, cids, dedup=use_pallas)
+        dch, pch = kops.frontier_scan(queries, vecs, nsq, cids, bitmaps,
+                                      metric=store.metric,
+                                      use_pallas=use_pallas)
+        cd = jnp.where(valid, dch, INF)
+        pd, pi, wd, wi, nw = insert(pd, pi, wd, wi, cd, cids, pch, nw, None)
+        vis = _mark_batch(vis, cids, valid)
+        return i + 1, pd, pi, wd, wi, vis, nw
+
+    _, pool_d, pool_id, w_d, w_id, visited, n_would = jax.lax.while_loop(
+        chunk_cond, chunk_body,
+        (jnp.int32(0), pool_d, pool_id, w_d, w_id, visited,
+         jnp.zeros((qn,), jnp.int32)))
+    return pool_d, pool_id, w_d, w_id, visited, n_would
+
+
+def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
+                   params: SearchParams, entry, entry_d, stats: SearchStats,
+                   ef_result: int, use_pallas: bool):
+    """Superstep-driven port of `_base_search` over the whole query batch.
+
+    Per-query control flow (pop order, masks, counter formulas) matches the
+    legacy body exactly; only the physical execution differs (chunked
+    need-only scoring, packed visited, fold-the-pop merges).  Stopped/finished
+    lanes are frozen by gating: their pops are suppressed, their candidate
+    masks zeroed (an all-INF merge is an exact identity), and their counter
+    increments masked — the same per-lane semantics the legacy vmapped
+    while_loop provides by select.  Returns (W_d, W_id sorted asc, stats).
+    """
+    n = graph.n
+    qn = queries.shape[0]
+    p = params.beam_width
+    strat = params.strategy
+    ppv = _pages_per_vector(store.dim)
+    deg = graph.neighbors.shape[2]
+    nw = bitset_words(n)
+    tm_on = params.translation_map
+    we_idx = params.ef_search - 1 if ef_result >= params.ef_search \
+        else ef_result - 1
+
+    pool_d = jnp.full((qn, p), INF).at[:, 0].set(entry_d)
+    pool_id = jnp.full((qn, p), -1, jnp.int32).at[:, 0].set(entry)
+    visited = _mark_batch(jnp.zeros((qn, nw), jnp.uint32), entry[:, None],
+                          jnp.ones((qn, 1), bool))
+    w_d = jnp.full((qn, ef_result), INF)
+    w_id = jnp.full((qn, ef_result), -1, jnp.int32)
+    entry_pass = _probe_batch(bitmaps, entry[:, None])[:, 0]
+    seed_ok = entry_pass | (strat in ("unfiltered", "iterative_scan"))
+    w_d = jnp.where(seed_ok[:, None], w_d.at[:, 0].set(entry_d), w_d)
+    w_id = jnp.where(seed_ok[:, None], w_id.at[:, 0].set(entry), w_id)
+
+    def cond(state):
+        return ~state[-1].all()
+
+    def body(state):
+        pool_d, pool_id, w_d, w_id, visited, st, done = state
+        # the pool is kept sorted ascending, so the legacy argmin-pop is
+        # always slot 0; the pop itself is folded into the insertions
+        best_d, best_id = pool_d[:, 0], pool_id[:, 0]
+        w_worst = w_d[:, we_idx]
+        stop = (best_d > w_worst) | jnp.isinf(best_d) | \
+            (st.hops >= params.max_hops)
+        active = ~done & ~stop
+        node = jnp.maximum(best_id, 0)
+
+        nb1 = graph.neighbors[0, node]                       # (Q, deg)
+        v1 = nb1 >= 0
+        unv1 = v1 & ~_probe_batch(visited, nb1)
+
+        z = jnp.zeros((qn,), jnp.int32)
+        dc = fc = pai = pah = tm = z
+        pai = pai + 1                      # step ①: current node's index page
+
+        if strat in ("unfiltered", "sweeping"):
+            # -------- traversal-first: score every unvisited 1-hop neighbor
+            score_m = unv1
+            n_s = score_m.sum(-1).astype(jnp.int32)
+            dc = dc + n_s
+            pah = pah + n_s * ppv
+            (pool_d2, pool_id2, w_d2, w_id2, visited2,
+             n_w) = _score_insert_chunks(
+                queries, bitmaps, store, nb1, score_m & active[:, None],
+                params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
+                visited, use_pallas,
+                sweep_worst=w_worst if strat == "sweeping" else None,
+                drop_head=active)
+            if strat == "sweeping":
+                fc = fc + n_w
+                tm = tm + jnp.where(tm_on, n_w, 0)
+                pai = pai + jnp.where(tm_on, 0, n_w)
+        else:
+            # -------- filter-first (acorn / navix): predicate subgraph
+            vecs1, nsq1 = _union_gather(store, nb1, dedup=use_pallas)
+            d1, pass1 = kops.frontier_scan(queries, vecs1, nsq1, nb1,
+                                           bitmaps, metric=store.metric,
+                                           use_pallas=use_pallas)
+            n1 = v1.sum(-1).astype(jnp.int32)
+            fc = fc + n1                               # check all 1-hop
+            tm = tm + jnp.where(tm_on, n1, 0)
+            pai = pai + jnp.where(tm_on, 0, n1)
+            pass1v = pass1 & v1
+            local_sel = pass1v.sum(-1) / jnp.maximum(n1, 1)
+
+            if strat == "acorn":
+                do_directed = jnp.zeros((qn,), bool)
+                do_twohop_all = jnp.ones((qn,), bool)
+            else:  # navix heuristics
+                h = params.navix_heuristic
+                if h == "blind":
+                    do_directed = jnp.zeros((qn,), bool)
+                    do_twohop_all = jnp.ones((qn,), bool)
+                elif h == "directed":
+                    do_directed = jnp.ones((qn,), bool)
+                    do_twohop_all = jnp.zeros((qn,), bool)
+                elif h == "onehop":
+                    do_directed = jnp.zeros((qn,), bool)
+                    do_twohop_all = jnp.zeros((qn,), bool)
+                else:  # adaptive-local (paper §2.3.4)
+                    do_directed = (local_sel > 0.08) & (local_sel <= 0.35)
+                    do_twohop_all = local_sel <= 0.08
+
+            # 1-hop: score the passing, unvisited ones
+            s1 = pass1v & unv1
+            n_s1 = s1.sum(-1).astype(jnp.int32)
+            dc = dc + n_s1
+            pah = pah + n_s1 * ppv
+
+            # decide which branches expand to 2 hops
+            expand_branch = v1
+            if params.adaptive_skip_2hop:
+                expand_branch = expand_branch & ~pass1v
+            if strat == "navix" and params.navix_heuristic in ("directed",
+                                                               "adaptive"):
+                rank = jnp.argsort(jnp.where(v1, d1, INF), axis=-1)
+                topr = jax.vmap(
+                    lambda r: jnp.zeros((deg,), bool)
+                    .at[r[: max(1, deg // 4)]].set(True))(rank)
+                directed_branch = expand_branch & topr
+                expand_branch = jnp.where(
+                    do_twohop_all[:, None], expand_branch,
+                    jnp.where(do_directed[:, None], directed_branch, False))
+                extra_rank_dc = jnp.where(
+                    do_directed, (v1 & ~s1).sum(-1), 0).astype(jnp.int32)
+                dc = dc + extra_rank_dc
+                pah = pah + extra_rank_dc * ppv
+            elif strat == "navix" and params.navix_heuristic == "onehop":
+                expand_branch = jnp.zeros_like(expand_branch)
+
+            n_exp = expand_branch.sum(-1).astype(jnp.int32)
+            pai = pai + n_exp                          # step ②: branch pages
+            nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
+            nb2 = jnp.where(v1[:, :, None], nb2, -1)
+            v2 = nb2 >= 0
+            pass2 = _probe_batch(bitmaps, nb2)
+            unv2 = v2 & ~_probe_batch(visited, nb2)
+            m2 = v2 & expand_branch[:, :, None]
+            n2 = m2.sum((-2, -1)).astype(jnp.int32)
+            fc = fc + n2                               # step ④: 2-hop checks
+            tm = tm + jnp.where(tm_on, n2, 0)
+            pai = pai + jnp.where(tm_on, 0, n2)
+            s2 = m2 & pass2 & unv2
+            n_s2 = s2.sum((-2, -1)).astype(jnp.int32)
+            dc = dc + n_s2                             # step ⑤
+            pah = pah + n_s2 * ppv
+
+            # 1-hop insertion + marking first (neighbor lists are
+            # duplicate-free, so every s1 candidate is a first occurrence
+            # of the legacy concat dedup); the pool pop rides along
+            ins1 = s1 & active[:, None]
+            in1_d = jnp.where(ins1, d1, INF)
+            in1_i = jnp.where(ins1, nb1, -1)
+            pool_d2, pool_id2 = _merge_smallest(pool_d, pool_id, in1_d,
+                                                in1_i, active)
+            w_d2, w_id2 = _merge_smallest(w_d, w_id, in1_d, in1_i)
+            visited2 = _mark_batch(visited, nb1, ins1)
+            # lazy 2-hop: survivors of the chunked visited-probe dedup are
+            # the exact survivors of the legacy `_dedup_first` (1-hop
+            # occurrences were just marked, earlier chunks mark as they go)
+            cid2 = jnp.where(s2, nb2, -1).reshape(qn, deg * deg)
+            (pool_d2, pool_id2, w_d2, w_id2, visited2,
+             _) = _score_insert_chunks(
+                queries, bitmaps, store, cid2, s2.reshape(qn, deg * deg)
+                & active[:, None], params.frontier_chunk2,
+                (pool_d2, pool_id2), (w_d2, w_id2), visited2, use_pallas,
+                dedup=True)
+
+        inc = lambda v: jnp.where(active, v, 0)
+        st2 = SearchStats(st.distance_comps + inc(dc),
+                          st.filter_checks + inc(fc),
+                          st.hops + inc(jnp.int32(1)),
+                          st.page_accesses_index + inc(pai),
+                          st.page_accesses_heap + inc(pah),
+                          st.tmap_lookups + inc(tm), st.reorder_rows)
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, st2, done | stop)
+
+    state = (pool_d, pool_id, w_d, w_id, visited, stats,
+             jnp.zeros((qn,), bool))
+    pool_d, pool_id, w_d, w_id, visited, stats, _ = jax.lax.while_loop(
+        cond, body, state)
+    return w_d, w_id, stats
+
+
+def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
+                        bitmaps, params: SearchParams, entry, entry_d,
+                        stats: SearchStats, use_pallas: bool):
+    """Superstep port of `_iterative_scan` (pgvector resumable post-filter).
+
+    Same per-query emit/resume logic and counters as the legacy body; the
+    expansion path shares the traversal-first chunked machinery, and the
+    big (EFMAX,) result buffer is maintained with O(EFMAX) gather merges
+    instead of a per-hop top_k over EFMAX + 2M candidates.
+    """
+    n = graph.n
+    qn = queries.shape[0]
+    p = params.beam_width
+    ppv = _pages_per_vector(store.dim)
+    nw = bitset_words(n)
+    efmax = params.batch_tuples * params.max_rounds
+    tm_on = params.translation_map
+
+    pool_d = jnp.full((qn, p), INF).at[:, 0].set(entry_d)
+    pool_id = jnp.full((qn, p), -1, jnp.int32).at[:, 0].set(entry)
+    visited = _mark_batch(jnp.zeros((qn, nw), jnp.uint32), entry[:, None],
+                          jnp.ones((qn, 1), bool))
+    w_d = jnp.full((qn, efmax), INF).at[:, 0].set(entry_d)
+    w_id = jnp.full((qn, efmax), -1, jnp.int32).at[:, 0].set(entry)
+
+    def cond(state):
+        return ~state[-1].all()
+
+    def body(state):
+        (pool_d, pool_id, w_d, w_id, visited, st, eff, rnd, checked,
+         done) = state
+        best_d, best_id = pool_d[:, 0], pool_id[:, 0]
+        w_worst = jnp.take_along_axis(
+            w_d, (jnp.minimum(eff, efmax) - 1)[:, None], axis=1)[:, 0]
+        batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
+            (st.hops >= params.max_hops)
+        live = ~done
+        active = live & ~batch_done          # lanes that expand this step
+
+        # ---- resume/emit path: filter the batch, maybe extend the scan
+        in_batch = jnp.arange(efmax)[None, :] < eff[:, None]
+        n_pass = (_probe_batch(bitmaps, w_id) & in_batch &
+                  (w_id >= 0)).sum(-1)
+        newly = jnp.maximum(jnp.minimum(eff, efmax) - checked, 0)
+        fc_emit = jnp.where(live & batch_done, newly, 0)
+        tm_emit = jnp.where(tm_on, fc_emit, 0)
+        pai_emit = jnp.where(tm_on, 0, fc_emit)
+        enough = n_pass >= params.k
+        exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
+            (rnd + 1 >= params.max_rounds)
+        finish = batch_done & (enough | exhausted)
+        extend = live & batch_done & ~finish
+        eff2 = jnp.where(extend, eff + params.batch_tuples, eff)
+        rnd2 = jnp.where(extend, rnd + 1, rnd)
+        checked2 = jnp.where(live & batch_done, jnp.minimum(eff, efmax),
+                             checked)
+
+        # ---- normal expansion path (gated to active lanes)
+        node = jnp.maximum(best_id, 0)
+        nb1 = graph.neighbors[0, node]
+        score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
+        n_s = score_m.sum(-1).astype(jnp.int32)
+        (pool_d2, pool_id2, w_d2, w_id2, visited2,
+         _) = _score_insert_chunks(
+            queries, bitmaps, store, nb1, score_m & active[:, None],
+            params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
+            visited, use_pallas, drop_head=active)
+
+        inc = lambda v: jnp.where(active, v, 0)
+        st2 = SearchStats(
+            st.distance_comps + inc(n_s),
+            st.filter_checks + fc_emit,
+            st.hops + inc(jnp.int32(1)),
+            st.page_accesses_index + inc(jnp.int32(1)) + pai_emit,
+            st.page_accesses_heap + inc(n_s * ppv),
+            st.tmap_lookups + tm_emit, st.reorder_rows)
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, st2, eff2, rnd2,
+                checked2, done | (live & finish))
+
+    state = (pool_d, pool_id, w_d, w_id, visited, stats,
+             jnp.full((qn,), params.batch_tuples, jnp.int32),
+             jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
+             jnp.zeros((qn,), bool))
+    pool_d, pool_id, w_d, w_id, visited, stats, eff, rnd, checked, _ = \
+        jax.lax.while_loop(cond, body, state)
+
+    def emit(d, ids, bm, eff_q):
+        in_batch = jnp.arange(efmax) < eff_q
+        dm = jnp.where(in_batch, d, INF)
+        im = jnp.where(in_batch, ids, -1)
+        dk, pos = topk_smallest(
+            jnp.where(probe_bitmap(bm, im) & (im >= 0), dm, INF), params.k)
+        return dk, jnp.where(jnp.isinf(dk), -1, im[pos])
+
+    dk, out_ids = jax.vmap(emit)(w_d, w_id, bitmaps, eff)
+    return dk, out_ids, stats
+
+
+def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
+                           bitmaps, params: SearchParams, use_pallas: bool):
+    entry, entry_d, stats = jax.vmap(
+        lambda q: _zoom_in(graph, store, q, SearchStats.zeros()))(queries)
+    if params.strategy == "iterative_scan":
+        return _frontier_iterative(graph, store, queries, bitmaps, params,
+                                   entry, entry_d, stats, use_pallas)
+    w_d, w_id, stats = _frontier_base(graph, store, queries, bitmaps, params,
+                                      entry, entry_d, stats,
+                                      ef_result=params.ef_search,
+                                      use_pallas=use_pallas)
+    check = params.strategy in ("unfiltered",)
+    dk, ids = jax.vmap(
+        lambda wd, wi, bm: _finalize(wd, wi, bm, params.k,
+                                     check_filter=not check))(
+                                         w_d, w_id, bitmaps)
+    return dk, ids, stats

@@ -111,6 +111,38 @@ def unpack_bitmap(bitmap: np.ndarray | Array, n: int) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Packed bitsets over row ids.  The filter bitmaps above are the read-only
+# instance; the frontier graph engine also keeps its per-query *visited* set
+# in the same uint32-word layout (8x less in-flight state than an (n,) bool
+# array) and probes it with the same `probe_bitmap`.
+# ---------------------------------------------------------------------------
+
+def bitset_words(n: int) -> int:
+    """Words needed for a packed bitset over n row ids."""
+    return (n + 31) // 32
+
+
+def bitset_zeros(n: int) -> Array:
+    return jnp.zeros((bitset_words(n),), jnp.uint32)
+
+
+def bitset_mark(words: Array, row_ids: Array, mask: Array) -> Array:
+    """Set the bits of `row_ids[mask]` in a packed bitset.
+
+    Contract: the masked ids must be distinct and currently unset (the
+    scatter adds each bit's weight, so a repeated or already-set bit would
+    carry into neighboring bits).  Every engine call site guarantees this:
+    marked nodes are filtered through an unvisited mask and deduplicated
+    first.  Negative ids are ignored regardless of `mask`.
+    """
+    live = mask & (row_ids >= 0)
+    safe = jnp.maximum(row_ids, 0)
+    bit = jnp.where(live, jnp.uint32(1) << (safe & 31).astype(jnp.uint32),
+                    jnp.uint32(0))
+    return words.at[(safe >> 5).reshape(-1)].add(bit.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
 # Search statistics — the exact columns of the paper's Table 6, carried as a
 # pytree through every jitted search loop.
 # ---------------------------------------------------------------------------
@@ -152,6 +184,20 @@ class SearchParams:
     adaptive_skip_2hop: bool = True  # the paper's "hardened ACORN" optimization
     translation_map: bool = True   # paper §3.1 optimization (i); Fig. 13 ablation
     navix_heuristic: str = "adaptive"  # blind|directed|onehop|adaptive
+    # Graph execution engine (DESIGN.md §7): "frontier" advances the whole
+    # query batch one superstep at a time with deduplicated union fetches,
+    # packed visited bitsets, and chunked need-only scoring; "vmapped" is
+    # the legacy per-query beam loop kept as the bit-identical oracle.
+    graph_exec_mode: str = "frontier"
+    # Frontier-engine chunk sizes (DESIGN.md §7): candidates that actually
+    # need scoring are compacted and scored `chunk` at a time.  0 = score
+    # the full candidate width in one pass (no compaction) — the right
+    # call for the (2M,)-wide 1-hop stage, where compaction machinery
+    # costs more than the gathers it saves; `frontier_chunk2` sizes the
+    # lazy 2-hop chunks of the filter-first strategies, whose (2M·2M)
+    # candidate block is mostly never scored.
+    frontier_chunk: int = 0
+    frontier_chunk2: int = 64
     # ScaNN knobs:
     num_leaves_to_search: int = 32
     reorder_factor: int = 4        # rescoring budget = k * reorder_factor

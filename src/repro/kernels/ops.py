@@ -19,6 +19,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.frontier_scan import frontier_scan_pallas
 from repro.kernels.leaf_scan import leaf_scan_batched_pallas, leaf_scan_pallas
 from repro.kernels.topk import topk_pallas
 
@@ -58,6 +59,24 @@ def leaf_scan_batched(queries, tiles, rowids, scale, mean, bitmaps,
                                         interpret=_interpret())
     return ref.leaf_scan_batched_ref(queries, tiles, rowids, scale, mean,
                                      bitmaps, row_norms_sq, metric)
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def frontier_scan(queries, vecs, norms, ids, bitmaps, metric: str = "l2",
+                  use_pallas: bool = False):
+    """Fused frontier-chunk scoring + filter probe for the graph engine
+    (DESIGN.md §7).  Returns (dists (Q, C), pass (Q, C)).
+
+    Unlike the other wrappers this defaults to the jnp oracle: its
+    elementwise+sum arithmetic is the bit-identical mirror of the legacy
+    beam search (the frontier engine's equivalence contract), while the
+    MXU kernel is allclose-only — opt into it explicitly.  The cos metric
+    has no kernel (like the batched leaf scan) and always routes through
+    the oracle."""
+    if use_pallas and metric != "cos":
+        return frontier_scan_pallas(queries, vecs, norms, ids, bitmaps,
+                                    metric, interpret=_interpret())
+    return ref.frontier_scan_ref(queries, vecs, norms, ids, bitmaps, metric)
 
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))

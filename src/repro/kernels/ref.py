@@ -78,6 +78,40 @@ def leaf_scan_batched_ref(queries: jax.Array, tiles: jax.Array,
     return jnp.where(ok, d, jnp.inf)
 
 
+def frontier_scan_ref(queries: jax.Array, vecs: jax.Array, norms: jax.Array,
+                      ids: jax.Array, bitmaps: jax.Array,
+                      metric: str = "l2") -> tuple[jax.Array, jax.Array]:
+    """Fused frontier-chunk scoring + filter probe, reference semantics.
+
+    queries (Q, d) f32   — one query per in-flight traversal
+    vecs    (Q, C, d) f32 — each query's candidate chunk, gathered from the
+                            deduplicated frontier union block (graph engine,
+                            DESIGN.md §7)
+    norms   (Q, C) f32   — precomputed ||x||² of the chunk rows (L2 path)
+    ids     (Q, C) int32 — heap row ids, -1 padded
+    bitmaps (Q, W) uint32 — per-query packed filter bitmaps
+    returns (dists (Q, C) f32 with +inf at padded slots, pass (Q, C) bool).
+
+    The distance arithmetic deliberately mirrors `types.distance` under
+    `jax.vmap` — elementwise product + last-axis sum, never a dot — so the
+    frontier engine's scores are bit-identical to the legacy vmapped
+    beam search (the equivalence guarantee of tests/test_frontier.py).
+    """
+    def one(q, x, xn):
+        if metric == "ip":
+            return -jnp.sum(q * x, axis=-1)
+        if metric == "cos":
+            qn = jnp.linalg.norm(q, axis=-1) + 1e-12
+            vn = jnp.linalg.norm(x, axis=-1) + 1e-12
+            return 1.0 - jnp.sum(q * x, axis=-1) / (qn * vn)
+        qn = jnp.sum(q * q, axis=-1)
+        return qn + xn - 2.0 * jnp.sum(q * x, axis=-1)
+
+    d = jax.vmap(one)(queries, vecs, norms)
+    ok = jax.vmap(probe_bitmap_ref)(bitmaps, ids)
+    return jnp.where(ids >= 0, d, jnp.inf), ok
+
+
 def topk_partial_ref(values: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Global k smallest (values, indices) over a 1-D array.
 

@@ -1,0 +1,243 @@
+"""Frontier engine vs legacy vmapped path: bit-identical equivalence.
+
+The batch-synchronous frontier engine (core/graph_search.py, DESIGN.md §7)
+must reproduce the legacy per-query beam search *exactly* — same ids, same
+distances (bitwise), and all seven SearchStats counters — across every
+strategy, selectivity regime, and bitmap correlation.  Also covers the
+packed-bitset helpers (incl. the node-0 padding-collision regression the
+engine work uncovered in the legacy visited update) and interpret-mode
+parity of the fused `frontier_scan` Pallas kernel against its jnp oracle.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep (requirements-dev.txt):
+    # property tests skip individually; plain tests in this module still run
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:  # stub strategies so decorator arguments still evaluate
+        integers = floats = sampled_from = staticmethod(
+            lambda *a, **k: None)
+
+from repro.core import (SearchParams, WorkloadSpec, bitset_mark,
+                        bitset_words, bitset_zeros, generate_bitmaps,
+                        pack_bool_bitmap, probe_bitmap, search_batch)
+from repro.core.hnsw import HNSWGraph
+from repro.core.types import VectorStore
+from repro.kernels import ops, ref
+
+STRATS = ("unfiltered", "sweeping", "acorn", "navix", "iterative_scan")
+STAT_FIELDS = ("distance_comps", "filter_checks", "hops",
+               "page_accesses_index", "page_accesses_heap", "tmap_lookups",
+               "reorder_rows")
+
+
+def _assert_identical(graph, store, queries, bm, p):
+    pv = dataclasses.replace(p, graph_exec_mode="vmapped")
+    pf = dataclasses.replace(p, graph_exec_mode="frontier")
+    dv, iv, sv = search_batch(graph, store, queries, bm, pv)
+    df, iff, sf = search_batch(graph, store, queries, bm, pf)
+    np.testing.assert_array_equal(np.asarray(iv), np.asarray(iff))
+    assert np.array_equal(np.asarray(dv), np.asarray(df), equal_nan=True), \
+        "distances not bit-identical"
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sv, f)), np.asarray(getattr(sf, f)),
+            err_msg=f"counter {f} diverged")
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_frontier_bit_identical(small_dataset, small_graph, strategy):
+    """ids, dists, and all 7 counters identical across the selectivity ×
+    correlation grid (one jit per engine per strategy — params shared)."""
+    store, queries = small_dataset
+    p = SearchParams(k=10, ef_search=48, beam_width=128, strategy=strategy,
+                     max_hops=500)
+    for sel in (0.01, 0.2, 0.8):
+        for corr in ("none", "high_pos"):
+            bm = generate_bitmaps(store, queries, WorkloadSpec(sel, corr),
+                                  seed=7)
+            _assert_identical(small_graph, store, queries, bm, p)
+
+
+def test_frontier_bit_identical_ablations(small_dataset, small_graph):
+    """The Fig. 13 / hardened-ACORN ablation flags and the navix
+    heuristics keep the engines bit-identical too."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=8)
+    for p in (
+        SearchParams(k=10, ef_search=48, beam_width=128, strategy="acorn",
+                     max_hops=500, translation_map=False),
+        SearchParams(k=10, ef_search=48, beam_width=128, strategy="acorn",
+                     max_hops=500, adaptive_skip_2hop=False),
+        SearchParams(k=10, ef_search=48, beam_width=128, strategy="navix",
+                     max_hops=500, navix_heuristic="directed"),
+        SearchParams(k=10, ef_search=48, beam_width=128, strategy="navix",
+                     max_hops=500, navix_heuristic="onehop"),
+    ):
+        _assert_identical(small_graph, store, queries, bm, p)
+
+
+def test_frontier_chunked_paths_identical(small_dataset, small_graph):
+    """Forcing multi-chunk scoring (tiny chunk sizes) exercises the inner
+    while_loop + compaction path without changing any output."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=9)
+    for p in (
+        SearchParams(k=10, ef_search=48, beam_width=128,
+                     strategy="sweeping", max_hops=500, frontier_chunk=4),
+        SearchParams(k=10, ef_search=48, beam_width=128, strategy="acorn",
+                     max_hops=500, frontier_chunk2=16),
+        SearchParams(k=10, ef_search=48, beam_width=128,
+                     strategy="iterative_scan", max_hops=500,
+                     frontier_chunk=4),
+    ):
+        _assert_identical(small_graph, store, queries, bm, p)
+
+
+def test_frontier_single_query(small_dataset, small_graph):
+    """Q=1 degenerate batch."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=10)
+    p = SearchParams(k=5, ef_search=32, beam_width=64, strategy="sweeping",
+                     max_hops=300)
+    _assert_identical(small_graph, store, queries[:1], bm[:1], p)
+
+
+# ---------------- packed bitset helpers ----------------
+
+def test_bitset_mark_node0_padding_regression():
+    """-1 padding ids map to word 0; a gather-or-SET scatter would let a
+    padding entry clobber node 0's freshly written bit (the legacy visited
+    bug the frontier work uncovered: node 0 then re-scores forever through
+    2-hop cycles).  bitset_mark must be order-safe."""
+    words = bitset_zeros(64)
+    marked = bitset_mark(words, jnp.asarray([0, -1, -1, 37], jnp.int32),
+                         jnp.asarray([True, False, False, True]))
+    got = probe_bitmap(marked, jnp.arange(64))
+    want = np.zeros(64, bool)
+    want[[0, 37]] = True
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_bitset_roundtrip_matches_bool_semantics():
+    rng = np.random.RandomState(0)
+    n = 1000
+    ids = rng.permutation(n)[:200].astype(np.int32)
+    words = bitset_mark(bitset_zeros(n), jnp.asarray(ids),
+                        jnp.ones((200,), bool))
+    assert words.shape == (bitset_words(n),)
+    got = np.asarray(probe_bitmap(words, jnp.arange(n)))
+    want = np.zeros(n, bool)
+    want[ids] = True
+    np.testing.assert_array_equal(got, want)
+
+
+def test_legacy_visited_marking_is_order_safe(small_dataset, small_graph):
+    """The fixed legacy path must terminate without re-scoring node 0:
+    hops stay far below the safety cap at moderate selectivity (the buggy
+    gather-or-set walked to max_hops whenever node 0 resurrected)."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=11)
+    p = SearchParams(k=10, ef_search=48, beam_width=128, strategy="acorn",
+                     max_hops=2000, graph_exec_mode="vmapped")
+    _, _, stats = search_batch(small_graph, store, queries, bm, p)
+    assert int(np.asarray(stats.hops).max()) < 2000
+
+
+# ---------------- frontier_scan kernel parity ----------------
+
+def test_frontier_scan_parity_basic():
+    rng = np.random.RandomState(3)
+    q, c, d, n_rows = 5, 33, 70, 512
+    queries = jnp.asarray(rng.randn(q, d).astype(np.float32))
+    ids = rng.randint(-1, n_rows, (q, c)).astype(np.int32)
+    vecs = jnp.asarray(rng.randn(q, c, d).astype(np.float32))
+    norms = jnp.sum(vecs * vecs, -1)
+    bms = jnp.stack([pack_bool_bitmap(rng.rand(n_rows) < 0.5)
+                     for _ in range(q)])
+    for metric in ("l2", "ip"):
+        da, pa = ops.frontier_scan(queries, vecs, norms, jnp.asarray(ids),
+                                   bms, metric=metric, use_pallas=True)
+        db, pb = ref.frontier_scan_ref(queries, vecs, norms,
+                                       jnp.asarray(ids), bms, metric)
+        fa, fb = np.isfinite(np.asarray(da)), np.isfinite(np.asarray(db))
+        np.testing.assert_array_equal(fa, fb)
+        np.testing.assert_allclose(np.asarray(da)[fa], np.asarray(db)[fb],
+                                   atol=2e-3, rtol=1e-3)
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=st.integers(1, 9), c=st.integers(1, 70), d=st.integers(1, 150),
+       metric=st.sampled_from(["l2", "ip"]), density=st.floats(0.0, 1.0),
+       seed=st.integers(0, 99))
+def test_frontier_scan_parity_sweep(q, c, d, metric, density, seed):
+    rng = np.random.RandomState(seed)
+    n_rows = 256
+    queries = jnp.asarray(rng.randn(q, d).astype(np.float32))
+    ids = rng.randint(0, n_rows, (q, c)).astype(np.int32)
+    ids[rng.rand(q, c) < 0.15] = -1
+    vecs = jnp.asarray(rng.randn(q, c, d).astype(np.float32))
+    norms = jnp.sum(vecs * vecs, -1)
+    bms = jnp.stack([pack_bool_bitmap(rng.rand(n_rows) < density)
+                     for _ in range(q)])
+    da, pa = ops.frontier_scan(queries, vecs, norms, jnp.asarray(ids), bms,
+                               metric=metric, use_pallas=True)
+    db, pb = ref.frontier_scan_ref(queries, vecs, norms, jnp.asarray(ids),
+                                   bms, metric)
+    fa, fb = np.isfinite(np.asarray(da)), np.isfinite(np.asarray(db))
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_allclose(np.asarray(da)[fa], np.asarray(db)[fb],
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# ---------------- hypothesis: random graphs, fixed shapes ----------------
+
+_HN, _HDEG, _HQ, _HD = 160, 8, 4, 24   # fixed shapes → one jit per engine
+
+
+def _random_graph_case(seed: int):
+    """Random base-layer graph with duplicate-free neighbor lists (the
+    HNSW construction invariant both engines rely on), random vectors,
+    random bitmaps."""
+    rng = np.random.RandomState(seed)
+    nbrs = np.full((1, _HN, _HDEG), -1, np.int64)
+    for i in range(_HN):
+        k = rng.randint(1, _HDEG + 1)
+        cand = rng.permutation(_HN - 1)[:k]
+        cand = np.where(cand >= i, cand + 1, cand)     # no self-loop
+        nbrs[0, i, :k] = cand
+    graph = HNSWGraph(neighbors=jnp.asarray(nbrs, jnp.int32),
+                      node_level=jnp.zeros((_HN,), jnp.int32),
+                      entry_point=jnp.asarray(rng.randint(_HN), jnp.int32),
+                      m=_HDEG // 2)
+    store = VectorStore.build(rng.randn(_HN, _HD).astype(np.float32))
+    bits = rng.rand(_HQ, _HN) < rng.uniform(0.05, 0.9)
+    bm = pack_bool_bitmap(bits)
+    queries = jnp.asarray(rng.randn(_HQ, _HD).astype(np.float32))
+    return graph, store, queries, bm
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       strategy=st.sampled_from(list(STRATS)))
+def test_frontier_random_graph_property(seed, strategy):
+    """Property: on arbitrary random graphs (islands, dead ends, skewed
+    degrees) the engines stay bit-identical."""
+    graph, store, queries, bm = _random_graph_case(seed)
+    p = SearchParams(k=5, ef_search=16, beam_width=32, strategy=strategy,
+                     max_hops=200, batch_tuples=16, max_rounds=4)
+    _assert_identical(graph, store, queries, bm, p)
