@@ -136,8 +136,10 @@ def main() -> None:
     args = ap.parse_args()
     result = run(tiny=args.tiny)
     line = json.dumps(result)
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_frontier.json")
+    # --tiny (CI smoke) must not clobber the tracked full-sweep record:
+    # tiny runs write the gitignored .tiny variant
+    name = "BENCH_frontier.tiny.json" if args.tiny else "BENCH_frontier.json"
+    path = os.path.join(os.path.dirname(__file__), "..", name)
     with open(path, "w") as f:
         f.write(line + "\n")
     print(line)

@@ -110,22 +110,72 @@ def mean_recall(ids, tid, k=10) -> float:
         jax.vmap(lambda f, t: recall_at_k(f, t, k))(ids, tid))))
 
 
-def get_executor(name: str, method: str, use_pallas: bool = False):
+def get_executor(name: str, method: str, use_pallas: bool = False,
+                 storage=None):
     """Executor-registry dispatch for a benchmark dataset: builds (cached)
-    whichever components `method` needs and returns the executor."""
+    whichever components `method` needs and returns the executor.
+    `storage` attaches a StorageEngine (build one with
+    `get_storage_engine`) for measured page accounting.
+
+    "scann_distributed" runs the mesh-sharded executor on this host's
+    devices (leaves sharded, queries replicated) with per-query
+    SearchStats riding the all-gather — so table6/fig10 can tabulate the
+    distributed path next to the local ones.  No storage accounting
+    (the collective pipeline carries counters, not page traces)."""
     store, _ = get_dataset(name)
+    if method == "scann_distributed":
+        # cached per dataset: re-sharding the index and dropping the
+        # executor's jit cache at every grid point would re-compile the
+        # collective program for identical params over and over
+        ex = _DISTRIBUTED_EXECUTORS.get(name)
+        if ex is None:
+            from repro import compat
+            from repro.core.distributed import (DistributedScannExecutor,
+                                                shard_index)
+            mesh = compat.make_mesh((jax.device_count(),), ("data",))
+            sharded = shard_index(get_scann(name), store, mesh, "data")
+            ex = _DISTRIBUTED_EXECUTORS[name] = \
+                DistributedScannExecutor(sharded)
+        return ex
     graph = index = None
     if method in ("scann", "scann_vmapped", "adaptive"):
         index = get_scann(name)
     if method not in ("scann", "scann_vmapped", "bruteforce"):
         graph = get_graph(name)
     return make_executor(method, store, graph=graph, index=index,
-                         use_pallas=use_pallas, graph_m=16)
+                         use_pallas=use_pallas, graph_m=16, storage=storage)
+
+
+_DISTRIBUTED_EXECUTORS: dict = {}
+
+
+def run_storage_measured(name: str, method: str, sel: float, params):
+    """One cold-pool measured run at `params` (capacity = full page
+    space): the shared protocol behind table6's measured-page columns and
+    fig10's cold-miss penalty.  Returns the SearchResult (`.storage`
+    carries the StorageStats)."""
+    store, queries = get_dataset(name)
+    bm = get_bitmaps(name, sel, "none")
+    eng = get_storage_engine(name, method, capacity_frac=1.0)
+    return get_executor(name, method, storage=eng).search(queries, bm,
+                                                          params)
+
+
+def get_storage_engine(name: str, method: str = "adaptive", **kw):
+    """StorageEngine over the dataset's page space, with the layouts the
+    method needs (scann leaves / graph adjacency / heap)."""
+    from repro.storage import make_storage_engine
+    store, _ = get_dataset(name)
+    index = get_scann(name) if method in ("scann", "scann_vmapped",
+                                          "adaptive") else None
+    graph = get_graph(name) if method not in ("scann", "scann_vmapped",
+                                              "bruteforce") else None
+    return make_storage_engine(store, index=index, graph=graph, **kw)
 
 
 def _ladder(method: str, k: int, tm: bool, page_accounting: str):
     """Param ladder per method (paper §5: climb until target recall)."""
-    if method in ("scann", "scann_vmapped"):
+    if method in ("scann", "scann_vmapped", "scann_distributed"):
         return [SearchParams(k=k, num_leaves_to_search=nl, reorder_factor=4,
                              scann_page_accounting=page_accounting)
                 for nl in LEAVES_LADDER]

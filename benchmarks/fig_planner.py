@@ -18,7 +18,10 @@ The paper's Fig. 1 finding is that no fixed strategy stays near-optimal
 across the grid; the planner's job is to track the per-point best within
 1.5x everywhere.  Emits one JSON record to BENCH_planner.json with the
 full grid + the max-regret summary so the trajectory is tracked
-run-over-run.
+run-over-run.  This sweep stays buffer-pool-blind (no StorageEngine
+attached) so its currency is reproducible run-over-run; the warm-serving
+variant — same grid, pooled executors, warm-cache-aware costs on both
+sides — lives in benchmarks/bench_storage.py (`bench_planner`).
 
     PYTHONPATH=src python benchmarks/fig_planner.py [--tiny] [--ds sift10m]
 """
@@ -135,8 +138,9 @@ def main() -> None:
     sels = (0.05, 0.5) if args.tiny else SELS
     corrs = ("none",) if args.tiny else CORRS
     rows, summary = run(args.ds, sels, corrs)
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_planner.json")
+    # --tiny (CI smoke) must not clobber the tracked full-grid record
+    name = "BENCH_planner.tiny.json" if args.tiny else "BENCH_planner.json"
+    path = os.path.join(os.path.dirname(__file__), "..", name)
     with open(path, "w") as f:
         f.write(json.dumps(summary) + "\n")
     emit(rows, "fig_planner")

@@ -14,13 +14,14 @@ from repro.core.graph_search import search_batch
 from repro.core.scann import (ScannIndex, build_scann, scann_search_batch,
                               scann_search_batch_vmapped)
 from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
-                                  component_cycles, cycle_breakdown,
-                                  engine_scale, modeled_qps,
-                                  predict_counters, predict_cycles,
-                                  stats_table_row)
+                                  cache_miss_penalty, component_cycles,
+                                  cycle_breakdown, engine_scale,
+                                  index_segment, measured_miss_penalty,
+                                  modeled_qps, predict_counters,
+                                  predict_cycles, stats_table_row)
 from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
                                  Executor, GraphExecutor, ScannExecutor,
-                                 SearchPlan, make_executor,
+                                 SearchPlan, index_shape, make_executor,
                                  REGISTERED_METHODS)
 
 __all__ = [
@@ -33,8 +34,11 @@ __all__ = [
     "filtered_knn", "knn", "HNSWGraph", "build_graph", "build_incremental",
     "search_batch", "ScannIndex", "build_scann", "scann_search_batch",
     "scann_search_batch_vmapped", "LIBRARY", "SYSTEM", "CostConstants",
-    "IndexShape", "component_cycles", "cycle_breakdown", "engine_scale",
-    "modeled_qps", "predict_counters", "predict_cycles", "stats_table_row",
+    "IndexShape", "cache_miss_penalty", "component_cycles",
+    "cycle_breakdown", "engine_scale", "index_segment",
+    "measured_miss_penalty", "modeled_qps", "predict_counters",
+    "predict_cycles", "stats_table_row",
     "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
-    "ScannExecutor", "SearchPlan", "make_executor", "REGISTERED_METHODS",
+    "ScannExecutor", "SearchPlan", "index_shape", "make_executor",
+    "REGISTERED_METHODS",
 ]

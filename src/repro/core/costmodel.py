@@ -42,12 +42,16 @@ from repro.core.types import SearchParams, SearchStats, heap_pages_per_vector
 
 @dataclasses.dataclass(frozen=True)
 class CostConstants:
-    page_access: float          # pin + lock + read + release (cycles)
+    page_access: float          # buffer HIT: pin + lock + read + release
     tuple_materialize: float    # palloc + copy, per byte
     distance_per_dim: float     # SIMD distance cycles per dimension
     filter_check: float         # bitmap probe
     tmap_lookup: float          # in-memory hash probe
     reorder_sort_per_row: float  # reordering sort/merge work
+    # Buffer-pool MISS multiplier (DESIGN.md §8): a missed page costs
+    # page_access * page_miss_extra (read into shared buffers from the
+    # OS cache / storage).  1.0 = flat memory, no pool.
+    page_miss_extra: float = 1.0
 
 
 # Calibrated to reproduce Fig. 10 / Table 2 shapes (see module docstring).
@@ -58,6 +62,7 @@ SYSTEM = CostConstants(
     filter_check=18.0,
     tmap_lookup=40.0,
     reorder_sort_per_row=60.0,
+    page_miss_extra=10.0,      # OS-page-cache read ~ few µs vs ~100s ns hit
 )
 
 LIBRARY = CostConstants(
@@ -67,6 +72,7 @@ LIBRARY = CostConstants(
     filter_check=15.0,         # bitmap probe cost is architecture-neutral
     tmap_lookup=0.0,           # unified identifiers
     reorder_sort_per_row=30.0,
+    page_miss_extra=1.0,       # flat memory: nothing to miss
 )
 
 
@@ -128,6 +134,47 @@ def component_cycles(counters: Mapping[str, float], dim: int,
             comp[k] *= f
     comp["total"] = sum(comp.values())
     return comp
+
+
+# Which page segment (storage/engine.py) holds a strategy's *index* pages;
+# every strategy's row fetches hit the "heap" segment.
+def index_segment(strategy: str) -> Optional[str]:
+    if strategy == "scann":
+        return "scann"
+    if strategy in GRAPH_STRATEGIES:
+        return "graph"
+    return None                     # bruteforce: seqscan, no index
+
+
+def cache_miss_penalty(counters: Mapping[str, float], strategy: str,
+                       pool_state, constants: CostConstants = SYSTEM
+                       ) -> float:
+    """Expected extra cycles from buffer-pool misses, per query
+    (DESIGN.md §8).  `pool_state` is a storage.BufferPoolState; the
+    expected miss fraction of a segment's accesses is 1 − residency
+    (uniform-touch approximation).  With page_miss_extra == 1 (LIBRARY)
+    or a fully warm pool this is 0 and predictions reduce to the classic
+    ones."""
+    if pool_state is None or constants.page_miss_extra <= 1.0:
+        return 0.0
+    extra = constants.page_access * (constants.page_miss_extra - 1.0)
+    pen = counters["page_accesses_heap"] * \
+        pool_state.miss_fraction("heap") * extra
+    seg = index_segment(strategy)
+    if seg is not None:
+        pen += counters["page_accesses_index"] * \
+            pool_state.miss_fraction(seg) * extra
+    return pen
+
+
+def measured_miss_penalty(storage_stats, batch_q: int,
+                          constants: CostConstants = SYSTEM) -> float:
+    """Per-query extra cycles from MEASURED pool misses (a
+    storage.StorageStats) — the post-hoc currency matching
+    `cache_miss_penalty`'s predictions, for warm-cache regret accounting
+    (benchmarks/bench_storage.py)."""
+    extra = constants.page_access * (constants.page_miss_extra - 1.0)
+    return storage_stats.miss_total * extra / max(batch_q, 1)
 
 
 def cycle_breakdown(stats: SearchStats, dim: int,
@@ -316,7 +363,7 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
 def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
                    selectivity: float, correlation: float = 1.0,
                    constants: CostConstants = SYSTEM,
-                   batch_q: int = 1) -> float:
+                   batch_q: int = 1, pool_state=None) -> float:
     """Expected per-query modeled cycles (the planner's ranking metric).
 
     `batch_q` is the size of the query batch the plan will execute with:
@@ -324,8 +371,16 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
     the batch (`engine_scale`), and scann under "batch" accounting opens
     each leaf once per batch (`predict_counters`), so the planner's
     graph-vs-scann decision boundary tracks the engines that will
-    actually run."""
+    actually run.
+
+    `pool_state` (a storage.BufferPoolState) makes the prediction
+    warm-cache-aware: expected buffer-pool misses — scaled by each
+    segment's current residency — pay `page_miss_extra` on top of the hit
+    cost (`cache_miss_penalty`).  None keeps the classic cold-blind
+    prediction."""
     counters = predict_counters(strategy, shape, params, selectivity,
                                 correlation, batch_q)
-    return component_cycles(counters, shape.dim, constants,
+    base = component_cycles(counters, shape.dim, constants,
                             engine_scale(strategy, params, batch_q))["total"]
+    return base + cache_miss_penalty(counters, strategy, pool_state,
+                                     constants)

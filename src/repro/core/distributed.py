@@ -31,9 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.scann import ScannIndex, build_scann
-from repro.core.types import SearchParams, VectorStore, distance, \
-    probe_bitmap, topk_smallest
+from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
+                              build_scann)
+from repro.core.types import SearchParams, SearchStats, VectorStore, \
+    distance, heap_pages_per_vector, probe_bitmap, topk_smallest
 from repro.kernels import ref as kref
 
 
@@ -70,7 +71,8 @@ def shard_index(index: ScannIndex, store: VectorStore, mesh: Mesh,
 
 def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
                            use_pallas: bool = False,
-                           heap_layout: str = "replicated"):
+                           heap_layout: str = "replicated",
+                           with_stats: bool = False):
     """shard_map'd search over EXPLICIT array args (lowerable against
     ShapeDtypeStructs — used by launch/fvs_dryrun.py):
     fn(tiles, rowids, cents, scale, mean, pca, vectors, norms_sq,
@@ -83,12 +85,21 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
     device; correct for arbitrary kmeans row placement, used at test
     scale) or "leaf_ordered" (rows permuted into leaf-major order at
     build so each device's leaves reference its local heap slice —
-    the production layout modeled by launch/fvs_dryrun.py)."""
+    the production layout modeled by launch/fvs_dryrun.py).
+
+    with_stats=True additionally returns per-query Table-6 counters as a
+    third output, (Q, 7) int32 in SearchStats field order: each device
+    counts its local work (leaves opened, valid/passing rows, reorder
+    candidates, analytic page counters) and the counters cross the mesh
+    with the SAME all-gather the (dist, id) pairs already ride — 28 more
+    bytes per query, still collective-negligible."""
     mesh, axis = sharded.mesh, sharded.axis
     idx, store = sharded.index, sharded.store
     k = params.k
     nl = params.num_leaves_to_search
     metric = idx.metric
+    qppl = _quant_pages_per_leaf(idx)
+    ppv = heap_pages_per_vector(store.dim)
 
     n_total = sharded.store.n
     nd_axis = mesh.shape[axis]
@@ -129,9 +140,29 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
             exact = jnp.where(ok, exact, jnp.inf)
             ld, lp = topk_smallest(exact, k)
             lids = jnp.where(jnp.isinf(ld), -1, rows[lp])
-            return ld, lids
+            if not with_stats:
+                return ld, lids
+            # local Table-6 counters (single-node ScaNN semantics per
+            # shard: fc = valid rows in opened leaves, dc = passing rows
+            # + centroids scored + reorder candidates, analytic pages)
+            n_reorder = ok.sum().astype(jnp.int32)
+            fc = (rowids[leaves] >= 0).sum().astype(jnp.int32)
+            n_pass = jnp.isfinite(scores).sum().astype(jnp.int32)
+            cent_fin = jnp.isfinite(cents[:, 0]).sum().astype(jnp.int32)
+            st = jnp.stack([
+                n_pass + cent_fin + n_reorder,            # distance_comps
+                fc,                                       # filter_checks
+                jnp.int32(nsel),                          # hops (leaves)
+                jnp.int32(nsel * qppl),                   # index pages
+                n_reorder * ppv,                          # heap pages
+                jnp.int32(0),                             # tmap_lookups
+                n_reorder])                               # reorder_rows
+            return ld, lids, st
 
-        ld, lids = jax.vmap(one)(queries, bitmaps)       # (Q, k) local
+        if with_stats:
+            ld, lids, lst = jax.vmap(one)(queries, bitmaps)
+        else:
+            ld, lids = jax.vmap(one)(queries, bitmaps)   # (Q, k) local
         gd = jax.lax.all_gather(ld, axis, axis=1)        # (Q, nd, k)
         gi = jax.lax.all_gather(lids, axis, axis=1)
         q_ = gd.shape[0]
@@ -139,7 +170,11 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
         gi = gi.reshape(q_, -1)
         fd, fpos = jax.vmap(lambda d_: topk_smallest(d_, k))(gd)
         fids = jnp.take_along_axis(gi, fpos, axis=1)
-        return fd, jnp.where(jnp.isinf(fd), -1, fids)
+        fids = jnp.where(jnp.isinf(fd), -1, fids)
+        if not with_stats:
+            return fd, fids
+        gst = jax.lax.all_gather(lst, axis, axis=1)      # (Q, nd, 7)
+        return fd, fids, gst.sum(axis=1)
 
     pspec = P(axis)
     rep = P()
@@ -148,16 +183,19 @@ def distributed_search_raw(sharded: ShardedFVS, params: SearchParams,
         local_search, mesh=mesh,
         in_specs=(pspec, pspec, pspec, rep, rep, rep, vspec, vspec,
                   rep, rep),
-        out_specs=(rep, rep), check_vma=False)
+        out_specs=(rep, rep, rep) if with_stats else (rep, rep),
+        check_vma=False)
 
 
 def distributed_search_fn(sharded: ShardedFVS, params: SearchParams,
                           use_pallas: bool = False,
-                          heap_layout: str = "replicated"):
+                          heap_layout: str = "replicated",
+                          with_stats: bool = False):
     """Jittable distributed filtered-search step bound to a concrete store:
-    (queries (Q, d), bitmaps (Q, W)) -> (dists (Q, k), ids)."""
+    (queries (Q, d), bitmaps (Q, W)) -> (dists (Q, k), ids[, stats])."""
     fn = distributed_search_raw(sharded, params, use_pallas=use_pallas,
-                                heap_layout=heap_layout)
+                                heap_layout=heap_layout,
+                                with_stats=with_stats)
     idx, store = sharded.index, sharded.store
 
     def search(queries, bitmaps):
@@ -213,18 +251,22 @@ class DistributedScannExecutor:
     """Executor-protocol port of the sharded ScaNN path (DESIGN.md §6).
 
     Consumers (serving/rag.py, launch/fvs_dryrun.py) hold an Executor and
-    never touch the mesh plumbing.  The collective pipeline does not carry
-    SearchStats across devices, so `SearchResult.stats` is None here.
+    never touch the mesh plumbing.  Per-query SearchStats ride the
+    existing all-gather as a (Q, 7) int32 block (`with_stats`), so
+    table6/fig10-style accounting covers the mesh path too; pass
+    `with_stats=False` to drop the counters from the collective (the
+    launch dry-run compiles the raw fn without them).
     """
 
     name = "scann_distributed"
 
     def __init__(self, sharded: ShardedFVS, use_pallas: bool = False,
-                 heap_layout: str = "replicated"):
+                 heap_layout: str = "replicated", with_stats: bool = True):
         self.sharded = sharded
         self.store = sharded.store
         self.use_pallas = use_pallas
         self.heap_layout = heap_layout
+        self.with_stats = with_stats
         self._fns: dict = {}      # params -> jitted bound search fn
 
     def plan(self, queries, bitmaps, params: SearchParams):
@@ -239,9 +281,15 @@ class DistributedScannExecutor:
         if fn is None:
             fn = self._fns[plan.params] = distributed_search_fn(
                 self.sharded, plan.params, use_pallas=self.use_pallas,
-                heap_layout=self.heap_layout)
-        d, ids = fn(plan.queries, plan.bitmaps)
-        return SearchResult(dists=d, ids=ids, stats=None, strategy="scann",
+                heap_layout=self.heap_layout, with_stats=self.with_stats)
+        out = fn(plan.queries, plan.bitmaps)
+        stats = None
+        if self.with_stats:
+            d, ids, st = out
+            stats = SearchStats(*(st[:, i] for i in range(7)))
+        else:
+            d, ids = out
+        return SearchResult(dists=d, ids=ids, stats=stats, strategy="scann",
                             plan=plan)
 
     def search(self, queries, bitmaps, params: SearchParams):

@@ -43,6 +43,7 @@ from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
 from repro.core.types import (SearchParams, SearchResult, SearchStats,
                               VectorStore, heap_pages_per_vector,
                               probe_bitmap, topk_smallest)
+from repro.storage.engine import StorageEngine
 
 GRAPH_STRATEGIES = costmodel.GRAPH_STRATEGIES
 
@@ -95,16 +96,25 @@ class GraphExecutor(BaseExecutor):
     """All five graph strategies (paper §2.3) behind the executor API.
 
     Bit-identical port of `graph_search.search_batch` — the same jitted
-    vmapped beam search runs underneath."""
+    vmapped beam search runs underneath.  With a `storage` engine
+    attached, the frontier engine's deduplicated union fetches are
+    replayed through the buffer pool (DESIGN.md §8): the search runs with
+    trace collection on (ids/dists/stats unchanged) and the result
+    carries measured StorageStats."""
 
     def __init__(self, graph: HNSWGraph, store: VectorStore,
-                 strategy: str = "sweeping", use_pallas: bool = False):
+                 strategy: str = "sweeping", use_pallas: bool = False,
+                 storage: Optional[StorageEngine] = None):
         if strategy not in GRAPH_STRATEGIES:
             raise ValueError(f"unknown graph strategy {strategy!r}")
+        if storage is not None and storage.graph is None:
+            raise ValueError("storage engine lacks a graph adjacency "
+                             "layout; build it with graph=")
         self.graph = graph
         self.store = store
         self.strategy = strategy
         self.use_pallas = use_pallas
+        self.storage = storage
         self.name = strategy
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
@@ -113,11 +123,24 @@ class GraphExecutor(BaseExecutor):
         return SearchPlan(self.strategy, params, queries, bitmaps)
 
     def execute(self, plan: SearchPlan) -> SearchResult:
-        d, ids, stats = search_batch(self.graph, self.store, plan.queries,
-                                     plan.bitmaps, plan.params,
-                                     use_pallas=self.use_pallas)
+        if self.storage is None:
+            d, ids, stats = search_batch(self.graph, self.store,
+                                         plan.queries, plan.bitmaps,
+                                         plan.params,
+                                         use_pallas=self.use_pallas)
+            return SearchResult(dists=d, ids=ids, stats=stats,
+                                strategy=self.strategy, plan=plan)
+        if plan.params.graph_exec_mode != "frontier":
+            raise ValueError("storage accounting needs the frontier "
+                             "engine (graph_exec_mode='frontier')")
+        d, ids, stats, trace = search_batch(
+            self.graph, self.store, plan.queries, plan.bitmaps, plan.params,
+            use_pallas=self.use_pallas, collect_trace=True)
+        sstats = self.storage.account_graph(
+            np.asarray(trace["heap_rows"]), np.asarray(trace["index_nodes"]))
         return SearchResult(dists=d, ids=ids, stats=stats,
-                            strategy=self.strategy, plan=plan)
+                            strategy=self.strategy, plan=plan,
+                            storage=sstats)
 
 
 class ScannExecutor(BaseExecutor):
@@ -128,13 +151,22 @@ class ScannExecutor(BaseExecutor):
     legacy per-query path kept as the equivalence oracle."""
 
     def __init__(self, index: ScannIndex, store: VectorStore,
-                 pipeline: str = "batched", use_pallas: bool = False):
+                 pipeline: str = "batched", use_pallas: bool = False,
+                 storage: Optional[StorageEngine] = None):
         if pipeline not in ("batched", "vmapped"):
             raise ValueError(f"unknown scann pipeline {pipeline!r}")
+        if storage is not None:
+            if pipeline != "batched":
+                raise ValueError("storage accounting needs the batched "
+                                 "scann pipeline")
+            if storage.scann is None:
+                raise ValueError("storage engine lacks a scann leaf "
+                                 "layout; build it with index=")
         self.index = index
         self.store = store
         self.pipeline = pipeline
         self.use_pallas = use_pallas
+        self.storage = storage
         self.name = "scann" if pipeline == "batched" else "scann_vmapped"
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
@@ -143,6 +175,17 @@ class ScannExecutor(BaseExecutor):
         return SearchPlan("scann", params, queries, bitmaps)
 
     def execute(self, plan: SearchPlan) -> SearchResult:
+        if self.storage is not None:
+            d, ids, stats, trace = scann_search_batch(
+                self.index, self.store, plan.queries, plan.bitmaps,
+                plan.params, use_pallas=self.use_pallas, collect_trace=True)
+            sstats = self.storage.account_scann(
+                np.asarray(trace["leaves"]), np.asarray(trace["cand_rows"]),
+                np.asarray(trace["cand_ok"]),
+                accounting=plan.params.scann_page_accounting,
+                query_block=plan.params.scann_query_block)
+            return SearchResult(dists=d, ids=ids, stats=stats,
+                                strategy="scann", plan=plan, storage=sstats)
         fn = scann_search_batch if self.pipeline == "batched" \
             else scann_search_batch_vmapped
         d, ids, stats = fn(self.index, self.store, plan.queries,
@@ -158,6 +201,28 @@ def _bitmap_popcount(bitmaps):
     return jax.lax.population_count(bitmaps).sum(axis=-1).astype(jnp.int32)
 
 
+def index_shape(store: VectorStore, index: Optional[ScannIndex] = None,
+                graph_m: int = 16) -> costmodel.IndexShape:
+    """Static shape facts for the predictive cost model — the public
+    derivation shared by AdaptivePlanner and the benchmarks."""
+    kw = dict(n=store.n, dim=store.dim, graph_m=graph_m)
+    if index is not None:
+        L, C, _ = index.leaf_tiles.shape
+        if index.levels >= 2:
+            B, Lb = index.branch_leaves.shape
+            nb = max(1, -(-32 * 2 * B // L))
+            cent = B + nb * Lb
+        else:
+            cent = L
+        # average VALID rows per leaf (padded capacity C over-counts:
+        # the stats only charge rowids >= 0)
+        fill = max(1, round(store.n / L))
+        kw.update(scann_leaves=L, scann_rows_per_leaf=min(fill, C),
+                  scann_cent_scored=cent,
+                  scann_pages_per_leaf=_quant_pages_per_leaf(index))
+    return costmodel.IndexShape(**kw)
+
+
 class BruteForceExecutor(BaseExecutor):
     """Exact filtered KNN (`bruteforce.filtered_knn`) with seqscan-semantic
     counters: every row is filter-checked; passing rows are fetched from
@@ -167,8 +232,10 @@ class BruteForceExecutor(BaseExecutor):
 
     name = "bruteforce"
 
-    def __init__(self, store: VectorStore):
+    def __init__(self, store: VectorStore,
+                 storage: Optional[StorageEngine] = None):
         self.store = store
+        self.storage = storage
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
         if params.strategy != "bruteforce":
@@ -187,8 +254,13 @@ class BruteForceExecutor(BaseExecutor):
             distance_comps=npass, filter_checks=z + n, hops=z,
             page_accesses_index=z, page_accesses_heap=npass * ppv,
             tmap_lookups=z, reorder_rows=z)
+        sstats = None
+        if self.storage is not None:
+            # the bitmap IS the seqscan trace: passing rows in row-id order
+            sstats = self.storage.account_seqscan(np.asarray(plan.bitmaps))
         return SearchResult(dists=d, ids=ids, stats=stats,
-                            strategy="bruteforce", plan=plan)
+                            strategy="bruteforce", plan=plan,
+                            storage=sstats)
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +302,13 @@ class AdaptivePlanner(BaseExecutor):
     planning overhead to the counters (n/32 filter-word reads per query
     plus the proxy's centroid scans + leaf probes) so regret accounting
     stays honest.
+
+    With a `storage` engine attached the dispatch becomes
+    warm-cache-aware (DESIGN.md §8): plan() snapshots the buffer pool's
+    per-segment residency (`BufferPoolState`) and every candidate's
+    predicted cycles include its expected miss penalty — a strategy whose
+    index pages are already resident gets cheaper, which is the paper's
+    "system-aware decision" made literal at the buffer-manager level.
     """
 
     name = "adaptive"
@@ -239,7 +318,8 @@ class AdaptivePlanner(BaseExecutor):
                  constants: costmodel.CostConstants = costmodel.SYSTEM,
                  graph_m: int = 16, probe_leaves: int = 4,
                  recall_margin: float = 2.0,
-                 scann_recall_margin: float = 10.0):
+                 scann_recall_margin: float = 10.0,
+                 storage: Optional[StorageEngine] = None):
         if not candidates:
             raise ValueError("AdaptivePlanner needs at least one candidate")
         for name, ex in candidates.items():
@@ -255,28 +335,16 @@ class AdaptivePlanner(BaseExecutor):
         self.probe_leaves = probe_leaves
         self.recall_margin = recall_margin
         self.scann_recall_margin = scann_recall_margin
+        self.storage = storage
         self._scann = next((ex for ex in self.candidates.values()
                             if isinstance(ex, ScannExecutor)), None)
 
     # -- shape facts for the predictive model --------------------------------
     def _shape(self) -> costmodel.IndexShape:
-        kw = dict(n=self.store.n, dim=self.store.dim, graph_m=self.graph_m)
-        if self._scann is not None:
-            idx = self._scann.index
-            L, C, _ = idx.leaf_tiles.shape
-            if idx.levels >= 2:
-                B, Lb = idx.branch_leaves.shape
-                nb = max(1, -(-32 * 2 * B // L))
-                cent = B + nb * Lb
-            else:
-                cent = L
-            # average VALID rows per leaf (padded capacity C over-counts:
-            # the stats only charge rowids >= 0)
-            fill = max(1, round(self.store.n / L))
-            kw.update(scann_leaves=L, scann_rows_per_leaf=min(fill, C),
-                      scann_cent_scored=cent,
-                      scann_pages_per_leaf=_quant_pages_per_leaf(idx))
-        return costmodel.IndexShape(**kw)
+        return index_shape(
+            self.store,
+            self._scann.index if self._scann is not None else None,
+            self.graph_m)
 
     def _recall_feasible(self, strategy: str, shape: costmodel.IndexShape,
                          params: SearchParams, s_eff: float) -> bool:
@@ -316,9 +384,11 @@ class AdaptivePlanner(BaseExecutor):
         shape = self._shape()
         s_eff = min(max(s_mean * gamma, 1.0 / n), 1.0)
         batch_q = int(queries.shape[0])
+        pool_state = self.storage.state() if self.storage is not None \
+            else None
         preds = {name: costmodel.predict_cycles(
             _strategy_kind(ex), shape, params, s_mean, gamma,
-            self.constants, batch_q=batch_q)
+            self.constants, batch_q=batch_q, pool_state=pool_state)
             for name, ex in self.candidates.items()}
         feasible = {name: p for name, p in preds.items()
                     if self._recall_feasible(_strategy_kind(
@@ -372,39 +442,47 @@ def make_executor(method: str, store: VectorStore, *,
                   use_pallas: bool = False,
                   constants: costmodel.CostConstants = costmodel.SYSTEM,
                   graph_m: int = 16,
+                  storage: Optional[StorageEngine] = None,
                   planner_candidates: tuple[str, ...] = (
                       "bruteforce", "scann", "sweeping", "navix",
                       "iterative_scan")) -> Executor:
     """Build the executor for `method`.
 
     Graph strategies need `graph`; "scann"/"scann_vmapped" need `index`;
-    "adaptive" builds every candidate the provided components support."""
+    "adaptive" builds every candidate the provided components support.
+    `storage` attaches a paged storage engine (DESIGN.md §8): results
+    carry measured StorageStats, and for "adaptive" ONE shared pool backs
+    every candidate AND feeds residency into the planner's predictions
+    (warm-cache-aware dispatch)."""
     if method in GRAPH_STRATEGIES:
         if graph is None:
             raise ValueError(f"{method!r} needs graph=")
         return GraphExecutor(graph, store, strategy=method,
-                             use_pallas=use_pallas)
+                             use_pallas=use_pallas, storage=storage)
     if method in ("scann", "scann_vmapped"):
         if index is None:
             raise ValueError(f"{method!r} needs index=")
         return ScannExecutor(index, store,
                              pipeline="batched" if method == "scann"
-                             else "vmapped", use_pallas=use_pallas)
+                             else "vmapped", use_pallas=use_pallas,
+                             storage=storage)
     if method == "bruteforce":
-        return BruteForceExecutor(store)
+        return BruteForceExecutor(store, storage=storage)
     if method == "adaptive":
         cands: dict[str, Executor] = {}
         for name in planner_candidates:
             if name == "bruteforce":
-                cands[name] = BruteForceExecutor(store)
+                cands[name] = BruteForceExecutor(store, storage=storage)
             elif name in GRAPH_STRATEGIES and graph is not None:
                 cands[name] = GraphExecutor(graph, store, strategy=name,
-                                            use_pallas=use_pallas)
+                                            use_pallas=use_pallas,
+                                            storage=storage)
             elif name in ("scann", "scann_vmapped") and index is not None:
                 cands[name] = ScannExecutor(
                     index, store, pipeline="batched" if name == "scann"
-                    else "vmapped", use_pallas=use_pallas)
+                    else "vmapped", use_pallas=use_pallas,
+                    storage=storage if name == "scann" else None)
         return AdaptivePlanner(cands, store, constants=constants,
-                               graph_m=graph_m)
+                               graph_m=graph_m, storage=storage)
     raise ValueError(
         f"unknown method {method!r}; registered: {REGISTERED_METHODS}")

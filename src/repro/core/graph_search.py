@@ -33,8 +33,8 @@ import jax.numpy as jnp
 
 from repro.core.hnsw import HNSWGraph
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
-                              bitset_mark, bitset_words, distance,
-                              heap_pages_per_vector, probe_bitmap,
+                              bitset_mark, bitset_words, bitset_zeros,
+                              distance, heap_pages_per_vector, probe_bitmap,
                               topk_smallest)
 from repro.kernels import ops as kops
 
@@ -69,10 +69,37 @@ def _gather_vec_dist(store: VectorStore, q, ids):
 
 
 # ---------------------------------------------------------------------------
+# Storage-trace marking (DESIGN.md §8).  Traces are packed touched-object
+# bitsets fed to the buffer pool by the storage engine; marking must be
+# OR-safe under repeats (zoom-in revisits nodes across levels, pops overlap
+# the zoom path), so candidates are first-occurrence-deduplicated and
+# probed before `bitset_mark`'s add-based scatter.
+# ---------------------------------------------------------------------------
+
+def _trace_mark1(words, ids, mask):
+    """OR-safe single-query bitset mark: dedup ids, skip already-set."""
+    live = mask & _dedup_first(ids) & ~probe_bitmap(words, ids)
+    return bitset_mark(words, ids, live)
+
+
+def _trace_mark(words, ids, mask):
+    """OR-safe per-query bitset mark over a (Q, m) id block."""
+    return jax.vmap(_trace_mark1)(words, ids, mask)
+
+
+# ---------------------------------------------------------------------------
 # Zoom-in phase (upper layers, always unfiltered — paper §2.3.1 phase (i))
 # ---------------------------------------------------------------------------
 
-def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats):
+def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats,
+             trace=None):
+    """Greedy upper-layer descent.  With `trace` = (heap_bits, index_bits)
+    packed bitsets, touched objects are marked as they are fetched: every
+    scored neighbor (and the entry) into heap_bits, every node whose
+    adjacency is read into index_bits.  Returns (cur, cur_d, stats, trace).
+    """
+    tracing = trace is not None
+    th, ti = trace if tracing else (jnp.zeros((0,), jnp.uint32),) * 2
     cur = graph.entry_point
     cur_d = _gather_vec_dist(store, q, cur[None])[0]
     ppv = _pages_per_vector(store.dim)
@@ -80,13 +107,15 @@ def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats):
                         stats.hops, stats.page_accesses_index,
                         stats.page_accesses_heap + ppv, stats.tmap_lookups,
                         stats.reorder_rows)
+    if tracing:
+        th = _trace_mark1(th, cur[None], jnp.array([True]))
     for lvl in range(graph.num_levels - 1, 0, -1):
         def cond(state):
-            _, _, improved, _ = state
+            _, _, improved, _, _, _ = state
             return improved
 
         def body(state):
-            cur, cur_d, _, st = state
+            cur, cur_d, _, st, th, ti = state
             nbrs = graph.neighbors[lvl, cur]
             valid = nbrs >= 0
             d = jnp.where(valid, _gather_vec_dist(store, q, nbrs), INF)
@@ -98,12 +127,15 @@ def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats):
                 st.hops + 1, st.page_accesses_index + 1,
                 st.page_accesses_heap + n_valid * _pages_per_vector(store.dim),
                 st.tmap_lookups, st.reorder_rows)
+            if tracing:
+                ti = _trace_mark1(ti, cur[None], jnp.array([True]))
+                th = _trace_mark1(th, nbrs, valid)
             return (jnp.where(better, nbrs[j], cur),
-                    jnp.where(better, d[j], cur_d), better, st)
+                    jnp.where(better, d[j], cur_d), better, st, th, ti)
 
-        cur, cur_d, _, stats = jax.lax.while_loop(
-            cond, body, (cur, cur_d, jnp.array(True), stats))
-    return cur, cur_d, stats
+        cur, cur_d, _, stats, th, ti = jax.lax.while_loop(
+            cond, body, (cur, cur_d, jnp.array(True), stats, th, ti))
+    return cur, cur_d, stats, ((th, ti) if tracing else None)
 
 
 # ---------------------------------------------------------------------------
@@ -343,7 +375,7 @@ def _finalize(w_d, w_id, bitmap, k, check_filter: bool):
 def _search_single(graph: HNSWGraph, store: VectorStore, q, bitmap,
                    params: SearchParams):
     stats = SearchStats.zeros()
-    entry, entry_d, stats = _zoom_in(graph, store, q, stats)
+    entry, entry_d, stats, _ = _zoom_in(graph, store, q, stats)
     if params.strategy == "iterative_scan":
         return _iterative_scan(graph, store, q, bitmap, params, entry,
                                entry_d, stats)
@@ -449,9 +481,10 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
     return dk, out_ids, stats
 
 
-@partial(jax.jit, static_argnames=("params", "use_pallas"))
+@partial(jax.jit, static_argnames=("params", "use_pallas", "collect_trace"))
 def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
-                 params: SearchParams, use_pallas: bool = False):
+                 params: SearchParams, use_pallas: bool = False,
+                 collect_trace: bool = False):
     """Batched filtered graph search. queries (Q, d), bitmaps (Q, words).
 
     `params.graph_exec_mode` picks the engine (DESIGN.md §7):
@@ -470,9 +503,20 @@ def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                     as the equivalence oracle and microbenchmark baseline.
 
     Returns (dists (Q, k), ids (Q, k), SearchStats with (Q,) leaves).
+
+    `collect_trace=True` (frontier engine only) additionally returns a
+    storage-access trace — packed per-query bitsets of the heap rows
+    fetched full-precision and the graph nodes whose adjacency entries
+    were read (DESIGN.md §8) — as a 4th element
+    `{"heap_rows": (Q, W) uint32, "index_nodes": (Q, W) uint32}`.
+    ids/dists/stats are bit-identical with the flag on or off (the trace
+    marks are write-only bookkeeping).
     """
     mode = params.graph_exec_mode
     if mode == "vmapped":
+        if collect_trace:
+            raise ValueError("storage traces need the frontier engine "
+                             "(graph_exec_mode='frontier')")
         return jax.vmap(
             lambda q, b: _search_single(graph, store, q, b, params))(
                 queries, bitmaps)
@@ -480,7 +524,7 @@ def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         raise ValueError(f"unknown graph_exec_mode {mode!r}; "
                          "expected 'frontier' or 'vmapped'")
     return _frontier_search_batch(graph, store, queries, bitmaps, params,
-                                  use_pallas)
+                                  use_pallas, collect_trace)
 
 
 # ===========================================================================
@@ -701,7 +745,7 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
 
 def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                    params: SearchParams, entry, entry_d, stats: SearchStats,
-                   ef_result: int, use_pallas: bool):
+                   ef_result: int, use_pallas: bool, t_index=None):
     """Superstep-driven port of `_base_search` over the whole query batch.
 
     Per-query control flow (pop order, masks, counter formulas) matches the
@@ -710,8 +754,14 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     lanes are frozen by gating: their pops are suppressed, their candidate
     masks zeroed (an all-INF merge is an exact identity), and their counter
     increments masked — the same per-lane semantics the legacy vmapped
-    while_loop provides by select.  Returns (W_d, W_id sorted asc, stats).
+    while_loop provides by select.  `t_index` (optional (Q, W) bitsets)
+    accumulates the storage trace of adjacency reads: popped nodes, plus
+    expanded branch nodes for filter-first (DESIGN.md §8).
+    Returns (W_d, W_id sorted asc, visited, stats, t_index-or-None).
     """
+    tracing = t_index is not None
+    if not tracing:
+        t_index = jnp.zeros((queries.shape[0], 0), jnp.uint32)
     n = graph.n
     qn = queries.shape[0]
     p = params.beam_width
@@ -738,7 +788,7 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         return ~state[-1].all()
 
     def body(state):
-        pool_d, pool_id, w_d, w_id, visited, st, done = state
+        pool_d, pool_id, w_d, w_id, visited, t_index, st, done = state
         # the pool is kept sorted ascending, so the legacy argmin-pop is
         # always slot 0; the pop itself is folded into the insertions
         best_d, best_id = pool_d[:, 0], pool_id[:, 0]
@@ -747,6 +797,8 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
             (st.hops >= params.max_hops)
         active = ~done & ~stop
         node = jnp.maximum(best_id, 0)
+        if tracing:   # adjacency read of the popped node (step ①)
+            t_index = _trace_mark(t_index, node[:, None], active[:, None])
 
         nb1 = graph.neighbors[0, node]                       # (Q, deg)
         v1 = nb1 >= 0
@@ -833,6 +885,9 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
 
             n_exp = expand_branch.sum(-1).astype(jnp.int32)
             pai = pai + n_exp                          # step ②: branch pages
+            if tracing:   # adjacency reads of the expanded branches
+                t_index = _trace_mark(t_index, nb1,
+                                      expand_branch & active[:, None])
             nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
             nb2 = jnp.where(v1[:, :, None], nb2, -1)
             v2 = nb2 >= 0
@@ -876,25 +931,31 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                           st.page_accesses_index + inc(pai),
                           st.page_accesses_heap + inc(pah),
                           st.tmap_lookups + inc(tm), st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, st2, done | stop)
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, t_index, st2,
+                done | stop)
 
-    state = (pool_d, pool_id, w_d, w_id, visited, stats,
+    state = (pool_d, pool_id, w_d, w_id, visited, t_index, stats,
              jnp.zeros((qn,), bool))
-    pool_d, pool_id, w_d, w_id, visited, stats, _ = jax.lax.while_loop(
-        cond, body, state)
-    return w_d, w_id, stats
+    pool_d, pool_id, w_d, w_id, visited, t_index, stats, _ = \
+        jax.lax.while_loop(cond, body, state)
+    return w_d, w_id, visited, stats, (t_index if tracing else None)
 
 
 def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
                         bitmaps, params: SearchParams, entry, entry_d,
-                        stats: SearchStats, use_pallas: bool):
+                        stats: SearchStats, use_pallas: bool, t_index=None):
     """Superstep port of `_iterative_scan` (pgvector resumable post-filter).
 
     Same per-query emit/resume logic and counters as the legacy body; the
     expansion path shares the traversal-first chunked machinery, and the
     big (EFMAX,) result buffer is maintained with O(EFMAX) gather merges
-    instead of a per-hop top_k over EFMAX + 2M candidates.
+    instead of a per-hop top_k over EFMAX + 2M candidates.  `t_index`
+    traces adjacency reads (popped nodes) like `_frontier_base`.
+    Returns (dists, ids, stats, visited, t_index-or-None).
     """
+    tracing = t_index is not None
+    if not tracing:
+        t_index = jnp.zeros((queries.shape[0], 0), jnp.uint32)
     n = graph.n
     qn = queries.shape[0]
     p = params.beam_width
@@ -914,7 +975,7 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         return ~state[-1].all()
 
     def body(state):
-        (pool_d, pool_id, w_d, w_id, visited, st, eff, rnd, checked,
+        (pool_d, pool_id, w_d, w_id, visited, t_index, st, eff, rnd, checked,
          done) = state
         best_d, best_id = pool_d[:, 0], pool_id[:, 0]
         w_worst = jnp.take_along_axis(
@@ -944,6 +1005,8 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
 
         # ---- normal expansion path (gated to active lanes)
         node = jnp.maximum(best_id, 0)
+        if tracing:
+            t_index = _trace_mark(t_index, node[:, None], active[:, None])
         nb1 = graph.neighbors[0, node]
         score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
         n_s = score_m.sum(-1).astype(jnp.int32)
@@ -961,15 +1024,15 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
             st.page_accesses_index + inc(jnp.int32(1)) + pai_emit,
             st.page_accesses_heap + inc(n_s * ppv),
             st.tmap_lookups + tm_emit, st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, st2, eff2, rnd2,
-                checked2, done | (live & finish))
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, t_index, st2, eff2,
+                rnd2, checked2, done | (live & finish))
 
-    state = (pool_d, pool_id, w_d, w_id, visited, stats,
+    state = (pool_d, pool_id, w_d, w_id, visited, t_index, stats,
              jnp.full((qn,), params.batch_tuples, jnp.int32),
              jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
              jnp.zeros((qn,), bool))
-    pool_d, pool_id, w_d, w_id, visited, stats, eff, rnd, checked, _ = \
-        jax.lax.while_loop(cond, body, state)
+    (pool_d, pool_id, w_d, w_id, visited, t_index, stats, eff, rnd, checked,
+     _) = jax.lax.while_loop(cond, body, state)
 
     def emit(d, ids, bm, eff_q):
         in_batch = jnp.arange(efmax) < eff_q
@@ -980,23 +1043,38 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         return dk, jnp.where(jnp.isinf(dk), -1, im[pos])
 
     dk, out_ids = jax.vmap(emit)(w_d, w_id, bitmaps, eff)
-    return dk, out_ids, stats
+    return dk, out_ids, stats, visited, (t_index if tracing else None)
 
 
 def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
-                           bitmaps, params: SearchParams, use_pallas: bool):
-    entry, entry_d, stats = jax.vmap(
-        lambda q: _zoom_in(graph, store, q, SearchStats.zeros()))(queries)
+                           bitmaps, params: SearchParams, use_pallas: bool,
+                           collect_trace: bool = False):
+    n = graph.n
+
+    def zoom(q):
+        trace = (bitset_zeros(n), bitset_zeros(n)) if collect_trace else None
+        return _zoom_in(graph, store, q, SearchStats.zeros(), trace=trace)
+
+    entry, entry_d, stats, zoom_trace = jax.vmap(zoom)(queries)
+    t_index0 = zoom_trace[1] if collect_trace else None
     if params.strategy == "iterative_scan":
-        return _frontier_iterative(graph, store, queries, bitmaps, params,
-                                   entry, entry_d, stats, use_pallas)
-    w_d, w_id, stats = _frontier_base(graph, store, queries, bitmaps, params,
-                                      entry, entry_d, stats,
-                                      ef_result=params.ef_search,
-                                      use_pallas=use_pallas)
-    check = params.strategy in ("unfiltered",)
-    dk, ids = jax.vmap(
-        lambda wd, wi, bm: _finalize(wd, wi, bm, params.k,
-                                     check_filter=not check))(
-                                         w_d, w_id, bitmaps)
-    return dk, ids, stats
+        dk, ids, stats, visited, t_index = _frontier_iterative(
+            graph, store, queries, bitmaps, params, entry, entry_d, stats,
+            use_pallas, t_index=t_index0)
+    else:
+        w_d, w_id, visited, stats, t_index = _frontier_base(
+            graph, store, queries, bitmaps, params, entry, entry_d, stats,
+            ef_result=params.ef_search, use_pallas=use_pallas,
+            t_index=t_index0)
+        check = params.strategy in ("unfiltered",)
+        dk, ids = jax.vmap(
+            lambda wd, wi, bm: _finalize(wd, wi, bm, params.k,
+                                         check_filter=not check))(
+                                             w_d, w_id, bitmaps)
+    if not collect_trace:
+        return dk, ids, stats
+    # heap rows fetched = zoom-in scored ∪ base-loop scored (the visited
+    # set marks exactly the scored candidates + entry) — word-wise OR of
+    # packed bitsets is trivially repeat-safe
+    trace = {"heap_rows": zoom_trace[0] | visited, "index_nodes": t_index}
+    return dk, ids, stats, trace

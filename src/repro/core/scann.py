@@ -30,8 +30,7 @@ from repro.core.types import (SearchParams, SearchStats, VectorStore,
                               distance, heap_pages_per_vector,
                               probe_bitmap, topk_smallest)
 from repro.kernels import ops as kops
-
-PAGE_BYTES = 8192
+from repro.storage.pages import PAGE_BYTES, scann_pages_per_leaf
 
 
 @jax.tree_util.register_dataclass
@@ -183,8 +182,9 @@ def project_query(index: ScannIndex, q: jax.Array) -> jax.Array:
 
 
 def _quant_pages_per_leaf(index: ScannIndex) -> int:
-    c, dp = index.leaf_tiles.shape[1], index.leaf_tiles.shape[2]
-    return max(1, -(-c * dp // PAGE_BYTES))
+    # geometry owned by the storage layer (storage/pages.py, DESIGN.md §8)
+    return scann_pages_per_leaf(index.leaf_tiles.shape[1],
+                                index.leaf_tiles.shape[2])
 
 
 _heap_pages_per_vector = heap_pages_per_vector  # shared formula (types.py)
@@ -308,10 +308,11 @@ def _select_leaves(index: ScannIndex, qp: jax.Array, nl: int,
     return leaves, L
 
 
-@partial(jax.jit, static_argnames=("params", "use_pallas"))
+@partial(jax.jit, static_argnames=("params", "use_pallas", "collect_trace"))
 def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
                        bitmaps, params: SearchParams,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       collect_trace: bool = False):
     """Filtered ScaNN search, query-batched (DESIGN.md §4).
 
     The whole batch moves through each stage together: ① one
@@ -330,7 +331,14 @@ def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
     size when query leaf sets are disjoint — stays VMEM/HBM-bounded
     (DESIGN.md §4 "Scaling envelope").  ids/dists are tile-size-invariant
     (each query only ever reads its own leaves' scores); "batch"
-    index-page accounting amortizes per tile instead of per batch."""
+    index-page accounting amortizes per tile instead of per batch.
+
+    `collect_trace=True` additionally returns the storage-access trace
+    (DESIGN.md §8) as a 4th element: `{"leaves": (Q, nl) leaves opened in
+    rank order, "cand_rows": (Q, r) reorder heap rows in candidate order,
+    "cand_ok": (Q, r) validity}` — exactly the object touches the page
+    counters charge, for the buffer pool to replay.  ids/dists/stats are
+    identical with the flag on or off."""
     if index.metric not in ("l2", "ip") or store.metric not in ("l2", "ip"):
         # distance_matrix (and the leaf-scan kernels) only implement L2/IP;
         # fail loudly instead of silently ranking cos stores by L2
@@ -344,19 +352,25 @@ def scann_search_batch(index: ScannIndex, store: VectorStore, queries,
         raise ValueError(f"scann_query_block must be >= 0, got {B}")
     if 0 < B < Q:
         outs = [_scann_search_block(index, store, queries[s:s + B],
-                                    bitmaps[s:s + B], params, use_pallas)
+                                    bitmaps[s:s + B], params, use_pallas,
+                                    collect_trace)
                 for s in range(0, Q, B)]
         dk = jnp.concatenate([o[0] for o in outs])
         ids = jnp.concatenate([o[1] for o in outs])
         stats = jax.tree.map(lambda *xs: jnp.concatenate(xs),
                              *[o[2] for o in outs])
+        if collect_trace:
+            trace = {k: jnp.concatenate([o[3][k] for o in outs])
+                     for k in outs[0][3]}
+            return dk, ids, stats, trace
         return dk, ids, stats
     return _scann_search_block(index, store, queries, bitmaps, params,
-                               use_pallas)
+                               use_pallas, collect_trace)
 
 
 def _scann_search_block(index: ScannIndex, store: VectorStore, queries,
-                        bitmaps, params: SearchParams, use_pallas: bool):
+                        bitmaps, params: SearchParams, use_pallas: bool,
+                        collect_trace: bool = False):
     """One query tile through the batched pipeline (stages ①–④ above)."""
     Q = queries.shape[0]
     L, C, dp = index.leaf_tiles.shape
@@ -448,4 +462,9 @@ def _scann_search_block(index: ScannIndex, store: VectorStore, queries,
                                 jnp.int32),
         tmap_lookups=z,
         reorder_rows=n_reorder.astype(jnp.int32))
+    if collect_trace:
+        trace = {"leaves": leaves.astype(jnp.int32),
+                 "cand_rows": cand_rows.astype(jnp.int32),
+                 "cand_ok": cand_ok}
+        return dk, ids, stats, trace
     return dk, ids, stats

@@ -18,6 +18,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Page geometry has one owner: the storage layer (DESIGN.md §8).  The
+# names are re-exported here for backward compatibility — every historical
+# consumer imported them from core.types.
+from repro.storage.pages import (HEAP_PAGE_BYTES,  # noqa: F401
+                                 heap_pages_per_vector)
+
 Array = jax.Array
 
 # Metrics supported by the paper's datasets (Table 2): L2 and inner product.
@@ -218,14 +224,6 @@ class SearchParams:
     max_rounds: int = 16
 
 
-HEAP_PAGE_BYTES = 8192
-
-
-def heap_pages_per_vector(dim: int) -> int:
-    """Heap pages touched per full-precision vector fetch (8 KB pages)."""
-    return max(1, -(-dim * 4 // HEAP_PAGE_BYTES))
-
-
 @dataclasses.dataclass
 class SearchResult:
     """Unified return convention of every executor (DESIGN.md §6).
@@ -237,6 +235,8 @@ class SearchResult:
     this is the *chosen* fixed strategy, not "adaptive").
     plan: the SearchPlan that produced this result (selectivity estimates,
     predicted cycles — executor.py).
+    storage: measured storage telemetry (storage.StorageStats) when the
+    executor ran with a StorageEngine attached; None otherwise.
     """
 
     dists: Array
@@ -244,6 +244,7 @@ class SearchResult:
     stats: Optional[SearchStats]
     strategy: str
     plan: Any = None
+    storage: Any = None
 
 
 def topk_smallest(values: Array, k: int) -> tuple[Array, Array]:

@@ -15,7 +15,7 @@ Sampling-without-replacement uses the Gumbel-top-k trick so the whole
 generator is a single jittable program.  When the requested selectivity
 exceeds the correlated pool size (e.g. 90 % selectivity with high_pos whose
 pool is N/3), the full pool is taken and the remainder is drawn uniformly
-from the rest — the maximum-feasible-correlation completion (DESIGN.md §8).
+from the rest — the maximum-feasible-correlation completion.
 """
 from __future__ import annotations
 

@@ -12,6 +12,16 @@ Any Executor works: a local `ScannExecutor`/`GraphExecutor`, the
 `AdaptivePlanner` (the server then picks the strategy per batch), or the
 mesh-sharded `DistributedScannExecutor` — the server never hard-codes an
 index type.
+
+Under heavy traffic the server batches its request queue, and HOW it
+batches decides buffer-pool locality (ROADMAP "frontier-union overlap"
+item, DESIGN.md §8): `serve_queue(policy="centroid")` clusters queued
+requests by their nearest ScaNN centroid before dispatch, so queries
+landing in the same leaves share a batch — their leaf opens, frontier
+unions, and reorder fetches hit the same pages.  The executor's
+StorageEngine (buffer pool) persists across request batches, so the
+hit-rate lift vs FIFO batching is directly measurable
+(benchmarks/bench_storage.py).
 """
 from __future__ import annotations
 
@@ -26,6 +36,8 @@ from repro.core.executor import Executor
 from repro.core.types import SearchParams, SearchResult
 from repro.models.api import ModelBundle
 
+BATCH_POLICIES = ("fifo", "centroid")
+
 
 @dataclasses.dataclass
 class RetrievalResult:
@@ -33,6 +45,37 @@ class RetrievalResult:
     dists: np.ndarray      # (B, k)
     tokens: np.ndarray     # (B, P + k*chunk) augmented prompts
     strategy: str          # strategy that served the batch (planner-aware)
+
+
+def find_scann_index(executor: Executor):
+    """The ScaNN index an executor routes with, if it has one (duck-typed:
+    ScannExecutor, AdaptivePlanner with a scann candidate, or the
+    mesh-sharded executor)."""
+    idx = getattr(executor, "index", None)
+    if idx is not None:
+        return idx
+    scann_ex = getattr(executor, "_scann", None)       # AdaptivePlanner
+    if scann_ex is not None:
+        return scann_ex.index
+    sharded = getattr(executor, "sharded", None)       # distributed
+    if sharded is not None:
+        return sharded.index
+    return None
+
+
+@jax.jit
+def nearest_centroid(index, queries):
+    """Leaf-centroid id nearest to each (already-embedded) query — the
+    routing key of the centroid batch policy.  (Q,) int32.  Metric-aware
+    (same ranking as `scann._select_leaves`): the routing key must be the
+    leaf the query will actually open, under L2 AND IP indexes."""
+    from repro.core.scann import project_query
+    from repro.core.types import distance
+    qp = project_query(index, queries)
+    cents = index.leaf_centroids
+    d = distance(index.metric, qp[:, None, :], cents[None, :, :],
+                 jnp.sum(cents * cents, -1)[None, :])
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)
 
 
 class RetrievalAugmentedServer:
@@ -61,6 +104,13 @@ class RetrievalAugmentedServer:
 
         self._embed = jax.jit(embed_fn)
 
+    def _augment(self, idn: np.ndarray, prompts: np.ndarray) -> np.ndarray:
+        chunks = self.doc_tokens[np.maximum(idn, 0)]       # (B, k, chunk)
+        chunks = np.where((idn >= 0)[..., None], chunks, 0)
+        aug = np.concatenate(
+            [chunks.reshape(idn.shape[0], -1), prompts], axis=1)
+        return aug.astype(np.int32)
+
     def retrieve(self, prompts: np.ndarray,
                  bitmaps: jax.Array) -> RetrievalResult:
         """prompts (B, P) int32; bitmaps (B, words) — the evaluated filter."""
@@ -68,10 +118,73 @@ class RetrievalAugmentedServer:
         res: SearchResult = self.executor.search(q, bitmaps,
                                                  self.search_params)
         idn = np.asarray(res.ids)
-        chunks = self.doc_tokens[np.maximum(idn, 0)]       # (B, k, chunk)
-        chunks = np.where((idn >= 0)[..., None], chunks, 0)
-        aug = np.concatenate(
-            [chunks.reshape(idn.shape[0], -1), prompts], axis=1)
         return RetrievalResult(ids=idn, dists=np.asarray(res.dists),
-                               tokens=aug.astype(np.int32),
+                               tokens=self._augment(idn, prompts),
                                strategy=res.strategy)
+
+    def serve_queue(self, prompts: np.ndarray, bitmaps: jax.Array,
+                    batch_size: int = 16, policy: str = "centroid"
+                    ) -> tuple[RetrievalResult, dict]:
+        """Serve a whole request queue in dispatch batches.
+
+        policy "fifo" batches requests in arrival order; "centroid"
+        (the serving-layer routing policy, DESIGN.md §8) sorts the queue
+        by each embedded query's nearest ScaNN leaf centroid first, so
+        requests that will open the same leaves (and walk the same graph
+        neighborhoods) share a batch — raising buffer-pool hit rates and
+        frontier-union overlap.  Results are returned in arrival order
+        either way, and for FIXED executors ids/dists are policy-invariant
+        (each query's result depends only on the query itself).  An
+        AdaptivePlanner executor picks its strategy per dispatch batch
+        from batch-level selectivity estimates, so regrouping the queue
+        can change which strategy serves a query — same recall target,
+        not bit-identical results.
+
+        Returns (RetrievalResult in arrival order, info) where info
+        carries the dispatch order, per-batch strategies, and the
+        executor's storage telemetry delta when a StorageEngine is
+        attached (the pool persists across batches — warm serving).
+        """
+        if policy not in BATCH_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; one of {BATCH_POLICIES}")
+        prompts = np.asarray(prompts)
+        q = self._embed(self.params, jnp.asarray(prompts))
+        nreq = q.shape[0]
+        order = np.arange(nreq)
+        if policy == "centroid":
+            index = find_scann_index(self.executor)
+            if index is None:
+                raise ValueError("centroid policy needs an executor with "
+                                 "a ScaNN index (use policy='fifo')")
+            keys = np.asarray(nearest_centroid(index, q))
+            order = np.argsort(keys, kind="stable")
+        bitmaps = jnp.asarray(bitmaps)
+        k = self.k
+        ids = np.full((nreq, k), -1, np.int32)
+        dists = np.full((nreq, k), np.inf, np.float32)
+        strategies = []
+        # NB: `is not None`, not truthiness — BufferPool defines __len__,
+        # so an empty (freshly reset) pool is falsy
+        pool = getattr(getattr(self.executor, "storage", None), "pool",
+                       None)
+        h0, m0 = (pool.counters.hits, pool.counters.misses) \
+            if pool is not None else (0, 0)
+        for s in range(0, nreq, batch_size):
+            sel = jnp.asarray(order[s:s + batch_size])
+            res: SearchResult = self.executor.search(
+                q[sel], bitmaps[sel], self.search_params)
+            ids[order[s:s + batch_size]] = np.asarray(res.ids)
+            dists[order[s:s + batch_size]] = np.asarray(res.dists)
+            strategies.append(res.strategy)
+        info = {"order": order, "strategies": strategies, "policy": policy}
+        if pool is not None:
+            dh = pool.counters.hits - h0
+            dm = pool.counters.misses - m0
+            info["pool_hits"] = dh
+            info["pool_misses"] = dm
+            info["pool_hit_rate"] = dh / max(dh + dm, 1)
+        strategy = strategies[0] if len(set(strategies)) == 1 else "mixed"
+        return RetrievalResult(ids=ids, dists=dists,
+                               tokens=self._augment(ids, prompts),
+                               strategy=strategy), info

@@ -1,0 +1,22 @@
+"""Paged storage engine: page layouts, buffer pool, batch accounting.
+
+The subsystem that turns the repo's analytic page counters into measured
+ones (DESIGN.md §8): `pages` owns all page geometry, `bufferpool` models
+shared buffers (LRU/clock, cold/warm, telemetry), `engine` translates
+executor access traces into pooled page streams and `StorageStats`.
+"""
+from repro.storage.pages import (PAGE_BYTES, HEAP_PAGE_BYTES,
+                                 GraphAdjacencyLayout, HeapLayout,
+                                 ScannLeafLayout, heap_pages_per_vector,
+                                 scann_pages_per_leaf)
+from repro.storage.bufferpool import (POLICIES, BufferPool, BufferPoolState,
+                                      PoolCounters)
+from repro.storage.engine import (SEGMENTS, StorageEngine, StorageStats,
+                                  make_storage_engine)
+
+__all__ = [
+    "PAGE_BYTES", "HEAP_PAGE_BYTES", "GraphAdjacencyLayout", "HeapLayout",
+    "ScannLeafLayout", "heap_pages_per_vector", "scann_pages_per_leaf",
+    "POLICIES", "BufferPool", "BufferPoolState", "PoolCounters",
+    "SEGMENTS", "StorageEngine", "StorageStats", "make_storage_engine",
+]

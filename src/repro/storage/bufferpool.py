@@ -1,0 +1,202 @@
+"""Buffer pool: fixed-capacity page cache with LRU/clock replacement and
+hit/miss/eviction telemetry (DESIGN.md §8).
+
+This is the system component the paper keeps pointing at: the winning FVS
+strategy is decided by buffer-manager behavior — hit rates, cold vs warm,
+page-level locality — not distance FLOPs.  The pool models a PostgreSQL
+shared-buffers analogue over the global page-id space the storage layouts
+(pages.py) define: executors feed it their page-access traces and it
+answers which accesses were physical (misses) vs served from the pool
+(hits).
+
+Data plane and accounting are deliberately decoupled: vector *values* are
+always gathered from the dense JAX arrays (bit-identical results by
+construction); the pool tracks which 8 KB pages those gathers would have
+pinned.  Accounting runs host-side on numpy traces — it never enters a
+jitted loop.
+
+Modes:
+  cold  — `reset()` empties the pool (first-touch of every page misses);
+  warm  — the pool persists across `access` calls (and, held by an
+          executor, across whole request batches — serving/rag.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Mapping, Optional
+
+import numpy as np
+
+POLICIES = ("lru", "clock")
+
+
+@dataclasses.dataclass
+class PoolCounters:
+    """Cumulative telemetry since construction / last `reset_counters`."""
+
+    logical: int = 0       # page accesses fed to the pool
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.logical if self.logical else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(logical=self.logical, hits=self.hits,
+                    misses=self.misses, evictions=self.evictions,
+                    hit_rate=round(self.hit_rate, 4))
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferPoolState:
+    """Residency snapshot the AdaptivePlanner consumes (DESIGN.md §8):
+    per-segment fraction of that segment's pages currently resident.
+    A strategy about to touch segment S expects ~`1 - residency[S]` of its
+    page accesses to miss (uniform-touch approximation)."""
+
+    capacity: int
+    used: int
+    residency: Mapping[str, float]     # segment name -> resident fraction
+
+    def miss_fraction(self, segment: str) -> float:
+        return 1.0 - self.residency.get(segment, 0.0)
+
+
+class BufferPool:
+    """Fixed-capacity page cache. `capacity_pages <= 0` means unbounded
+    (everything stays resident once touched — the flat-memory LIBRARY
+    regime).
+
+    `segments` (name -> (lo, hi) page-id range, non-overlapping) enables
+    O(1)-maintained per-segment residency counters, so `state()` — called
+    by AdaptivePlanner on every plan — never scans the resident set."""
+
+    def __init__(self, capacity_pages: int, policy: str = "lru",
+                 segments: Optional[Mapping[str, tuple[int, int]]] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.capacity = int(capacity_pages)
+        self.policy = policy
+        # page id -> clock reference bit (ignored under LRU; OrderedDict
+        # order IS the recency/insertion order for lru/clock respectively)
+        self._pages: OrderedDict[int, bool] = OrderedDict()
+        self.counters = PoolCounters()
+        self._segments = dict(segments) if segments else {}
+        self._seg_los = sorted((lo, hi, name)
+                               for name, (lo, hi) in self._segments.items())
+        self._seg_count = dict.fromkeys(self._segments, 0)
+
+    def _segment_of(self, page: int) -> Optional[str]:
+        import bisect
+        i = bisect.bisect_right(self._seg_los, (page, float("inf"), "")) - 1
+        if i >= 0:
+            lo, hi, name = self._seg_los[i]
+            if lo <= page < hi:
+                return name
+        return None
+
+    def _count(self, page: int, delta: int) -> None:
+        if self._segments:
+            seg = self._segment_of(page)
+            if seg is not None:
+                self._seg_count[seg] += delta
+
+    # -- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def __contains__(self, page: int) -> bool:
+        return int(page) in self._pages
+
+    def resident_in(self, lo: int, hi: int) -> int:
+        """Resident pages with lo <= id < hi (a segment range)."""
+        return sum(1 for p in self._pages if lo <= p < hi)
+
+    # -- modes --------------------------------------------------------------
+    def reset(self) -> None:
+        """Cold mode: drop every resident page (telemetry survives)."""
+        self._pages.clear()
+        self._seg_count = dict.fromkeys(self._segments, 0)
+
+    def reset_counters(self) -> None:
+        self.counters = PoolCounters()
+
+    # -- the access path ----------------------------------------------------
+    def access(self, pages: np.ndarray, dedup: bool = False) -> PoolCounters:
+        """Run a page-access trace through the pool, in order.
+
+        `dedup=True` is the batch semantics (DESIGN.md §5/§8): duplicate
+        pages within THIS call are charged once — first occurrence decides
+        hit/miss, repeats are neither logical accesses nor touches
+        (idempotent: access(p, dedup=True) twice in one call == once).
+        Returns the per-call delta counters (cumulative ones accrue on
+        `self.counters`).
+        """
+        pages = np.asarray(pages).reshape(-1)
+        if dedup and len(pages):
+            _, first = np.unique(pages, return_index=True)
+            pages = pages[np.sort(first)]        # first-touch order kept
+        delta = PoolCounters()
+        for p in pages.tolist():
+            delta.logical += 1
+            if p in self._pages:
+                delta.hits += 1
+                if self.policy == "lru":
+                    self._pages.move_to_end(p)
+                else:
+                    self._pages[p] = True        # clock reference bit
+                continue
+            delta.misses += 1
+            if self.capacity > 0 and len(self._pages) >= self.capacity:
+                self._evict()
+                delta.evictions += 1
+            self._pages[p] = False
+            self._count(p, +1)
+        self.counters.logical += delta.logical
+        self.counters.hits += delta.hits
+        self.counters.misses += delta.misses
+        self.counters.evictions += delta.evictions
+        return delta
+
+    def _evict(self) -> None:
+        if self.policy == "lru":
+            page, _ = self._pages.popitem(last=False)   # least recently used
+            self._count(page, -1)
+            return
+        # clock / second-chance as a FIFO ring: sweep from the oldest
+        # entry, rotating referenced pages to the back with their bit
+        # cleared — O(1) amortized, no key-list materialization
+        while True:
+            k, ref = next(iter(self._pages.items()))
+            if ref:
+                self._pages[k] = False
+                self._pages.move_to_end(k)
+            else:
+                del self._pages[k]
+                self._count(k, -1)
+                return
+
+    # -- planner snapshot ---------------------------------------------------
+    def state(self, segments: Optional[Mapping[str, tuple[int, int]]] = None
+              ) -> BufferPoolState:
+        """Residency snapshot. `segments` maps name -> (lo, hi) page-id
+        range; residency = resident / segment size — the plain fraction of
+        the segment's pages currently resident, so `1 − residency` is the
+        expected miss fraction of a uniform access over the segment
+        (`costmodel.cache_miss_penalty`'s contract).  A pool smaller than
+        the segment can therefore never report it fully warm.  Segments
+        configured at construction read the incrementally-maintained
+        counters (O(1)); ad-hoc ranges fall back to a resident-set scan."""
+        res = {}
+        for name, (lo, hi) in (segments or self._segments).items():
+            size = max(1, hi - lo)
+            if name in self._segments and self._segments[name] == (lo, hi):
+                n_res = self._seg_count[name]
+            else:
+                n_res = self.resident_in(lo, hi)
+            res[name] = min(1.0, n_res / size)
+        return BufferPoolState(capacity=self.capacity, used=len(self._pages),
+                               residency=res)

@@ -1,0 +1,245 @@
+"""Paged storage engine: layouts + buffer pool + per-batch accounting
+(DESIGN.md §8).
+
+`StorageEngine` owns the three page segments of the paged object model —
+
+    heap   — full-precision vector rows        (pages.HeapLayout)
+    scann  — quantized ScaNN posting lists     (pages.ScannLeafLayout)
+    graph  — HNSW adjacency / element tuples   (pages.GraphAdjacencyLayout)
+
+— mapped into one global page-id space, fronted by one `BufferPool`
+(shared buffers).  Executors run their (bit-identical) jitted searches
+with trace collection on, then hand the traces here; the engine translates
+object touches into page-access streams through the layouts, runs them
+through the pool, and returns a `StorageStats`: measured logical accesses
+per query plus the pool's physical hit/miss/eviction split.
+
+Accounting semantics (matching the SearchStats counter semantics they are
+validated against — tests/test_storage.py):
+
+  * scann "per_query": every query's opened leaves are charged through the
+    pool individually (repeat opens across queries are pool *hits*, but
+    every open is a logical access) — measured logical index pages per
+    query == nl × pages_per_leaf, exactly the analytic counter.
+  * scann "batch": duplicate leaves across the batch are charged once, to
+    the first query that opened them — measured logical ==
+    unique_opened_leaves × pages_per_leaf, summed over the batch, exactly
+    the "batch" accounting of scann_search_batch (DESIGN.md §5).
+  * heap (reorder / seqscan / graph fetches): always per query —
+    `pages_per_row` logical pages per fetched row; cross-query repeats
+    are hits, not elided accesses.
+  * graph traces arrive as packed touched-object bitsets (order within a
+    query is id-ascending — the documented approximation of first-touch
+    order; DESIGN.md §8), so graph measured-logical counts each touched
+    object once.  Zoom-in re-scores (a node scored at two upper levels)
+    are charged once here but twice by the analytic counters — the only
+    place measured ≤ analytic instead of ==.
+
+Host-side numpy only; nothing here enters a jitted trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+from repro.storage.bufferpool import BufferPool, BufferPoolState
+from repro.storage.pages import (GraphAdjacencyLayout, HeapLayout,
+                                 ScannLeafLayout)
+
+SEGMENTS = ("heap", "scann", "graph")
+
+
+def _unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
+    """(W,) uint32 packed bitset -> (n,) bool (numpy-local; no core dep)."""
+    w = np.asarray(words, np.uint32)
+    bits = (w[:, None] >> np.arange(32, dtype=np.uint32)) & np.uint32(1)
+    return bits.reshape(-1)[:n].astype(bool)
+
+
+@dataclasses.dataclass
+class StorageStats:
+    """Measured per-batch storage telemetry (one executor call)."""
+
+    logical: dict            # segment -> logical page accesses (batch sum)
+    hits: dict               # segment -> pool hits
+    misses: dict             # segment -> pool misses (physical reads)
+    evictions: int
+    # per-query measured logical counters (the SearchStats comparables):
+    index_pages: np.ndarray  # (Q,) scann-or-graph index pages charged
+    heap_pages: np.ndarray   # (Q,) heap pages charged
+
+    @property
+    def logical_total(self) -> int:
+        return int(sum(self.logical.values()))
+
+    @property
+    def miss_total(self) -> int:
+        return int(sum(self.misses.values()))
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.logical_total
+        return float(sum(self.hits.values())) / t if t else 0.0
+
+    def as_dict(self) -> dict:
+        return dict(logical=dict(self.logical), hits=dict(self.hits),
+                    misses=dict(self.misses), evictions=self.evictions,
+                    hit_rate=round(self.hit_rate, 4),
+                    index_pages=self.index_pages.tolist(),
+                    heap_pages=self.heap_pages.tolist())
+
+
+class StorageEngine:
+    """Layouts + pool + accounting for one dataset's page space."""
+
+    def __init__(self, heap: HeapLayout,
+                 scann: Optional[ScannLeafLayout] = None,
+                 graph: Optional[GraphAdjacencyLayout] = None,
+                 capacity_pages: Optional[int] = None,
+                 capacity_frac: float = 0.5, policy: str = "lru"):
+        self.heap = heap
+        self.scann = scann
+        self.graph = graph
+        # global page-id space: [heap | scann | graph]
+        self._base = {"heap": 0}
+        off = heap.num_pages
+        if scann is not None:
+            self._base["scann"] = off
+            off += scann.num_pages
+        if graph is not None:
+            self._base["graph"] = off
+            off += graph.num_pages
+        self.total_pages = off
+        if capacity_pages is None:
+            capacity_pages = max(1, int(round(capacity_frac * off)))
+        self.pool = BufferPool(capacity_pages, policy=policy,
+                               segments=self.segment_ranges())
+
+    # -- segment helpers ----------------------------------------------------
+    def segment_ranges(self) -> dict[str, tuple[int, int]]:
+        layouts = {"heap": self.heap, "scann": self.scann,
+                   "graph": self.graph}
+        return {name: (lo, lo + layouts[name].num_pages)
+                for name, lo in self._base.items()}
+
+    def state(self) -> BufferPoolState:
+        return self.pool.state(self.segment_ranges())
+
+    def reset_cold(self) -> None:
+        self.pool.reset()
+
+    # -- accounting entry points --------------------------------------------
+    def _replay(self, streams) -> StorageStats:
+        """Run per-query page streams through the pool and accumulate one
+        StorageStats.  `streams` is, per query, a list of
+        (segment, page_ids) in access order; segment "heap" accrues to the
+        per-query heap counter, anything else to the index counter."""
+        q = len(streams)
+        segs = sorted({s for per_q in streams for s, _ in per_q})
+        log = dict.fromkeys(segs, 0)
+        hit = dict.fromkeys(segs, 0)
+        mis = dict.fromkeys(segs, 0)
+        ev = 0
+        idx_pages = np.zeros(q, np.int64)
+        heap_pages = np.zeros(q, np.int64)
+        for i, per_q in enumerate(streams):
+            for seg, pages in per_q:
+                d = self.pool.access(self._base[seg] + np.asarray(pages))
+                log[seg] += d.logical
+                hit[seg] += d.hits
+                mis[seg] += d.misses
+                ev += d.evictions
+                if seg == "heap":
+                    heap_pages[i] += d.logical
+                else:
+                    idx_pages[i] += d.logical
+        return StorageStats(log, hit, mis, ev, idx_pages, heap_pages)
+
+    def account_scann(self, leaves: np.ndarray, cand_rows: np.ndarray,
+                      cand_ok: np.ndarray,
+                      accounting: str = "per_query",
+                      query_block: int = 0) -> StorageStats:
+        """leaves (Q, nl) opened per query; cand_rows/cand_ok (Q, r) the
+        reorder gather.  `accounting` mirrors
+        SearchParams.scann_page_accounting; `query_block` mirrors
+        SearchParams.scann_query_block — under "batch" accounting the
+        pipeline amortizes leaf opens per query-block TILE, not per whole
+        batch (DESIGN.md §4/§5), so the first-touch dedup window resets at
+        every tile boundary to keep measured == analytic.  Batch-mode
+        dedup applies within a query's own leaf list too (the analytic
+        counter charges the leaf UNION, which collapses repeats)."""
+        if self.scann is None:
+            raise ValueError("engine built without a scann layout")
+        if accounting not in ("per_query", "batch"):
+            raise ValueError(f"unknown accounting {accounting!r}")
+        leaves = np.asarray(leaves)
+        cand_rows = np.asarray(cand_rows)
+        cand_ok = np.asarray(cand_ok, bool)
+        streams = []
+        seen: set[int] = set()
+        for i in range(leaves.shape[0]):
+            lv = leaves[i]
+            if accounting == "batch":
+                if query_block > 0 and i % query_block == 0:
+                    seen.clear()              # new tile: fresh dedup window
+                first = []
+                for leaf in lv.tolist():
+                    if leaf not in seen:
+                        seen.add(leaf)
+                        first.append(leaf)
+                lv = np.array(first, np.int64)
+            streams.append([
+                ("scann", self.scann.pages_for_leaves(lv)),
+                ("heap", self.heap.pages_for_rows(cand_rows[i][cand_ok[i]])),
+            ])
+        return self._replay(streams)
+
+    def account_graph(self, heap_rows_bits: np.ndarray,
+                      index_nodes_bits: np.ndarray) -> StorageStats:
+        """Packed per-query touched-object bitsets from the frontier
+        engine's trace: heap_rows (rows fetched full-precision),
+        index_nodes (adjacency entries read)."""
+        if self.graph is None:
+            raise ValueError("engine built without a graph layout")
+        hbits = np.asarray(heap_rows_bits)
+        ibits = np.asarray(index_nodes_bits)
+        n = self.heap.n
+        streams = [[
+            ("graph", self.graph.pages_for_nodes(
+                np.nonzero(_unpack_bits(ibits[i], n))[0])),
+            ("heap", self.heap.pages_for_rows(
+                np.nonzero(_unpack_bits(hbits[i], n))[0])),
+        ] for i in range(hbits.shape[0])]
+        return self._replay(streams)
+
+    def account_seqscan(self, bitmaps: np.ndarray) -> StorageStats:
+        """Bruteforce: every passing row fetched from the heap in row-id
+        order (the seqscan).  bitmaps (Q, W) packed filter bitmaps."""
+        bm = np.asarray(bitmaps)
+        streams = [[
+            ("heap", self.heap.pages_for_rows(
+                np.nonzero(_unpack_bits(bm[i], self.heap.n))[0])),
+        ] for i in range(bm.shape[0])]
+        return self._replay(streams)
+
+
+def make_storage_engine(store, index=None, graph=None,
+                        capacity_pages: Optional[int] = None,
+                        capacity_frac: float = 0.5,
+                        policy: str = "lru") -> StorageEngine:
+    """Build an engine from live components: a core VectorStore, optional
+    ScannIndex, optional HNSWGraph (duck-typed on shapes — no core import)."""
+    heap = HeapLayout(n=int(store.vectors.shape[0]),
+                      dim=int(store.vectors.shape[1]))
+    scann = None
+    if index is not None:
+        L, C, dp = index.leaf_tiles.shape
+        scann = ScannLeafLayout(num_leaves=int(L), cap=int(C), dp=int(dp))
+    gl = None
+    if graph is not None:
+        gl = GraphAdjacencyLayout(n=int(graph.neighbors.shape[1]),
+                                  degree=int(graph.neighbors.shape[2]))
+    return StorageEngine(heap, scann, gl, capacity_pages=capacity_pages,
+                         capacity_frac=capacity_frac, policy=policy)

@@ -1,0 +1,139 @@
+"""Fixed-size page layouts — the one owner of page geometry (DESIGN.md §8).
+
+The paper's central object model is a page engine: full-precision vector
+rows live on 8 KB *heap* pages, quantized ScaNN posting lists on leaf
+pages, and graph adjacency (HNSW element tuples) on index pages.  Until
+this module, the repo asserted that geometry in scattered constants
+(`heap_pages_per_vector` in core/types.py, `PAGE_BYTES` in core/scann.py);
+every layout now lives here and everything else (counters, cost model,
+buffer-pool accounting) derives from it.
+
+Layouts are PostgreSQL-like in the one property the counters depend on:
+**an object never straddles a page boundary it doesn't have to** — a row
+that fits in a page occupies exactly one page, a row larger than a page
+occupies `ceil(bytes / PAGE_BYTES)` dedicated pages.  Hence logical page
+accesses per object touch are exactly the analytic per-object constants
+the SearchStats counters have always charged (`pages_per_row`,
+`pages_per_leaf`, 1 adjacency page per node), and the layouts additionally
+pin *which* physical pages those are — what the buffer pool needs.
+
+Pure numpy; no repro.core imports (core/types.py imports from here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PAGE_BYTES = 8192
+# Backward-compat alias (core/types.py re-exports it under this name).
+HEAP_PAGE_BYTES = PAGE_BYTES
+
+
+def heap_pages_per_vector(dim: int) -> int:
+    """Heap pages touched per full-precision vector fetch (8 KB pages)."""
+    return max(1, -(-dim * 4 // PAGE_BYTES))
+
+
+def scann_pages_per_leaf(cap: int, dp: int) -> int:
+    """Quantized-leaf pages per ScaNN leaf: (C, dp) int8 tile on 8 KB pages."""
+    return max(1, -(-cap * dp // PAGE_BYTES))
+
+
+@dataclasses.dataclass(frozen=True)
+class HeapLayout:
+    """Full-precision vector rows on 8 KB heap pages.
+
+    If a row fits in a page, `rows_per_page` rows pack per page and one
+    fetch touches 1 page; otherwise each row owns `pages_per_row`
+    consecutive pages and one fetch touches all of them.  Either way the
+    logical page touches per fetched row equal
+    `heap_pages_per_vector(dim)` — the analytic constant, now derived.
+    """
+
+    n: int
+    dim: int
+
+    @property
+    def row_bytes(self) -> int:
+        return self.dim * 4
+
+    @property
+    def pages_per_row(self) -> int:
+        return heap_pages_per_vector(self.dim)
+
+    @property
+    def rows_per_page(self) -> int:
+        if self.pages_per_row > 1:
+            return 1
+        return max(1, PAGE_BYTES // self.row_bytes)
+
+    @property
+    def num_pages(self) -> int:
+        if self.pages_per_row > 1:
+            return self.n * self.pages_per_row
+        return -(-self.n // self.rows_per_page)
+
+    def pages_for_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Page ids touched fetching `rows`, in fetch order: `pages_per_row`
+        consecutive pages per row (so len == len(rows) * pages_per_row —
+        the logical access count)."""
+        rows = np.asarray(rows, np.int64)
+        ppr = self.pages_per_row
+        if ppr == 1:
+            return rows // self.rows_per_page
+        return (rows[:, None] * ppr + np.arange(ppr)).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScannLeafLayout:
+    """Quantized ScaNN posting lists: each leaf's (C, dp) int8 tile occupies
+    `pages_per_leaf` consecutive index pages (the paper's "leaf packs as
+    many vectors as fit in a page, linked list of pages")."""
+
+    num_leaves: int
+    cap: int
+    dp: int
+
+    @property
+    def pages_per_leaf(self) -> int:
+        return scann_pages_per_leaf(self.cap, self.dp)
+
+    @property
+    def num_pages(self) -> int:
+        return self.num_leaves * self.pages_per_leaf
+
+    def pages_for_leaves(self, leaves: np.ndarray) -> np.ndarray:
+        """Page ids touched opening `leaves`, in open order (`pages_per_leaf`
+        consecutive pages per leaf)."""
+        leaves = np.asarray(leaves, np.int64)
+        ppl = self.pages_per_leaf
+        return (leaves[:, None] * ppl + np.arange(ppl)).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphAdjacencyLayout:
+    """HNSW element tuples (level-0 neighbor list + per-level links) on
+    index pages.  One node touch = one logical index-page access — the
+    analytic convention of every graph counter; the layout pins which
+    page by packing `nodes_per_page` element tuples per 8 KB page."""
+
+    n: int
+    degree: int                    # level-0 neighbor count (2M)
+
+    @property
+    def entry_bytes(self) -> int:
+        # neighbor ids (int32) + heaptid/level header, PG-tuple-ish
+        return self.degree * 4 + 64
+
+    @property
+    def nodes_per_page(self) -> int:
+        return max(1, PAGE_BYTES // self.entry_bytes)
+
+    @property
+    def num_pages(self) -> int:
+        return -(-self.n // self.nodes_per_page)
+
+    def pages_for_nodes(self, nodes: np.ndarray) -> np.ndarray:
+        """Page ids of `nodes`' adjacency entries, one per node touch."""
+        return np.asarray(nodes, np.int64) // self.nodes_per_page

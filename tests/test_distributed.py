@@ -83,6 +83,27 @@ _SUBPROCESS_SRC = textwrap.dedent("""
     rec = float(np.mean(np.asarray(jax.vmap(
         lambda f, t: recall_at_k(f, t, 10))(ids, tid))))
 
+    # executor path WITH per-query stats riding the all-gather: identical
+    # ids/dists to the stats-free fn, counters per-query and sane
+    from repro.core.distributed import DistributedScannExecutor
+    from repro.core.scann import _quant_pages_per_leaf
+    ex = DistributedScannExecutor(sh)
+    res = ex.search(queries, bm, params)
+    ids_eq = bool(np.array_equal(np.asarray(res.ids), np.asarray(ids)))
+    st = res.stats
+    nd = 8
+    nsel = min(max(1, -(-params.num_leaves_to_search // nd)),
+               sh.index.num_leaves // nd)
+    hops_ok = bool((np.asarray(st.hops) == nd * nsel).all())
+    qppl = _quant_pages_per_leaf(sh.index)
+    pages_ok = bool((np.asarray(st.page_accesses_index)
+                     == nd * nsel * qppl).all())
+    stats_pos = bool((np.asarray(st.filter_checks) > 0).all()
+                     and (np.asarray(st.distance_comps) > 0).all()
+                     and (np.asarray(st.reorder_rows)
+                          == np.asarray(st.page_accesses_heap)).all())
+    # (ppv == 1 at dim=32, so heap pages == reorder rows)
+
     # distributed kmeans == single-device kmeans (same init, fori semantics)
     km = distributed_kmeans_fn(mesh, "data", k=8, iters=5)
     x = np.asarray(store.vectors)
@@ -93,7 +114,9 @@ _SUBPROCESS_SRC = textwrap.dedent("""
     c_one = np.asarray(km1(jnp.asarray(x), jnp.asarray(init)))
     err = float(np.abs(c_dist - c_one).max())
     print(json.dumps({"recall": rec, "kmeans_err": err,
-                      "devices": jax.device_count()}))
+                      "devices": jax.device_count(), "ids_eq": ids_eq,
+                      "hops_ok": hops_ok, "pages_ok": pages_ok,
+                      "stats_pos": stats_pos}))
 """)
 
 
@@ -107,3 +130,7 @@ def test_distributed_search_8dev():
     assert rec["devices"] == 8
     assert rec["recall"] >= 0.9
     assert rec["kmeans_err"] < 1e-3
+    # the executor's per-query SearchStats (satellite: stats across the
+    # mesh) must not perturb results and must carry the mesh semantics
+    assert rec["ids_eq"] and rec["hops_ok"] and rec["pages_ok"] \
+        and rec["stats_pos"]

@@ -1,0 +1,436 @@
+"""Paged storage engine (src/repro/storage/, DESIGN.md §8).
+
+Three layers of guarantees:
+
+  * BufferPool invariants — capacity never exceeded, LRU eviction order,
+    hit + miss == logical, batch-dedup idempotence (deterministic tests +
+    hypothesis property tests when the dev dep is installed);
+  * storage-on vs legacy executor paths are BIT-IDENTICAL (ids, dists,
+    all seven SearchStats counters) across strategies × selectivity —
+    trace collection is write-only bookkeeping;
+  * measured logical page counters agree with the analytic SearchStats
+    counters: exactly for scann (per_query and batch accounting) and
+    bruteforce, and as a bounded under-count for graph strategies (the
+    documented zoom-in-revisit / rank-rescore delta).
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep (requirements-dev.txt):
+    # property tests skip individually; plain tests in this module still run
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:  # stub strategies so decorator arguments still evaluate
+        integers = floats = lists = sampled_from = booleans = staticmethod(
+            lambda *a, **k: None)
+
+from repro.core import (SearchParams, WorkloadSpec, build_scann,
+                        generate_bitmaps, heap_pages_per_vector,
+                        make_executor, predict_cycles)
+from repro.core.costmodel import SYSTEM, IndexShape, cache_miss_penalty
+from repro.storage import (BufferPool, GraphAdjacencyLayout, HeapLayout,
+                           ScannLeafLayout, StorageEngine,
+                           make_storage_engine, scann_pages_per_leaf)
+from repro.storage.pages import PAGE_BYTES
+from repro.storage.pages import heap_pages_per_vector as hpv_storage
+
+PARAMS = SearchParams(k=10, ef_search=96, beam_width=512, max_hops=2048,
+                      num_leaves_to_search=16, reorder_factor=4,
+                      scann_page_accounting="per_query")
+STRATEGIES = ("sweeping", "acorn", "navix", "iterative_scan", "unfiltered",
+              "scann", "bruteforce")
+STAT_FIELDS = ("distance_comps", "filter_checks", "hops",
+               "page_accesses_index", "page_accesses_heap", "tmap_lookups",
+               "reorder_rows")
+
+
+@pytest.fixture(scope="module")
+def scann_index(small_dataset):
+    store, _ = small_dataset
+    return build_scann(store, num_leaves=64, levels=2, seed=0)
+
+
+# ---------------- page layouts: one owner for geometry ----------------
+
+def test_heap_pages_per_vector_one_owner():
+    # the core.types re-export IS the storage-layer function
+    assert heap_pages_per_vector is hpv_storage
+    for dim in (48, 128, 768, 1536, 2048, 3000, 8192):
+        layout = HeapLayout(n=1000, dim=dim)
+        ppr = heap_pages_per_vector(dim)
+        assert layout.pages_per_row == ppr
+        pages = layout.pages_for_rows(np.arange(17))
+        # logical accesses per fetched row == the analytic constant
+        assert len(pages) == 17 * ppr
+        assert pages.max() < layout.num_pages
+        if ppr == 1:
+            # rows never straddle pages they don't have to
+            assert layout.rows_per_page >= PAGE_BYTES // (dim * 4)
+
+
+def test_scann_leaf_layout_matches_quant_pages(scann_index):
+    L, C, dp = scann_index.leaf_tiles.shape
+    from repro.core.scann import _quant_pages_per_leaf
+    layout = ScannLeafLayout(num_leaves=L, cap=C, dp=dp)
+    assert layout.pages_per_leaf == _quant_pages_per_leaf(scann_index)
+    assert layout.pages_per_leaf == scann_pages_per_leaf(C, dp)
+    pages = layout.pages_for_leaves(np.array([0, 3, 3]))
+    assert len(pages) == 3 * layout.pages_per_leaf
+
+
+def test_graph_adjacency_layout():
+    layout = GraphAdjacencyLayout(n=1000, degree=32)
+    assert layout.nodes_per_page >= 1
+    pages = layout.pages_for_nodes(np.arange(1000))
+    assert len(pages) == 1000                 # one logical access per node
+    assert pages.max() == layout.num_pages - 1
+
+
+# ---------------- buffer pool invariants ----------------
+
+def test_pool_capacity_never_exceeded_and_lru_order():
+    pool = BufferPool(capacity_pages=3, policy="lru")
+    pool.access(np.array([1, 2, 3]))
+    assert len(pool) == 3
+    pool.access(np.array([1]))                # 1 becomes most-recent
+    d = pool.access(np.array([4]))            # evicts LRU == 2
+    assert d.evictions == 1 and len(pool) == 3
+    assert 2 not in pool and 1 in pool and 3 in pool and 4 in pool
+    d = pool.access(np.array([2]))            # 2 misses back in, evicts 3
+    assert d.misses == 1 and 3 not in pool
+
+
+def test_pool_hit_plus_miss_equals_logical():
+    pool = BufferPool(capacity_pages=8)
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        trace = rng.randint(0, 30, size=rng.randint(1, 40))
+        d = pool.access(trace)
+        assert d.hits + d.misses == d.logical == len(trace)
+        assert len(pool) <= 8
+    c = pool.counters
+    assert c.hits + c.misses == c.logical
+
+
+def test_pool_batch_dedup_idempotent():
+    pool = BufferPool(capacity_pages=100)
+    trace = np.array([5, 5, 7, 5, 9, 7])
+    d1 = pool.access(trace, dedup=True)
+    assert d1.logical == 3 and d1.misses == 3       # {5, 7, 9} once each
+    pool2 = BufferPool(capacity_pages=100)
+    d2 = pool2.access(np.array([5, 7, 9]), dedup=True)
+    assert (d2.logical, d2.misses) == (d1.logical, d1.misses)
+
+
+def test_pool_clock_policy_and_cold_reset():
+    pool = BufferPool(capacity_pages=2, policy="clock")
+    pool.access(np.array([1, 2]))
+    pool.access(np.array([1]))                # reference 1
+    pool.access(np.array([3]))                # second-chance: evicts 2
+    assert 1 in pool and 3 in pool and 2 not in pool
+    pool.reset()
+    assert len(pool) == 0
+    d = pool.access(np.array([1]))
+    assert d.misses == 1                      # cold again
+
+
+def test_pool_state_residency_is_plain_fraction():
+    """Residency must be resident/segment_size (the miss-fraction
+    contract), NOT normalized by capacity — a small full pool is not a
+    warm segment."""
+    pool = BufferPool(capacity_pages=10)
+    pool.access(np.arange(10))
+    st = pool.state({"seg": (0, 100)})
+    assert st.residency["seg"] == pytest.approx(0.1)
+    assert st.miss_fraction("seg") == pytest.approx(0.9)
+
+
+def test_pool_unbounded_capacity():
+    pool = BufferPool(capacity_pages=0)
+    d = pool.access(np.arange(10_000))
+    assert d.evictions == 0 and len(pool) == 10_000
+    assert pool.access(np.arange(10_000)).hits == 10_000
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=50), min_size=1,
+                max_size=200),
+       st.integers(min_value=1, max_value=20),
+       st.sampled_from(["lru", "clock"]))
+def test_pool_invariants_property(trace, cap, policy):
+    """Property: for ANY trace/capacity/policy — occupancy ≤ capacity,
+    hits + misses == logical, evictions == misses - final occupancy."""
+    pool = BufferPool(capacity_pages=cap, policy=policy)
+    d = pool.access(np.array(trace))
+    assert len(pool) <= cap
+    assert d.hits + d.misses == d.logical == len(trace)
+    assert d.evictions == d.misses - len(pool)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=30), min_size=1,
+                max_size=60))
+def test_pool_lru_eviction_order_property(trace):
+    """Property: under LRU, after any trace the resident set is exactly
+    the `capacity` most-recently-accessed distinct pages."""
+    cap = 5
+    pool = BufferPool(capacity_pages=cap, policy="lru")
+    pool.access(np.array(trace))
+    recent: list[int] = []
+    for p in trace:
+        if p in recent:
+            recent.remove(p)
+        recent.append(p)
+    expect = set(recent[-cap:])
+    assert set(pool._pages.keys()) == expect
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), min_size=1,
+                max_size=80))
+def test_pool_batch_dedup_idempotence_property(trace):
+    """Property: access(trace, dedup=True) == access(unique-first-touch)
+    == doubling the trace first — duplicates never change the outcome."""
+    t = np.array(trace)
+    a = BufferPool(8).access(t, dedup=True)
+    b = BufferPool(8).access(np.concatenate([t, t]), dedup=True)
+    assert (a.logical, a.hits, a.misses) == (b.logical, b.hits, b.misses)
+    assert a.logical == len(set(trace))
+
+
+# ---------------- storage-on vs legacy: bit-identical ----------------
+
+def _engine(store, index, graph, **kw):
+    kw.setdefault("capacity_frac", 1.0)
+    return make_storage_engine(store, index=index, graph=graph, **kw)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("sel", (0.05, 0.5))
+def test_storage_on_bit_identical(small_dataset, small_graph, scann_index,
+                                  strategy, sel):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(sel, "none"),
+                          seed=int(sel * 100))
+    ex0 = make_executor(strategy, store, graph=small_graph,
+                        index=scann_index)
+    ex1 = make_executor(strategy, store, graph=small_graph,
+                        index=scann_index,
+                        storage=_engine(store, scann_index, small_graph))
+    r0 = ex0.search(queries, bm, PARAMS)
+    r1 = ex1.search(queries, bm, PARAMS)
+    np.testing.assert_array_equal(np.asarray(r0.ids), np.asarray(r1.ids))
+    assert np.array_equal(np.asarray(r0.dists), np.asarray(r1.dists),
+                          equal_nan=True)
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r0.stats, f)),
+            np.asarray(getattr(r1.stats, f)), err_msg=(strategy, f))
+    assert r0.storage is None and r1.storage is not None
+
+
+# ---------------- measured vs analytic page counters ----------------
+
+def test_scann_measured_logical_exact_per_query(small_dataset, scann_index,
+                                                small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=7)
+    ex = make_executor("scann", store, index=scann_index,
+                       storage=_engine(store, scann_index, None))
+    res = ex.search(queries, bm, PARAMS)
+    np.testing.assert_array_equal(
+        res.storage.index_pages, np.asarray(res.stats.page_accesses_index))
+    np.testing.assert_array_equal(
+        res.storage.heap_pages, np.asarray(res.stats.page_accesses_heap))
+
+
+def test_scann_measured_logical_exact_batch(small_dataset, scann_index):
+    """Batch accounting: the pool's first-touch dedup reproduces the
+    SearchStats batch attribution — per-query sums AND the batch total
+    (= unique opened leaves × pages_per_leaf) agree exactly."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=7)
+    p = dataclasses.replace(PARAMS, scann_page_accounting="batch")
+    ex = make_executor("scann", store, index=scann_index,
+                       storage=_engine(store, scann_index, None))
+    res = ex.search(queries, bm, p)
+    np.testing.assert_array_equal(
+        res.storage.index_pages, np.asarray(res.stats.page_accesses_index))
+    np.testing.assert_array_equal(
+        res.storage.heap_pages, np.asarray(res.stats.page_accesses_heap))
+    # batch total == unique leaves opened × pages per leaf
+    assert res.storage.logical["scann"] == \
+        int(np.asarray(res.stats.page_accesses_index).sum())
+
+
+@pytest.mark.parametrize("block", (1, 3, 8))
+def test_scann_measured_logical_exact_batch_tiled(small_dataset,
+                                                  scann_index, block):
+    """Query-block tiling amortizes "batch" accounting per TILE
+    (DESIGN.md §4/§5); the pool-side dedup window must follow the tile
+    boundaries so measured stays exactly == analytic."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=7)
+    p = dataclasses.replace(PARAMS, scann_page_accounting="batch",
+                            scann_query_block=block)
+    ex = make_executor("scann", store, index=scann_index,
+                       storage=_engine(store, scann_index, None))
+    res = ex.search(queries, bm, p)
+    np.testing.assert_array_equal(
+        res.storage.index_pages, np.asarray(res.stats.page_accesses_index))
+    np.testing.assert_array_equal(
+        res.storage.heap_pages, np.asarray(res.stats.page_accesses_heap))
+
+
+def test_bruteforce_measured_logical_exact(small_dataset):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=9)
+    ex = make_executor("bruteforce", store,
+                       storage=make_storage_engine(store, capacity_frac=1.0))
+    res = ex.search(queries, bm, PARAMS)
+    np.testing.assert_array_equal(
+        res.storage.heap_pages, np.asarray(res.stats.page_accesses_heap))
+    assert res.storage.logical["heap"] == \
+        int(np.asarray(res.stats.page_accesses_heap).sum())
+
+
+@pytest.mark.parametrize("strategy", ("sweeping", "acorn", "navix",
+                                      "iterative_scan"))
+def test_graph_measured_logical_bounded(small_dataset, small_graph,
+                                        scann_index, strategy):
+    """Graph traces count each touched object once; analytic counters also
+    charge zoom-in revisits and rank-only re-scores, so measured ≤
+    analytic, and never less than the unique-candidate floor (> 0)."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=5)
+    ex = make_executor(strategy, store, graph=small_graph,
+                       storage=_engine(store, None, small_graph))
+    res = ex.search(queries, bm, PARAMS)
+    ppv = heap_pages_per_vector(store.dim)
+    heap_meas = res.storage.heap_pages
+    heap_stat = np.asarray(res.stats.page_accesses_heap)
+    idx_meas = res.storage.index_pages
+    idx_stat = np.asarray(res.stats.page_accesses_index)
+    assert (heap_meas > 0).all() and (idx_meas > 0).all()
+    assert (heap_meas <= heap_stat).all(), strategy
+    assert (idx_meas <= idx_stat).all(), strategy
+    # the under-count is the revisit delta, not a different formula: each
+    # unique scored row still charges exactly ppv pages
+    assert (heap_meas % ppv == 0).all()
+
+
+def test_pool_physical_bounded_by_logical(small_dataset, small_graph,
+                                          scann_index):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=5)
+    eng = _engine(store, scann_index, small_graph)
+    ex = make_executor("scann", store, index=scann_index, storage=eng)
+    r1 = ex.search(queries, bm, PARAMS)
+    assert r1.storage.miss_total <= r1.storage.logical_total
+    # warm re-run: same batch again — everything resident, zero misses
+    r2 = ex.search(queries, bm, PARAMS)
+    assert r2.storage.miss_total == 0
+    assert r2.storage.hit_rate == 1.0
+    # cold reset brings the misses back
+    eng.reset_cold()
+    r3 = ex.search(queries, bm, PARAMS)
+    assert r3.storage.miss_total == r1.storage.miss_total
+
+
+# ---------------- warm-cache-aware planner inputs ----------------
+
+def test_pool_state_residency_and_miss_fraction(small_dataset, scann_index,
+                                                small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=5)
+    eng = _engine(store, scann_index, small_graph)
+    st0 = eng.state()
+    assert st0.miss_fraction("scann") == 1.0          # cold
+    ex = make_executor("scann", store, index=scann_index, storage=eng)
+    ex.search(queries, bm, PARAMS)
+    st1 = eng.state()
+    assert st1.residency["scann"] > 0.0               # leaves resident now
+    assert st1.miss_fraction("scann") < 1.0
+    assert st1.used <= max(eng.pool.capacity, eng.total_pages)
+
+
+def test_predict_cycles_warm_cache_aware(small_dataset, scann_index,
+                                         small_graph):
+    """A warm pool must make a strategy's predicted cycles cheaper than
+    cold, and a fully warm scann segment must beat a cold one by exactly
+    the cache_miss_penalty."""
+    store, _ = small_dataset
+    L, C, _ = scann_index.leaf_tiles.shape
+    shape = IndexShape(store.n, store.dim, graph_m=12, scann_leaves=L,
+                       scann_rows_per_leaf=min(store.n // L, C),
+                       scann_cent_scored=L, scann_pages_per_leaf=1)
+    eng = _engine(store, scann_index, small_graph)
+    cold = eng.state()
+    base = predict_cycles("scann", shape, PARAMS, 0.2)
+    cold_cost = predict_cycles("scann", shape, PARAMS, 0.2,
+                               pool_state=cold)
+    assert cold_cost > base                           # misses are charged
+    # simulate a warm pool: touch every scann + heap page
+    ranges = eng.segment_ranges()
+    eng.pool.access(np.arange(*ranges["scann"]))
+    warm_cost = predict_cycles("scann", shape, PARAMS, 0.2,
+                               pool_state=eng.state())
+    assert warm_cost < cold_cost
+    # penalty accounting is self-consistent
+    from repro.core import predict_counters
+    counters = predict_counters("scann", shape, PARAMS, 0.2)
+    pen = cache_miss_penalty(counters, "scann", cold, SYSTEM)
+    assert cold_cost == pytest.approx(base + pen)
+
+
+def test_planner_dispatch_is_warm_cache_aware(small_dataset, small_graph,
+                                              scann_index):
+    """The planner's predictions must shift with pool residency: with the
+    scann segment warm and everything else cold, scann's predicted cycles
+    drop relative to the cold plan (the residency-driven dispatch input)."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"),
+                          seed=13)
+    eng = _engine(store, scann_index, small_graph, capacity_frac=1.0)
+    planner = make_executor("adaptive", store, graph=small_graph,
+                            index=scann_index, graph_m=small_graph.m,
+                            storage=eng)
+    cold_plan = planner.plan(queries, bm, PARAMS)
+    ranges = eng.segment_ranges()
+    eng.pool.access(np.arange(*ranges["scann"]))      # warm scann segment
+    warm_plan = planner.plan(queries, bm, PARAMS)
+    drop = {m: cold_plan.predicted_cycles[m] - warm_plan.predicted_cycles[m]
+            for m in cold_plan.predicted_cycles}
+    assert drop["scann"] > 0                          # scann got cheaper
+    # and no other candidate's prediction moved by more than scann's
+    assert drop["scann"] == max(drop.values())
+
+
+# ---------------- trace flag is loud on unsupported paths ----------------
+
+def test_storage_requires_frontier_engine(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=3)
+    ex = make_executor("sweeping", store, graph=small_graph,
+                       storage=_engine(store, None, small_graph))
+    p = dataclasses.replace(PARAMS, graph_exec_mode="vmapped")
+    with pytest.raises(ValueError, match="frontier"):
+        ex.search(queries, bm, p)
+
+
+def test_storage_requires_batched_scann(small_dataset, scann_index):
+    store, _ = small_dataset
+    from repro.core.executor import ScannExecutor
+    with pytest.raises(ValueError, match="batched"):
+        ScannExecutor(scann_index, store, pipeline="vmapped",
+                      storage=_engine(store, scann_index, None))
