@@ -14,9 +14,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (SearchParams, WorkloadSpec, build_graph, build_scann,
+from repro.core import (SYSTEM, SearchParams, WorkloadSpec, build_graph,
+                        build_scann, cycle_breakdown, engine_scale,
                         filtered_knn, generate_bitmaps, make_executor,
-                        recall_at_k, stats_table_row)
+                        measured_miss_penalty, quantize_store, recall_at_k,
+                        stats_table_row)
 from repro.data import DatasetSpec, make_dataset
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
@@ -49,28 +51,43 @@ def _cache(key: str, builder):
     return val
 
 
-def get_dataset(name: str):
+def _qtag(quant: str) -> str:
+    """Cache-key suffix for the graph quant mode: artifacts built while a
+    quantized tier is in play live in their own key space, so
+    graph_quant="sq8" runs can never collide with cached f32 artifacts
+    (nor vice versa) even if quantization ever perturbs a build input."""
+    return "" if quant in (None, "none") else f"_{quant}"
+
+
+def _method_quant(method: str) -> str:
+    """Graph quant mode a benchmark method name implies."""
+    return "sq8" if method.endswith("_sq8") else "none"
+
+
+def get_dataset(name: str, quant: str = "none"):
     spec = BENCH_DATASETS[name]
     store, queries = make_dataset(spec, num_queries=NUM_QUERIES, seed=0)
+    if quant == "sq8":
+        store = quantize_store(store)
     return store, jnp.asarray(queries)
 
 
-def get_graph(name: str):
+def get_graph(name: str, quant: str = "none"):
     from repro.core.hnsw import HNSWGraph
-    store, _ = get_dataset(name)
+    store, _ = get_dataset(name, quant)
 
     def build():
         g = build_graph(store, m=16, ef_construction=64, seed=0)
         return (g.neighbors, g.node_level, g.entry_point)
 
-    nb, lv, ep = _cache(f"graph_{name}", build)
+    nb, lv, ep = _cache(f"graph_{name}{_qtag(quant)}", build)
     return HNSWGraph(neighbors=jnp.asarray(nb), node_level=jnp.asarray(lv),
                      entry_point=jnp.asarray(ep), m=16)
 
 
-def get_scann(name: str, pca: bool = False):
+def get_scann(name: str, pca: bool = False, quant: str = "none"):
     from repro.core.scann import ScannIndex
-    store, _ = get_dataset(name)
+    store, _ = get_dataset(name, quant)
     spec = BENCH_DATASETS[name]
     pca_dims = max(spec.dim // 8, 32) if (pca and spec.dim >= 256) else None
 
@@ -79,12 +96,13 @@ def get_scann(name: str, pca: bool = False):
                           levels=2, pca_dims=pca_dims, seed=0)
         return jax.tree.map(np.asarray, idx)
 
-    idx = _cache(f"scann_{name}_{'pca' if pca_dims else 'raw'}", build)
+    idx = _cache(f"scann_{name}_{'pca' if pca_dims else 'raw'}"
+                 f"{_qtag(quant)}", build)
     return jax.tree.map(jnp.asarray, idx)
 
 
-def get_bitmaps(name: str, sel: float, corr: str):
-    store, queries = get_dataset(name)
+def get_bitmaps(name: str, sel: float, corr: str, quant: str = "none"):
+    store, queries = get_dataset(name, quant)
 
     # stable digest: hash() varies with PYTHONHASHSEED, which would make
     # cached bitmaps silently disagree with freshly generated ones; the
@@ -96,7 +114,8 @@ def get_bitmaps(name: str, sel: float, corr: str):
                                            WorkloadSpec(sel, corr),
                                            seed=seed))
 
-    return jnp.asarray(_cache(f"bm_{name}_{sel}_{corr}_s{seed}", build))
+    return jnp.asarray(_cache(f"bm_{name}_{sel}_{corr}_s{seed}"
+                              f"{_qtag(quant)}", build))
 
 
 def ground_truth(name: str, sel: float, corr: str, k: int = 10):
@@ -121,8 +140,13 @@ def get_executor(name: str, method: str, use_pallas: bool = False,
     devices (leaves sharded, queries replicated) with per-query
     SearchStats riding the all-gather — so table6/fig10 can tabulate the
     distributed path next to the local ones.  No storage accounting
-    (the collective pipeline carries counters, not page traces)."""
-    store, _ = get_dataset(name)
+    (the collective pipeline carries counters, not page traces).
+
+    "<strategy>_sq8" methods run the SQ8 quantized-traversal tier
+    (DESIGN.md §9) — their dataset/graph artifacts use the quant-tagged
+    cache keys."""
+    quant = _method_quant(method)
+    store, _ = get_dataset(name, quant)
     if method == "scann_distributed":
         # cached per dataset: re-sharding the index and dropping the
         # executor's jit cache at every grid point would re-compile the
@@ -141,7 +165,7 @@ def get_executor(name: str, method: str, use_pallas: bool = False,
     if method in ("scann", "scann_vmapped", "adaptive"):
         index = get_scann(name)
     if method not in ("scann", "scann_vmapped", "bruteforce"):
-        graph = get_graph(name)
+        graph = get_graph(name, quant)
     return make_executor(method, store, graph=graph, index=index,
                          use_pallas=use_pallas, graph_m=16, storage=storage)
 
@@ -154,22 +178,44 @@ def run_storage_measured(name: str, method: str, sel: float, params):
     space): the shared protocol behind table6's measured-page columns and
     fig10's cold-miss penalty.  Returns the SearchResult (`.storage`
     carries the StorageStats)."""
-    store, queries = get_dataset(name)
-    bm = get_bitmaps(name, sel, "none")
+    quant = _method_quant(method)
+    store, queries = get_dataset(name, quant)
+    bm = get_bitmaps(name, sel, "none", quant)
     eng = get_storage_engine(name, method, capacity_frac=1.0)
     return get_executor(name, method, storage=eng).search(queries, bm,
                                                           params)
 
 
+def measured_graph_cycles(res, params, q_batch: int, dim: int) -> float:
+    """Per-query SYSTEM cycles of a pooled graph run in the engine-true
+    currency: quant-aware component costs from the measured counters
+    (frontier `engine_scale`) plus the measured pool miss penalty — the
+    same costing the planner predicts against (DESIGN.md §9).  Shared by
+    bench_graph_quant and table4 so both report in ONE currency."""
+    base = cycle_breakdown(
+        res.stats, dim, SYSTEM,
+        engine_scale(res.strategy, params, q_batch),
+        graph_quant=params.graph_quant)["total"]
+    return base + measured_miss_penalty(res.storage, q_batch, SYSTEM)
+
+
+def heap_read_misses(res) -> int:
+    """Physical page reads of the row-fetch segments (heap + qheap)."""
+    return int(res.storage.misses.get("heap", 0)
+               + res.storage.misses.get("qheap", 0))
+
+
 def get_storage_engine(name: str, method: str = "adaptive", **kw):
     """StorageEngine over the dataset's page space, with the layouts the
-    method needs (scann leaves / graph adjacency / heap)."""
+    method needs (scann leaves / graph adjacency / heap + the always-laid
+    qheap shadow segment)."""
     from repro.storage import make_storage_engine
-    store, _ = get_dataset(name)
+    quant = _method_quant(method)
+    store, _ = get_dataset(name, quant)
     index = get_scann(name) if method in ("scann", "scann_vmapped",
                                           "adaptive") else None
-    graph = get_graph(name) if method not in ("scann", "scann_vmapped",
-                                              "bruteforce") else None
+    graph = get_graph(name, quant) if method not in (
+        "scann", "scann_vmapped", "bruteforce") else None
     return make_storage_engine(store, index=index, graph=graph, **kw)
 
 
@@ -181,12 +227,14 @@ def _ladder(method: str, k: int, tm: bool, page_accounting: str):
                 for nl in LEAVES_LADDER]
     if method in ("bruteforce",):
         return [SearchParams(k=k)]
+    quant = _method_quant(method)
+    strat = method[:-4] if quant == "sq8" else method
     ladder = []
     for ef in EF_LADDER:
         ef = max(ef, 2 * k)
         ladder.append(SearchParams(
-            k=k, ef_search=ef, beam_width=max(512, 4 * ef), strategy=method,
-            max_hops=3000, translation_map=tm,
+            k=k, ef_search=ef, beam_width=max(512, 4 * ef), strategy=strat,
+            max_hops=3000, translation_map=tm, graph_quant=quant,
             scann_page_accounting=page_accounting,
             batch_tuples=max(64, k * 8), max_rounds=16))
     return ladder
@@ -204,8 +252,9 @@ def run_method(name: str, method: str, sel: float, corr: str, k: int = 10,
     "batch" amortizes each opened leaf over the query batch (the batched
     pipeline's real access pattern), "per_query" reproduces the paper's
     per-query accounting (Fig. 10/13)."""
-    store, queries = get_dataset(name)
-    bm = get_bitmaps(name, sel, corr)
+    quant = _method_quant(method)
+    store, queries = get_dataset(name, quant)
+    bm = get_bitmaps(name, sel, corr, quant)
     _, tid = ground_truth(name, sel, corr, k)
     executor = get_executor(name, method)
     best = None

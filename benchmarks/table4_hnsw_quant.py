@@ -1,18 +1,66 @@
-"""Paper Table 4: HNSW quantization (halfvec) does NOT improve QPS in a
-page-based engine — modeled via the cost model: halving vector bytes
-halves heap-page traffic but leaves the dominant neighbor-page traffic
-untouched (paper §5 'Quantization')."""
+"""Paper Table 4: does quantization help HNSW in a page-based engine?
+
+Two answers, side by side (DESIGN.md §9):
+
+  modeled  — the paper's own back-of-envelope, as this repo always ran
+             it: halve the vector bytes (halfvec), rescale the heap-page
+             counter, leave the dominant neighbor-page traffic untouched
+             → speedup ≈ 1×.
+  measured — the SQ8 quantized-traversal tier executed on our storage
+             engine: the SAME sweeping search runs under
+             graph_quant ∈ {none, sq8} with a cold full-capacity buffer
+             pool; costs come from the measured counters (quant-aware
+             materialization + exact-rerank surcharge) plus the pool's
+             measured miss penalty.  The physical heap-read cut (dense
+             qheap pages) is real, but index/neighbor-page traffic and
+             page-hit costs don't move — so the end-to-end speedup stays
+             far below the 4× size reduction, which is Table 4's point,
+             now demonstrated rather than assumed.
+
+    PYTHONPATH=src python benchmarks/table4_hnsw_quant.py
+"""
 from __future__ import annotations
 
 import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import time
+
+import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, get_dataset, run_method
-from repro.core import SYSTEM, SearchStats, modeled_qps
+from benchmarks.common import (_method_quant, emit, get_bitmaps,
+                               get_dataset, get_executor, heap_read_misses,
+                               measured_graph_cycles, run_method,
+                               run_storage_measured)
+from repro.core import (SYSTEM, SearchParams, SearchStats, modeled_qps)
+
+
+def _timed_measured(ds, method, sel, params, q_batch):
+    """One cold-pool measured run (page accounting) + a SEARCH-ONLY wall
+    time from an accounting-off executor (first call warms the jit cache,
+    second is timed) — so the emitted us_per_call is comparable to the
+    modeled row's run_method wall, not dominated by engine construction
+    and host-side trace replay."""
+    res = run_storage_measured(ds, method, sel, params)
+    quant = _method_quant(method)
+    _, queries = get_dataset(ds, quant)
+    bm = get_bitmaps(ds, sel, "none", quant)
+    ex = get_executor(ds, method)
+    jax.block_until_ready(ex.search(queries, bm, params).ids)     # warm
+    t0 = time.perf_counter()
+    jax.block_until_ready(ex.search(queries, bm, params).ids)
+    wall_us = (time.perf_counter() - t0) / q_batch * 1e6
+    return res, wall_us
 
 
 def run(ds="openai5m", sel=0.2) -> list[dict]:
-    store, _ = get_dataset(ds)
+    store, queries = get_dataset(ds)
+
+    # ---- modeled (the legacy analytic halfvec rescale) ----
     rec, srow, wall, _ = run_method(ds, "sweeping", sel, "none")
     z = lambda v: jnp.asarray(round(v), jnp.int32)
     full = SearchStats(z(srow["distance_comps"]), z(srow["filter_checks"]),
@@ -24,12 +72,33 @@ def run(ds="openai5m", sel=0.2) -> list[dict]:
         full, page_accesses_heap=z(srow["page_accesses_heap"] / 2))
     q_full = modeled_qps(full, store.dim, SYSTEM)
     q_half = modeled_qps(half, store.dim // 2, SYSTEM)
+
+    # ---- measured (SQ8 tier on the storage engine, cold pool) ----
+    p = SearchParams(k=10, ef_search=128, beam_width=512,
+                     strategy="sweeping", max_hops=3000)
+    q_batch = queries.shape[0]
+    p_sq8 = dataclasses.replace(p, graph_quant="sq8")
+    res_f32, _ = _timed_measured(ds, "sweeping", sel, p, q_batch)
+    res_sq8, wall_sq8 = _timed_measured(ds, "sweeping_sq8", sel, p_sq8,
+                                        q_batch)
+    cyc_f32 = measured_graph_cycles(res_f32, p, q_batch, store.dim)
+    cyc_sq8 = measured_graph_cycles(res_sq8, p_sq8, q_batch, store.dim)
     return [{
-        "name": f"table4/{ds}/halfvec/sel={sel}",
+        "name": f"table4/{ds}/halfvec-modeled/sel={sel}",
         "us_per_call": wall,
         "qps_speedup": round(q_half / q_full, 2),
         "index_size_reduction": 2.0,
         "note": "speedup~1x: neighbor-page traffic dominates (paper T4)",
+    }, {
+        "name": f"table4/{ds}/sq8-measured/sel={sel}",
+        "us_per_call": wall_sq8,
+        "qps_speedup": round(cyc_f32 / cyc_sq8, 2),
+        "index_size_reduction": 4.0,
+        "heap_read_reduction": round(
+            heap_read_misses(res_f32) / max(heap_read_misses(res_sq8), 1),
+            2),
+        "note": "measured on the storage engine: physical heap reads drop, "
+                "index pages + hit costs don't -> speedup << 4x",
     }]
 
 

@@ -3,8 +3,10 @@ from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, SearchParams,
                               SearchResult, SearchStats, VectorStore,
                               bitset_mark, bitset_words, bitset_zeros,
                               heap_pages_per_vector, pack_bitmap,
-                              pack_bool_bitmap, probe_bitmap, recall_at_k,
-                              topk_smallest, unpack_bitmap)
+                              pack_bool_bitmap, probe_bitmap,
+                              quant_heap_pages_per_vector, quantize_store,
+                              recall_at_k, sq8_quantize, topk_smallest,
+                              unpack_bitmap)
 from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
                                  WorkloadSpec, generate_bitmaps,
                                  generate_grid, generate_passing_rows)
@@ -22,12 +24,13 @@ from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
 from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
                                  Executor, GraphExecutor, ScannExecutor,
                                  SearchPlan, index_shape, make_executor,
-                                 REGISTERED_METHODS)
+                                 GRAPH_SQ8_METHODS, REGISTERED_METHODS)
 
 __all__ = [
     "METRIC_COS", "METRIC_IP", "METRIC_L2", "SearchParams", "SearchResult",
     "SearchStats", "VectorStore", "heap_pages_per_vector", "pack_bitmap",
-    "pack_bool_bitmap", "probe_bitmap", "recall_at_k", "topk_smallest",
+    "pack_bool_bitmap", "probe_bitmap", "quant_heap_pages_per_vector",
+    "quantize_store", "recall_at_k", "sq8_quantize", "topk_smallest",
     "unpack_bitmap", "bitset_mark", "bitset_words", "bitset_zeros",
     "CORRELATIONS", "PAPER_SELECTIVITIES", "WorkloadSpec",
     "generate_bitmaps", "generate_grid", "generate_passing_rows",
@@ -40,5 +43,5 @@ __all__ = [
     "predict_cycles", "stats_table_row",
     "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
     "ScannExecutor", "SearchPlan", "index_shape", "make_executor",
-    "REGISTERED_METHODS",
+    "GRAPH_SQ8_METHODS", "REGISTERED_METHODS",
 ]

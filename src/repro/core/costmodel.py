@@ -37,7 +37,9 @@ from typing import Mapping, Optional
 
 import numpy as np
 
-from repro.core.types import SearchParams, SearchStats, heap_pages_per_vector
+from repro.core.types import (SearchParams, SearchStats,
+                              heap_pages_per_vector,
+                              quant_heap_pages_per_vector)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,39 +91,72 @@ GRAPH_STRATEGIES = ("unfiltered", "sweeping", "acorn", "navix",
 # and filter probes are counter-for-counter unchanged).  A single query
 # amortizes nothing (engine_scale returns None at batch_q ≤ 1).
 FRONTIER_PAGE_AMORT = 0.5
+# The unique-fetch fraction FRONTIER_PAGE_AMORT was calibrated against
+# (measured 0.83–0.93 for 32 distinct queries — DESIGN.md §7; midpoint).
+# When a StorageEngine measures the batch's actual page-sharing
+# (StorageStats.unique_fraction), the amortization becomes a per-batch
+# measurement: amort = FRONTIER_PAGE_AMORT · measured / CALIB — e.g. a
+# centroid-routed batch whose queries share most pages measures a low
+# unique fraction and earns a proportionally deeper discount
+# (ROADMAP "storage-engine follow-ups").
+FRONTIER_CALIB_UNIQUE = 0.88
 
 
 def engine_scale(strategy: str, params: SearchParams,
-                 batch_q: int = 1) -> Optional[dict[str, float]]:
+                 batch_q: int = 1,
+                 measured_unique_frac: Optional[float] = None
+                 ) -> Optional[dict[str, float]]:
     """Per-component cycle multipliers for the execution engine that will
     actually run `strategy` (None = legacy per-query costs).  Applied
     identically by the planner's predictions and the post-hoc breakdowns
-    so regret accounting stays in one currency."""
+    so regret accounting stays in one currency.
+
+    `measured_unique_frac` — a pool-measured per-batch unique-fetch
+    fraction (StorageStats.unique_fraction) — replaces the
+    FRONTIER_PAGE_AMORT constant with the measured amortization, anchored
+    at the constant's calibration point (FRONTIER_CALIB_UNIQUE)."""
     if strategy not in GRAPH_STRATEGIES or batch_q <= 1:
         return None
     if params.graph_exec_mode != "frontier":
         return None
-    return {"index_page_access": FRONTIER_PAGE_AMORT,
-            "vector_retrieval": FRONTIER_PAGE_AMORT}
+    amort = FRONTIER_PAGE_AMORT
+    if measured_unique_frac is not None:
+        amort = min(1.0, max(
+            0.05, FRONTIER_PAGE_AMORT * measured_unique_frac
+            / FRONTIER_CALIB_UNIQUE))
+    return {"index_page_access": amort, "vector_retrieval": amort}
 
 
 def component_cycles(counters: Mapping[str, float], dim: int,
                      constants: CostConstants = SYSTEM,
-                     scale: Optional[Mapping[str, float]] = None
-                     ) -> dict[str, float]:
+                     scale: Optional[Mapping[str, float]] = None,
+                     graph_quant: str = "none") -> dict[str, float]:
     """Per-component modeled cycles for one query from a counter mapping
     (the Table 6 column names).  Shared by the post-hoc path (measured
     counters) and the predictive path (closed-form expected counters).
     `scale` (see `engine_scale`) multiplies named components — the
-    engine-mode-aware weights."""
+    engine-mode-aware weights.
+
+    `graph_quant="sq8"` (DESIGN.md §9) prices the quantized-traversal
+    tier: traversal rows materialize 1 byte/dim (int8 shadow rows)
+    instead of 4, while the `reorder_rows` exact-rerank fetches stay
+    full-width — page *hit* costs are unchanged (a logical access pins a
+    page either way); the density win lands in the measured/predicted
+    MISS side (`cache_miss_penalty`)."""
     vec_bytes = dim * 4
+    if graph_quant == "sq8":
+        rr = counters["reorder_rows"]
+        trav_dc = max(counters["distance_comps"] - rr, 0.0)
+        materialize = (trav_dc * dim + rr * vec_bytes) \
+            * constants.tuple_materialize
+    else:
+        materialize = counters["distance_comps"] * vec_bytes \
+            * constants.tuple_materialize
     comp = {
         "index_page_access": counters["page_accesses_index"]
         * constants.page_access,
         "vector_retrieval": counters["page_accesses_heap"]
-        * constants.page_access
-        + counters["distance_comps"] * vec_bytes
-        * constants.tuple_materialize,
+        * constants.page_access + materialize,
         "distance_compute": counters["distance_comps"] * dim
         * constants.distance_per_dim,
         "filter_checks": counters["filter_checks"] * constants.filter_check,
@@ -147,19 +182,32 @@ def index_segment(strategy: str) -> Optional[str]:
 
 
 def cache_miss_penalty(counters: Mapping[str, float], strategy: str,
-                       pool_state, constants: CostConstants = SYSTEM
-                       ) -> float:
+                       pool_state, constants: CostConstants = SYSTEM,
+                       graph_quant: str = "none",
+                       dim: Optional[int] = None) -> float:
     """Expected extra cycles from buffer-pool misses, per query
     (DESIGN.md §8).  `pool_state` is a storage.BufferPoolState; the
     expected miss fraction of a segment's accesses is 1 − residency
     (uniform-touch approximation).  With page_miss_extra == 1 (LIBRARY)
     or a fully warm pool this is 0 and predictions reduce to the classic
-    ones."""
+    ones.
+
+    Under graph_quant="sq8" (needs `dim`), the traversal's row fetches
+    probe the dense "qheap" shadow segment — 4× fewer pages, so it warms
+    ~4× faster and its residency-driven miss fraction drops sooner —
+    while the rerank's full-width fetches (`reorder_rows` pages) probe
+    "heap" (DESIGN.md §9)."""
     if pool_state is None or constants.page_miss_extra <= 1.0:
         return 0.0
     extra = constants.page_access * (constants.page_miss_extra - 1.0)
-    pen = counters["page_accesses_heap"] * \
-        pool_state.miss_fraction("heap") * extra
+    if graph_quant == "sq8" and dim is not None:
+        rr_pages = counters["reorder_rows"] * heap_pages_per_vector(dim)
+        trav_pages = max(counters["page_accesses_heap"] - rr_pages, 0.0)
+        pen = trav_pages * pool_state.miss_fraction("qheap") * extra \
+            + rr_pages * pool_state.miss_fraction("heap") * extra
+    else:
+        pen = counters["page_accesses_heap"] * \
+            pool_state.miss_fraction("heap") * extra
     seg = index_segment(strategy)
     if seg is not None:
         pen += counters["page_accesses_index"] * \
@@ -179,13 +227,13 @@ def measured_miss_penalty(storage_stats, batch_q: int,
 
 def cycle_breakdown(stats: SearchStats, dim: int,
                     constants: CostConstants = SYSTEM,
-                    scale: Optional[Mapping[str, float]] = None
-                    ) -> dict[str, float]:
+                    scale: Optional[Mapping[str, float]] = None,
+                    graph_quant: str = "none") -> dict[str, float]:
     """Per-component modeled cycles for one query (Fig. 10 bars)."""
     s = {k: float(np.asarray(v).mean()) for k, v in stats.as_dict().items()} \
         if _is_batched(stats) else {k: float(np.asarray(v))
                                     for k, v in stats.as_dict().items()}
-    return component_cycles(s, dim, constants, scale)
+    return component_cycles(s, dim, constants, scale, graph_quant)
 
 
 def _is_batched(stats: SearchStats) -> bool:
@@ -310,6 +358,20 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
     ef = max(params.ef_search, 2 * k)
     tm = 1.0 if params.translation_map else 0.0
 
+    def graph_quant_rerank(c: dict, r: float) -> dict:
+        """SQ8 quantized-traversal transform (DESIGN.md §9): traversal
+        rows fetch shadow pages (quant ppv), and the exact rerank of ~r
+        beam entries adds r distance comps + r full-width heap pages,
+        counted in reorder_rows — mirroring the engines' accounting."""
+        if params.graph_quant != "sq8":
+            return c
+        qppv = quant_heap_pages_per_vector(shape.dim)
+        trav_rows = c["page_accesses_heap"] / ppv
+        c["page_accesses_heap"] = trav_rows * qppv + r * ppv
+        c["distance_comps"] += r
+        c["reorder_rows"] = r
+        return c
+
     if strategy in ("sweeping", "unfiltered"):
         # traversal-first: W fills once ~ef passing rows were seen, and the
         # traversal sees passing rows at rate s̃ → ~ef/s̃ hops (capped by
@@ -321,7 +383,7 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
         c.update(distance_comps=dc, filter_checks=fc, hops=hops,
                  page_accesses_index=hops + (1 - tm) * fc,
                  page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
-        return c
+        return graph_quant_rerank(c, float(ef))
 
     if strategy == "iterative_scan":
         # pgvector post-filter: emit batches of `batch_tuples` unfiltered
@@ -336,7 +398,8 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
         c.update(distance_comps=dc, filter_checks=emitted, hops=hops,
                  page_accesses_index=hops + (1 - tm) * emitted,
                  page_accesses_heap=dc * ppv, tmap_lookups=tm * emitted)
-        return c
+        return graph_quant_rerank(
+            c, float(min(k * params.reorder_factor, emitted)))
 
     if strategy in ("acorn", "navix"):
         # filter-first: traversal stays on the predicate subgraph — hop
@@ -355,7 +418,7 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
         c.update(distance_comps=dc, filter_checks=fc, hops=hops,
                  page_accesses_index=hops * (1.0 + expand) + (1 - tm) * fc,
                  page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
-        return c
+        return graph_quant_rerank(c, float(ef))
 
     raise ValueError(f"no predictive model for strategy {strategy!r}")
 
@@ -363,7 +426,8 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
 def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
                    selectivity: float, correlation: float = 1.0,
                    constants: CostConstants = SYSTEM,
-                   batch_q: int = 1, pool_state=None) -> float:
+                   batch_q: int = 1, pool_state=None,
+                   measured_unique_frac: Optional[float] = None) -> float:
     """Expected per-query modeled cycles (the planner's ranking metric).
 
     `batch_q` is the size of the query batch the plan will execute with:
@@ -377,10 +441,22 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
     warm-cache-aware: expected buffer-pool misses — scaled by each
     segment's current residency — pay `page_miss_extra` on top of the hit
     cost (`cache_miss_penalty`).  None keeps the classic cold-blind
-    prediction."""
+    prediction.
+
+    `measured_unique_frac` feeds a pool-measured per-batch page-sharing
+    fraction into `engine_scale`, replacing the FRONTIER_PAGE_AMORT
+    constant with the measured amortization for frontier-engine graph
+    strategies.  `params.graph_quant` ("sq8") prices the quantized
+    traversal tier: cheaper int8 materialization + rerank surcharge
+    (`component_cycles`), shadow-segment miss modeling
+    (`cache_miss_penalty`)."""
     counters = predict_counters(strategy, shape, params, selectivity,
                                 correlation, batch_q)
-    base = component_cycles(counters, shape.dim, constants,
-                            engine_scale(strategy, params, batch_q))["total"]
+    gq = params.graph_quant if strategy in GRAPH_STRATEGIES else "none"
+    base = component_cycles(
+        counters, shape.dim, constants,
+        engine_scale(strategy, params, batch_q, measured_unique_frac),
+        graph_quant=gq)["total"]
     return base + cache_miss_penalty(counters, strategy, pool_state,
-                                     constants)
+                                     constants, graph_quant=gq,
+                                     dim=shape.dim)

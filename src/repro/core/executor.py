@@ -42,7 +42,7 @@ from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
                               scann_search_batch_vmapped)
 from repro.core.types import (SearchParams, SearchResult, SearchStats,
                               VectorStore, heap_pages_per_vector,
-                              probe_bitmap, topk_smallest)
+                              probe_bitmap, quantize_store, topk_smallest)
 from repro.storage.engine import StorageEngine
 
 GRAPH_STRATEGIES = costmodel.GRAPH_STRATEGIES
@@ -104,22 +104,37 @@ class GraphExecutor(BaseExecutor):
 
     def __init__(self, graph: HNSWGraph, store: VectorStore,
                  strategy: str = "sweeping", use_pallas: bool = False,
-                 storage: Optional[StorageEngine] = None):
+                 storage: Optional[StorageEngine] = None,
+                 graph_quant: str = "none"):
         if strategy not in GRAPH_STRATEGIES:
             raise ValueError(f"unknown graph strategy {strategy!r}")
+        if graph_quant not in ("none", "sq8"):
+            raise ValueError(f"unknown graph_quant {graph_quant!r}")
         if storage is not None and storage.graph is None:
             raise ValueError("storage engine lacks a graph adjacency "
                              "layout; build it with graph=")
+        if graph_quant == "sq8":
+            if store.q_vectors is None:
+                raise ValueError("graph_quant='sq8' needs a quantize_store'd"
+                                 " VectorStore (SQ8 shadow missing)")
+            if storage is not None and storage.qheap is None:
+                raise ValueError("storage engine lacks the qheap (SQ8 "
+                                 "shadow) segment; build it from the "
+                                 "quantized store")
         self.graph = graph
         self.store = store
         self.strategy = strategy
         self.use_pallas = use_pallas
         self.storage = storage
-        self.name = strategy
+        self.graph_quant = graph_quant
+        self.name = strategy if graph_quant == "none" \
+            else f"{strategy}_{graph_quant}"
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
-        if params.strategy != self.strategy:
-            params = dataclasses.replace(params, strategy=self.strategy)
+        if params.strategy != self.strategy or \
+                params.graph_quant != self.graph_quant:
+            params = dataclasses.replace(params, strategy=self.strategy,
+                                         graph_quant=self.graph_quant)
         return SearchPlan(self.strategy, params, queries, bitmaps)
 
     def execute(self, plan: SearchPlan) -> SearchResult:
@@ -136,8 +151,12 @@ class GraphExecutor(BaseExecutor):
         d, ids, stats, trace = search_batch(
             self.graph, self.store, plan.queries, plan.bitmaps, plan.params,
             use_pallas=self.use_pallas, collect_trace=True)
+        rr = trace.get("rerank_rows")
         sstats = self.storage.account_graph(
-            np.asarray(trace["heap_rows"]), np.asarray(trace["index_nodes"]))
+            np.asarray(trace["heap_steps"]),
+            np.asarray(trace["index_steps"]),
+            rerank_rows=None if rr is None else np.asarray(rr),
+            quant=self.graph_quant == "sq8")
         return SearchResult(dists=d, ids=ids, stats=stats,
                             strategy=self.strategy, plan=plan,
                             storage=sstats)
@@ -338,6 +357,12 @@ class AdaptivePlanner(BaseExecutor):
         self.storage = storage
         self._scann = next((ex for ex in self.candidates.values()
                             if isinstance(ex, ScannExecutor)), None)
+        # Pool-measured per-batch unique-fetch fraction of the last graph
+        # dispatch (StorageStats.unique_fraction): replaces the
+        # FRONTIER_PAGE_AMORT calibration constant in subsequent
+        # predictions (costmodel.engine_scale) — the ROADMAP
+        # "per-batch measurement instead of a constant" follow-up.
+        self._measured_unique: Optional[float] = None
 
     # -- shape facts for the predictive model --------------------------------
     def _shape(self) -> costmodel.IndexShape:
@@ -386,9 +411,14 @@ class AdaptivePlanner(BaseExecutor):
         batch_q = int(queries.shape[0])
         pool_state = self.storage.state() if self.storage is not None \
             else None
+        # predict with each candidate's RESOLVED params (strategy +
+        # graph_quant), so e.g. the sweeping_sq8 candidate is priced on
+        # the quantized tier it would actually execute
         preds = {name: costmodel.predict_cycles(
-            _strategy_kind(ex), shape, params, s_mean, gamma,
-            self.constants, batch_q=batch_q, pool_state=pool_state)
+            _strategy_kind(ex), shape, _candidate_params(ex, params),
+            s_mean, gamma, self.constants, batch_q=batch_q,
+            pool_state=pool_state,
+            measured_unique_frac=self._measured_unique)
             for name, ex in self.candidates.items()}
         feasible = {name: p for name, p in preds.items()
                     if self._recall_feasible(_strategy_kind(
@@ -402,7 +432,17 @@ class AdaptivePlanner(BaseExecutor):
                           predicted_cycles=preds)
 
     def execute(self, plan: SearchPlan) -> SearchResult:
+        chosen = self.candidates[plan.strategy]
         res = self.candidates[plan.strategy].execute(plan)
+        if res.storage is not None and isinstance(chosen, GraphExecutor) \
+                and chosen.graph_quant == "none":
+            # full-precision graph batch ran through the pool: keep its
+            # measured page-sharing for the next plan's engine_scale.
+            # Only the f32 tier updates it — FRONTIER_CALIB_UNIQUE was
+            # calibrated on f32 heap geometry, and the 4×-denser qheap
+            # shares pages structurally more (a sq8 measurement would
+            # wrongly discount every f32 candidate too).
+            self._measured_unique = res.storage.unique_fraction()
         if res.stats is not None:
             # planning overhead: popcount reads every bitmap word (n/32
             # filter-word probes) + the proxy's centroid scan and leaf
@@ -424,16 +464,37 @@ class AdaptivePlanner(BaseExecutor):
 
 
 def _strategy_kind(ex: Executor) -> str:
-    """Predictive-model strategy key for an executor instance."""
-    return "scann" if isinstance(ex, ScannExecutor) else ex.name
+    """Predictive-model strategy key for an executor instance (quant
+    variants of a graph strategy share its predictive model)."""
+    if isinstance(ex, ScannExecutor):
+        return "scann"
+    return getattr(ex, "strategy", ex.name)
+
+
+def _candidate_params(ex: Executor, params: SearchParams) -> SearchParams:
+    """The params the candidate would resolve in plan() — what its
+    prediction must be priced on (strategy + graph_quant for graph
+    executors)."""
+    if isinstance(ex, GraphExecutor):
+        return dataclasses.replace(params, strategy=ex.strategy,
+                                   graph_quant=ex.graph_quant)
+    return params
 
 
 # ---------------------------------------------------------------------------
 # Registry — the one dispatch point for benchmarks/serving/launch.
 # ---------------------------------------------------------------------------
 
-REGISTERED_METHODS = GRAPH_STRATEGIES + ("scann", "scann_vmapped",
-                                         "bruteforce", "adaptive")
+GRAPH_SQ8_METHODS = tuple(f"{s}_sq8" for s in GRAPH_STRATEGIES)
+REGISTERED_METHODS = GRAPH_STRATEGIES + GRAPH_SQ8_METHODS + (
+    "scann", "scann_vmapped", "bruteforce", "adaptive")
+
+
+def _parse_graph_method(method: str) -> tuple[str, str]:
+    """"sweeping_sq8" -> ("sweeping", "sq8"); plain names pass through."""
+    if method.endswith("_sq8") and method[:-4] in GRAPH_STRATEGIES:
+        return method[:-4], "sq8"
+    return method, "none"
 
 
 def make_executor(method: str, store: VectorStore, *,
@@ -444,21 +505,29 @@ def make_executor(method: str, store: VectorStore, *,
                   graph_m: int = 16,
                   storage: Optional[StorageEngine] = None,
                   planner_candidates: tuple[str, ...] = (
-                      "bruteforce", "scann", "sweeping", "navix",
-                      "iterative_scan")) -> Executor:
+                      "bruteforce", "scann", "sweeping", "sweeping_sq8",
+                      "navix", "iterative_scan")) -> Executor:
     """Build the executor for `method`.
 
-    Graph strategies need `graph`; "scann"/"scann_vmapped" need `index`;
-    "adaptive" builds every candidate the provided components support.
-    `storage` attaches a paged storage engine (DESIGN.md §8): results
-    carry measured StorageStats, and for "adaptive" ONE shared pool backs
-    every candidate AND feeds residency into the planner's predictions
-    (warm-cache-aware dispatch)."""
-    if method in GRAPH_STRATEGIES:
+    Graph strategies need `graph`; their "<strategy>_sq8" variants run
+    the SQ8 quantized-traversal tier (DESIGN.md §9 — the store is
+    shadow-quantized here if it isn't already); "scann"/"scann_vmapped"
+    need `index`; "adaptive" builds every candidate the provided
+    components support (including the quantized sweeping dispatch
+    candidate by default).  `storage` attaches a paged storage engine
+    (DESIGN.md §8): results carry measured StorageStats, and for
+    "adaptive" ONE shared pool backs every candidate AND feeds residency
+    + measured per-batch page sharing into the planner's predictions
+    (warm-cache-aware, engine-amortization-aware dispatch)."""
+    base, quant = _parse_graph_method(method)
+    if base in GRAPH_STRATEGIES:
         if graph is None:
             raise ValueError(f"{method!r} needs graph=")
-        return GraphExecutor(graph, store, strategy=method,
-                             use_pallas=use_pallas, storage=storage)
+        if quant == "sq8":
+            store = quantize_store(store)
+        return GraphExecutor(graph, store, strategy=base,
+                             use_pallas=use_pallas, storage=storage,
+                             graph_quant=quant)
     if method in ("scann", "scann_vmapped"):
         if index is None:
             raise ValueError(f"{method!r} needs index=")
@@ -469,14 +538,19 @@ def make_executor(method: str, store: VectorStore, *,
     if method == "bruteforce":
         return BruteForceExecutor(store, storage=storage)
     if method == "adaptive":
+        if any(_parse_graph_method(n)[1] == "sq8"
+               for n in planner_candidates) and graph is not None:
+            store = quantize_store(store)
         cands: dict[str, Executor] = {}
         for name in planner_candidates:
+            cbase, cquant = _parse_graph_method(name)
             if name == "bruteforce":
                 cands[name] = BruteForceExecutor(store, storage=storage)
-            elif name in GRAPH_STRATEGIES and graph is not None:
-                cands[name] = GraphExecutor(graph, store, strategy=name,
+            elif cbase in GRAPH_STRATEGIES and graph is not None:
+                cands[name] = GraphExecutor(graph, store, strategy=cbase,
                                             use_pallas=use_pallas,
-                                            storage=storage)
+                                            storage=storage,
+                                            graph_quant=cquant)
             elif name in ("scann", "scann_vmapped") and index is not None:
                 cands[name] = ScannExecutor(
                     index, store, pipeline="batched" if name == "scann"

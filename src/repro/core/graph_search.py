@@ -33,14 +33,21 @@ import jax.numpy as jnp
 
 from repro.core.hnsw import HNSWGraph
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
-                              bitset_mark, bitset_words, bitset_zeros,
-                              distance, heap_pages_per_vector, probe_bitmap,
-                              topk_smallest)
+                              bitset_mark, bitset_words, distance,
+                              heap_pages_per_vector, probe_bitmap,
+                              quant_heap_pages_per_vector, topk_smallest)
 from repro.kernels import ops as kops
 
 INF = jnp.inf
 
-_pages_per_vector = heap_pages_per_vector  # shared formula (types.py)
+GRAPH_QUANT_MODES = ("none", "sq8")
+
+
+def _ppv(store: VectorStore, quant: str) -> int:
+    """Heap pages per traversal-fetched vector: full-width rows for the
+    classic tier, SQ8 shadow rows for the quantized tier (DESIGN.md §9)."""
+    return (quant_heap_pages_per_vector(store.dim) if quant == "sq8"
+            else heap_pages_per_vector(store.dim))
 
 
 def _dedup_first(ids: jax.Array) -> jax.Array:
@@ -61,30 +68,63 @@ def _insert_sorted(w_d, w_id, cand_d, cand_id):
     return nd, i[pos]
 
 
-def _gather_vec_dist(store: VectorStore, q, ids):
+def _gather_vec_dist(store: VectorStore, q, ids, quant: str = "none"):
+    """Gather rows + distance to q.  quant="sq8" reads the SQ8 shadow heap
+    and dequantizes (x̂ = q_vectors·scale + mean) with the precomputed
+    dequantized norms — the exact arithmetic `ref.frontier_scan_sq8_ref`
+    mirrors, so both engines stay bit-identical per quant mode."""
     safe = jnp.maximum(ids, 0)
-    vecs = store.vectors[safe]
-    nsq = store.norms_sq[safe]
+    if quant == "sq8":
+        vecs = (store.q_vectors[safe].astype(jnp.float32) * store.q_scale
+                + store.q_mean)
+        nsq = store.q_norms_sq[safe]
+    else:
+        vecs = store.vectors[safe]
+        nsq = store.norms_sq[safe]
     return distance(store.metric, q, vecs, nsq)
 
 
 # ---------------------------------------------------------------------------
-# Storage-trace marking (DESIGN.md §8).  Traces are packed touched-object
-# bitsets fed to the buffer pool by the storage engine; marking must be
-# OR-safe under repeats (zoom-in revisits nodes across levels, pops overlap
-# the zoom path), so candidates are first-occurrence-deduplicated and
-# probed before `bitset_mark`'s add-based scatter.
+# Storage-trace stamping (DESIGN.md §8).  Traces are per-query FIRST-TOUCH
+# superstep stamps over the object id space: `steps[obj]` holds the
+# SearchStats.hops value of the step that first fetched the object
+# (TRACE_UNTOUCHED where never fetched), so the storage engine can replay
+# page accesses in traversal order — LRU/clock behavior is order-faithful,
+# not id-ascending.  Scatter-min marking is repeat- and order-safe (zoom-in
+# revisits, pop/zoom overlaps, -1 padding all collapse to no-ops).
 # ---------------------------------------------------------------------------
 
-def _trace_mark1(words, ids, mask):
-    """OR-safe single-query bitset mark: dedup ids, skip already-set."""
-    live = mask & _dedup_first(ids) & ~probe_bitmap(words, ids)
-    return bitset_mark(words, ids, live)
+TRACE_UNTOUCHED = int(jnp.iinfo(jnp.int32).max)
 
 
-def _trace_mark(words, ids, mask):
-    """OR-safe per-query bitset mark over a (Q, m) id block."""
-    return jax.vmap(_trace_mark1)(words, ids, mask)
+def _stamp1(steps, ids, mask, step):
+    """First-touch stamp over one query's (n,) step array."""
+    live = mask & (ids >= 0)
+    safe = jnp.maximum(ids, 0)
+    val = jnp.where(live, step, TRACE_UNTOUCHED).astype(jnp.int32)
+    return steps.at[safe.reshape(-1)].min(val.reshape(-1))
+
+
+_stamp_batch = jax.vmap(_stamp1)
+
+
+def _unpack_bitset_batch(words, n: int):
+    """(Q, W) packed uint32 bitsets -> (Q, n) bool (trace-only cost)."""
+    bits = (words[:, :, None] >> jnp.arange(32, dtype=jnp.uint32)) \
+        & jnp.uint32(1)
+    return bits.reshape(words.shape[0], -1)[:, :n].astype(bool)
+
+
+def _stamp_newly_marked(steps, old_words, new_words, step):
+    """Stamp every row whose packed-bitset mark appeared between two
+    snapshots (the superstep's newly visited set) with `step` (Q,).
+    The AND-NOT runs on the packed words (exact — marks only ever turn
+    on), so only one (Q, n) unpack is paid per superstep, and only on
+    tracing runs."""
+    n = steps.shape[1]
+    newly = _unpack_bitset_batch(new_words & ~old_words, n)
+    return jnp.minimum(steps, jnp.where(newly, step[:, None],
+                                        TRACE_UNTOUCHED).astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -92,50 +132,52 @@ def _trace_mark(words, ids, mask):
 # ---------------------------------------------------------------------------
 
 def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats,
-             trace=None):
-    """Greedy upper-layer descent.  With `trace` = (heap_bits, index_bits)
-    packed bitsets, touched objects are marked as they are fetched: every
-    scored neighbor (and the entry) into heap_bits, every node whose
-    adjacency is read into index_bits.  Returns (cur, cur_d, stats, trace).
+             trace=None, quant: str = "none"):
+    """Greedy upper-layer descent.  With `trace` = (heap_steps,
+    index_steps) first-touch stamp arrays, touched objects are stamped
+    with the hop counter at fetch time: every scored neighbor (and the
+    entry) into heap_steps, every node whose adjacency is read into
+    index_steps.  Returns (cur, cur_d, stats, trace).
     """
     tracing = trace is not None
-    th, ti = trace if tracing else (jnp.zeros((0,), jnp.uint32),) * 2
+    hs, is_ = trace if tracing else (jnp.zeros((0,), jnp.int32),) * 2
     cur = graph.entry_point
-    cur_d = _gather_vec_dist(store, q, cur[None])[0]
-    ppv = _pages_per_vector(store.dim)
+    cur_d = _gather_vec_dist(store, q, cur[None], quant)[0]
+    ppv = _ppv(store, quant)
     stats = SearchStats(stats.distance_comps + 1, stats.filter_checks,
                         stats.hops, stats.page_accesses_index,
                         stats.page_accesses_heap + ppv, stats.tmap_lookups,
                         stats.reorder_rows)
     if tracing:
-        th = _trace_mark1(th, cur[None], jnp.array([True]))
+        hs = _stamp1(hs, cur[None], jnp.array([True]), stats.hops)
     for lvl in range(graph.num_levels - 1, 0, -1):
         def cond(state):
             _, _, improved, _, _, _ = state
             return improved
 
         def body(state):
-            cur, cur_d, _, st, th, ti = state
+            cur, cur_d, _, st, hs, is_ = state
             nbrs = graph.neighbors[lvl, cur]
             valid = nbrs >= 0
-            d = jnp.where(valid, _gather_vec_dist(store, q, nbrs), INF)
+            d = jnp.where(valid, _gather_vec_dist(store, q, nbrs, quant),
+                          INF)
             j = jnp.argmin(d)
             better = d[j] < cur_d
             n_valid = valid.sum()
             st = SearchStats(
                 st.distance_comps + n_valid, st.filter_checks,
                 st.hops + 1, st.page_accesses_index + 1,
-                st.page_accesses_heap + n_valid * _pages_per_vector(store.dim),
+                st.page_accesses_heap + n_valid * _ppv(store, quant),
                 st.tmap_lookups, st.reorder_rows)
             if tracing:
-                ti = _trace_mark1(ti, cur[None], jnp.array([True]))
-                th = _trace_mark1(th, nbrs, valid)
+                is_ = _stamp1(is_, cur[None], jnp.array([True]), st.hops)
+                hs = _stamp1(hs, nbrs, valid, st.hops)
             return (jnp.where(better, nbrs[j], cur),
-                    jnp.where(better, d[j], cur_d), better, st, th, ti)
+                    jnp.where(better, d[j], cur_d), better, st, hs, is_)
 
-        cur, cur_d, _, stats, th, ti = jax.lax.while_loop(
-            cond, body, (cur, cur_d, jnp.array(True), stats, th, ti))
-    return cur, cur_d, stats, ((th, ti) if tracing else None)
+        cur, cur_d, _, stats, hs, is_ = jax.lax.while_loop(
+            cond, body, (cur, cur_d, jnp.array(True), stats, hs, is_))
+    return cur, cur_d, stats, ((hs, is_) if tracing else None)
 
 
 # ---------------------------------------------------------------------------
@@ -144,19 +186,20 @@ def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats,
 # ---------------------------------------------------------------------------
 
 def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited,
-            two_hop: bool = True):
+            two_hop: bool = True, quant: str = "none"):
     """1-hop (and, for filter-first strategies, 2-hop) neighborhood fetch.
 
     `two_hop` is a static flag: traversal-first strategies (unfiltered /
     sweeping / iterative_scan) never read the 2-hop block, so the (2M, 2M)
     gather + distance computation is gated out of their traces entirely
-    instead of relying on XLA dead-code elimination.
+    instead of relying on XLA dead-code elimination.  `quant` picks the
+    heap tier the candidate rows are fetched from (DESIGN.md §9).
     """
     nb1 = graph.neighbors[0, node]                      # (2M,)
     v1 = nb1 >= 0
     unv1 = v1 & ~visited[jnp.maximum(nb1, 0)]
     pass1 = probe_bitmap(bitmap, nb1)
-    d1 = jnp.where(v1, _gather_vec_dist(store, q, nb1), INF)
+    d1 = jnp.where(v1, _gather_vec_dist(store, q, nb1, quant), INF)
     e = dict(nb1=nb1, v1=v1, unv1=unv1, pass1=pass1, d1=d1)
     if not two_hop:
         return e
@@ -165,7 +208,7 @@ def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited,
     v2 = nb2 >= 0
     pass2 = probe_bitmap(bitmap, nb2)
     unv2 = v2 & ~visited[jnp.maximum(nb2, 0)]
-    d2 = jnp.where(v2, _gather_vec_dist(store, q, nb2), INF)
+    d2 = jnp.where(v2, _gather_vec_dist(store, q, nb2, quant), INF)
     e.update(nb2=nb2, v2=v2, unv2=unv2, pass2=pass2, d2=d2)
     return e
 
@@ -182,7 +225,8 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
     n = graph.n
     P = params.beam_width
     strat = params.strategy
-    ppv = _pages_per_vector(store.dim)
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
     M2 = graph.neighbors.shape[2]
 
     pool_d = jnp.full((P,), INF).at[0].set(entry_d)
@@ -213,7 +257,7 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
         pool_id = pool_id.at[j].set(-1)
 
         e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited,
-                    two_hop=strat in ("acorn", "navix"))
+                    two_hop=strat in ("acorn", "navix"), quant=quant)
         dc = fc = pai = pah = tm = jnp.int32(0)
         pai += 1  # step ①: current node's index page
 
@@ -372,16 +416,57 @@ def _finalize(w_d, w_id, bitmap, k, check_filter: bool):
     return dk, ids
 
 
+def _rerank_beam(store: VectorStore, q, w_id, stats: SearchStats):
+    """Exact full-precision rescore of the final result beam — the
+    quantized-traversal tier's recall bound (DESIGN.md §9).  Every valid
+    beam entry is re-fetched from the full-width heap and re-scored
+    exactly, ScaNN-reorder-style: counted in reorder_rows, charged
+    full-width heap pages and one distance comp per row.  Returns the
+    beam's exact distances (same slots) + updated stats."""
+    valid = w_id >= 0
+    exact = jnp.where(valid, _gather_vec_dist(store, q, w_id), INF)
+    n_r = valid.sum().astype(jnp.int32)
+    ppv_full = heap_pages_per_vector(store.dim)
+    stats = SearchStats(stats.distance_comps + n_r, stats.filter_checks,
+                        stats.hops, stats.page_accesses_index,
+                        stats.page_accesses_heap + n_r * ppv_full,
+                        stats.tmap_lookups, stats.reorder_rows + n_r)
+    return exact, stats
+
+
+def _iter_emit_sq8(store: VectorStore, q, w_d, w_id, bitmap, eff, k: int,
+                   r: int):
+    """Quantized iterative-scan emit: post-filter the in-batch candidates,
+    take the top-r by quantized distance (the EFMAX buffer is too wide to
+    rerank whole — ScaNN-reorder-style budget r = k·reorder_factor), and
+    re-score those exactly from the full-precision heap.  Returns
+    (dists (k,), ids (k,), n_reranked, cand_rows (r,) -1-padded)."""
+    efmax = w_d.shape[0]
+    in_batch = jnp.arange(efmax) < eff
+    d = jnp.where(in_batch, w_d, INF)
+    ids = jnp.where(in_batch, w_id, -1)
+    passing = probe_bitmap(bitmap, ids) & (ids >= 0)
+    rd, rpos = topk_smallest(jnp.where(passing, d, INF), r)
+    cand = jnp.where(jnp.isfinite(rd), ids[rpos], -1)
+    exact = jnp.where(cand >= 0, _gather_vec_dist(store, q, cand), INF)
+    dk, pos = topk_smallest(exact, k)
+    out = jnp.where(jnp.isinf(dk), -1, cand[pos])
+    return dk, out, (cand >= 0).sum().astype(jnp.int32), cand
+
+
 def _search_single(graph: HNSWGraph, store: VectorStore, q, bitmap,
                    params: SearchParams):
+    quant = params.graph_quant
     stats = SearchStats.zeros()
-    entry, entry_d, stats, _ = _zoom_in(graph, store, q, stats)
+    entry, entry_d, stats, _ = _zoom_in(graph, store, q, stats, quant=quant)
     if params.strategy == "iterative_scan":
         return _iterative_scan(graph, store, q, bitmap, params, entry,
                                entry_d, stats)
     w_d, w_id, _, _, stats = _base_search(
         graph, store, q, bitmap, params, entry, entry_d, stats,
         ef_result=params.ef_search)
+    if quant == "sq8":
+        w_d, stats = _rerank_beam(store, q, w_id, stats)
     check = params.strategy in ("unfiltered",)
     dk, ids = _finalize(w_d, w_id, bitmap, params.k,
                         check_filter=not check)
@@ -401,7 +486,8 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
     """
     n = graph.n
     P = params.beam_width
-    ppv = _pages_per_vector(store.dim)
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
     EFMAX = params.batch_tuples * params.max_rounds
 
     pool_d = jnp.full((P,), INF).at[0].set(entry_d)
@@ -441,7 +527,7 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
         pool_d2 = pool_d.at[j].set(INF)
         pool_id2 = pool_id.at[j].set(-1)
         e = _expand(graph, store, q, bitmap, jnp.maximum(best_id, 0), visited,
-                    two_hop=False)
+                    two_hop=False, quant=quant)
         score_m = e["unv1"]
         n_s = score_m.sum()
         cd = jnp.where(score_m, e["d1"], INF)
@@ -472,6 +558,16 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
              jnp.array(False))
     pool_d, pool_id, w_d, w_id, visited, stats, eff, rnd, checked, _ = \
         jax.lax.while_loop(cond, body, state)
+    if quant == "sq8":
+        r = min(params.k * params.reorder_factor, EFMAX)
+        dk, out_ids, n_r, _ = _iter_emit_sq8(store, q, w_d, w_id, bitmap,
+                                             eff, params.k, r)
+        ppv_full = heap_pages_per_vector(store.dim)
+        stats = SearchStats(stats.distance_comps + n_r, stats.filter_checks,
+                            stats.hops, stats.page_accesses_index,
+                            stats.page_accesses_heap + n_r * ppv_full,
+                            stats.tmap_lookups, stats.reorder_rows + n_r)
+        return dk, out_ids, stats
     in_batch = jnp.arange(EFMAX) < eff
     d = jnp.where(in_batch, w_d, INF)
     ids = jnp.where(in_batch, w_id, -1)
@@ -504,14 +600,35 @@ def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
 
     Returns (dists (Q, k), ids (Q, k), SearchStats with (Q,) leaves).
 
+    `params.graph_quant` picks the traversal tier (DESIGN.md §9):
+
+      "none"  — classic full-precision traversal (bit-identical to the
+                pre-quantization engines).
+      "sq8"   — both engines navigate over the store's SQ8 shadow rows
+                (int8 fetches + dequantized scoring; the fused
+                `frontier_scan_sq8` kernel on the Pallas path) and the
+                final result beam is exactly re-scored from the
+                full-precision heap (ScaNN-reorder-style: reorder_rows +
+                full-width heap pages).  Needs a `quantize_store`d store.
+
     `collect_trace=True` (frontier engine only) additionally returns a
-    storage-access trace — packed per-query bitsets of the heap rows
-    fetched full-precision and the graph nodes whose adjacency entries
-    were read (DESIGN.md §8) — as a 4th element
-    `{"heap_rows": (Q, W) uint32, "index_nodes": (Q, W) uint32}`.
-    ids/dists/stats are bit-identical with the flag on or off (the trace
-    marks are write-only bookkeeping).
+    storage-access trace — per-query FIRST-TOUCH superstep stamps over
+    the heap rows fetched during traversal and the graph nodes whose
+    adjacency entries were read (DESIGN.md §8; `TRACE_UNTOUCHED` where
+    never touched) — as a 4th element
+    `{"heap_steps": (Q, n) int32, "index_steps": (Q, n) int32}`, plus
+    `"rerank_rows": (Q, r) int32` (-1-padded, candidate order) under
+    graph_quant="sq8".  The storage engine replays pages in stamp order,
+    so LRU behavior is traversal-order-faithful.  ids/dists/stats are
+    bit-identical with the flag on or off (the trace stamps are
+    write-only bookkeeping).
     """
+    if params.graph_quant not in GRAPH_QUANT_MODES:
+        raise ValueError(f"unknown graph_quant {params.graph_quant!r}; "
+                         f"expected one of {GRAPH_QUANT_MODES}")
+    if params.graph_quant == "sq8" and store.q_vectors is None:
+        raise ValueError("graph_quant='sq8' needs an SQ8 shadow store; "
+                         "build it with core.types.quantize_store")
     mode = params.graph_exec_mode
     if mode == "vmapped":
         if collect_trace:
@@ -565,7 +682,8 @@ def _compact_positions(mask, pad_to: int):
                      -1)
 
 
-def _union_gather(store: VectorStore, ids, dedup: bool):
+def _union_gather(store: VectorStore, ids, dedup: bool,
+                  quant: str = "none"):
     """Fetch vectors (+ norms) for a (Q, C) id block.
 
     With `dedup` (the Pallas/TPU path) the fetch goes through the
@@ -574,12 +692,16 @@ def _union_gather(store: VectorStore, ids, dedup: bool):
     small union block — the frontier fetch-amortization (DESIGN.md §7).
     Without it (the CPU oracle path) rows are gathered directly; gathers
     preserve values exactly, so downstream distances are bit-identical
-    either way.
+    either way.  quant="sq8" gathers the int8 shadow rows (4× less HBM
+    traffic per candidate; dequantization happens downstream, in-kernel
+    on the Pallas path) with the precomputed dequantized norms.
     """
     qn, c = ids.shape
+    rows = store.q_vectors if quant == "sq8" else store.vectors
+    norms = store.q_norms_sq if quant == "sq8" else store.norms_sq
     safe = jnp.maximum(ids, 0)
     if not dedup:
-        return store.vectors[safe], store.norms_sq[safe]
+        return rows[safe], norms[safe]
     flat = safe.reshape(-1).astype(jnp.int32)
     s = jnp.sort(flat)
     firsts = jnp.concatenate([jnp.array([True]), s[1:] != s[:-1]])
@@ -587,9 +709,23 @@ def _union_gather(store: VectorStore, ids, dedup: bool):
     uniq = jnp.full((qn * c,), store.n, jnp.int32).at[rank].set(s)
     pos = jnp.searchsorted(uniq, flat)
     safe_u = jnp.minimum(uniq, store.n - 1)
-    blk = store.vectors[safe_u]                 # the one HBM fetch per node
-    bn = store.norms_sq[safe_u]
+    blk = rows[safe_u]                          # the one HBM fetch per node
+    bn = norms[safe_u]
     return blk[pos].reshape(qn, c, -1), bn[pos].reshape(qn, c)
+
+
+def _frontier_scores(queries, store: VectorStore, cids, bitmaps,
+                     use_pallas: bool, quant: str):
+    """Deduplicated-union fetch + fused scoring/filter-probe of one
+    candidate block, dispatched per quant tier (DESIGN.md §7/§9)."""
+    vecs, nsq = _union_gather(store, cids, dedup=use_pallas, quant=quant)
+    if quant == "sq8":
+        return kops.frontier_scan_sq8(queries, vecs, store.q_scale,
+                                      store.q_mean, nsq, cids, bitmaps,
+                                      metric=store.metric,
+                                      use_pallas=use_pallas)
+    return kops.frontier_scan(queries, vecs, nsq, cids, bitmaps,
+                              metric=store.metric, use_pallas=use_pallas)
 
 
 def _merge_smallest(buf_d, buf_id, cand_d, cand_id, drop_head=None):
@@ -633,7 +769,7 @@ _mark_batch = jax.vmap(bitset_mark)
 def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
                          chunk: int, pool, w, visited, use_pallas: bool,
                          sweep_worst=None, dedup: bool = False,
-                         drop_head=None):
+                         drop_head=None, quant: str = "none"):
     """Score the selected candidates chunk-at-a-time and merge them into
     the pool and result queue, marking them visited as chunks complete.
 
@@ -687,10 +823,8 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
             first = jax.vmap(_dedup_first)(cids)
             cids = jnp.where(first & ~seen, cids, -1)
         valid = cids >= 0
-        vecs, nsq = _union_gather(store, cids, dedup=use_pallas)
-        dch, pch = kops.frontier_scan(queries, vecs, nsq, cids, bitmaps,
-                                      metric=store.metric,
-                                      use_pallas=use_pallas)
+        dch, pch = _frontier_scores(queries, store, cids, bitmaps,
+                                    use_pallas, quant)
         cd = jnp.where(valid, dch, INF)
         pool_d, pool_id, w_d, w_id, nw = insert(
             pool_d, pool_id, w_d, w_id, cd, cids, pch, nw, drop_head)
@@ -727,10 +861,8 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
             first = jax.vmap(_dedup_first)(cids)
             cids = jnp.where(first & ~seen, cids, -1)
         valid = cids >= 0
-        vecs, nsq = _union_gather(store, cids, dedup=use_pallas)
-        dch, pch = kops.frontier_scan(queries, vecs, nsq, cids, bitmaps,
-                                      metric=store.metric,
-                                      use_pallas=use_pallas)
+        dch, pch = _frontier_scores(queries, store, cids, bitmaps,
+                                    use_pallas, quant)
         cd = jnp.where(valid, dch, INF)
         pd, pi, wd, wi, nw = insert(pd, pi, wd, wi, cd, cids, pch, nw, None)
         vis = _mark_batch(vis, cids, valid)
@@ -745,7 +877,7 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
 
 def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                    params: SearchParams, entry, entry_d, stats: SearchStats,
-                   ef_result: int, use_pallas: bool, t_index=None):
+                   ef_result: int, use_pallas: bool, trace=None):
     """Superstep-driven port of `_base_search` over the whole query batch.
 
     Per-query control flow (pop order, masks, counter formulas) matches the
@@ -754,19 +886,23 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     lanes are frozen by gating: their pops are suppressed, their candidate
     masks zeroed (an all-INF merge is an exact identity), and their counter
     increments masked — the same per-lane semantics the legacy vmapped
-    while_loop provides by select.  `t_index` (optional (Q, W) bitsets)
-    accumulates the storage trace of adjacency reads: popped nodes, plus
-    expanded branch nodes for filter-first (DESIGN.md §8).
-    Returns (W_d, W_id sorted asc, visited, stats, t_index-or-None).
+    while_loop provides by select.  `trace` (optional (heap_steps,
+    index_steps) (Q, n) int32 first-touch stamps, zoom-in already applied)
+    accumulates the storage trace: adjacency reads (popped nodes, plus
+    expanded branch nodes for filter-first) stamp index_steps; each
+    superstep's newly scored rows stamp heap_steps with the post-increment
+    hop counter, so replay order is superstep-faithful (DESIGN.md §8).
+    Returns (W_d, W_id sorted asc, stats, (heap_steps, index_steps)-or-None).
     """
-    tracing = t_index is not None
-    if not tracing:
-        t_index = jnp.zeros((queries.shape[0], 0), jnp.uint32)
+    tracing = trace is not None
+    hs, is_ = trace if tracing else \
+        (jnp.zeros((queries.shape[0], 0), jnp.int32),) * 2
     n = graph.n
     qn = queries.shape[0]
     p = params.beam_width
     strat = params.strategy
-    ppv = _pages_per_vector(store.dim)
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
     deg = graph.neighbors.shape[2]
     nw = bitset_words(n)
     tm_on = params.translation_map
@@ -788,7 +924,7 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         return ~state[-1].all()
 
     def body(state):
-        pool_d, pool_id, w_d, w_id, visited, t_index, st, done = state
+        pool_d, pool_id, w_d, w_id, visited, hs, is_, st, done = state
         # the pool is kept sorted ascending, so the legacy argmin-pop is
         # always slot 0; the pop itself is folded into the insertions
         best_d, best_id = pool_d[:, 0], pool_id[:, 0]
@@ -797,8 +933,9 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
             (st.hops >= params.max_hops)
         active = ~done & ~stop
         node = jnp.maximum(best_id, 0)
+        step = st.hops + 1          # this superstep's post-increment stamp
         if tracing:   # adjacency read of the popped node (step ①)
-            t_index = _trace_mark(t_index, node[:, None], active[:, None])
+            is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
 
         nb1 = graph.neighbors[0, node]                       # (Q, deg)
         v1 = nb1 >= 0
@@ -820,17 +957,15 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                 params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
                 visited, use_pallas,
                 sweep_worst=w_worst if strat == "sweeping" else None,
-                drop_head=active)
+                drop_head=active, quant=quant)
             if strat == "sweeping":
                 fc = fc + n_w
                 tm = tm + jnp.where(tm_on, n_w, 0)
                 pai = pai + jnp.where(tm_on, 0, n_w)
         else:
             # -------- filter-first (acorn / navix): predicate subgraph
-            vecs1, nsq1 = _union_gather(store, nb1, dedup=use_pallas)
-            d1, pass1 = kops.frontier_scan(queries, vecs1, nsq1, nb1,
-                                           bitmaps, metric=store.metric,
-                                           use_pallas=use_pallas)
+            d1, pass1 = _frontier_scores(queries, store, nb1, bitmaps,
+                                         use_pallas, quant)
             n1 = v1.sum(-1).astype(jnp.int32)
             fc = fc + n1                               # check all 1-hop
             tm = tm + jnp.where(tm_on, n1, 0)
@@ -886,8 +1021,8 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
             n_exp = expand_branch.sum(-1).astype(jnp.int32)
             pai = pai + n_exp                          # step ②: branch pages
             if tracing:   # adjacency reads of the expanded branches
-                t_index = _trace_mark(t_index, nb1,
-                                      expand_branch & active[:, None])
+                is_ = _stamp_batch(is_, nb1,
+                                   expand_branch & active[:, None], step)
             nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
             nb2 = jnp.where(v1[:, :, None], nb2, -1)
             v2 = nb2 >= 0
@@ -922,8 +1057,10 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                 queries, bitmaps, store, cid2, s2.reshape(qn, deg * deg)
                 & active[:, None], params.frontier_chunk2,
                 (pool_d2, pool_id2), (w_d2, w_id2), visited2, use_pallas,
-                dedup=True)
+                dedup=True, quant=quant)
 
+        if tracing:   # this superstep's newly scored rows, in stamp order
+            hs = _stamp_newly_marked(hs, visited, visited2, step)
         inc = lambda v: jnp.where(active, v, 0)
         st2 = SearchStats(st.distance_comps + inc(dc),
                           st.filter_checks + inc(fc),
@@ -931,35 +1068,39 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                           st.page_accesses_index + inc(pai),
                           st.page_accesses_heap + inc(pah),
                           st.tmap_lookups + inc(tm), st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, t_index, st2,
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2,
                 done | stop)
 
-    state = (pool_d, pool_id, w_d, w_id, visited, t_index, stats,
+    state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
              jnp.zeros((qn,), bool))
-    pool_d, pool_id, w_d, w_id, visited, t_index, stats, _ = \
+    pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, _ = \
         jax.lax.while_loop(cond, body, state)
-    return w_d, w_id, visited, stats, (t_index if tracing else None)
+    return w_d, w_id, stats, ((hs, is_) if tracing else None)
 
 
 def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
                         bitmaps, params: SearchParams, entry, entry_d,
-                        stats: SearchStats, use_pallas: bool, t_index=None):
+                        stats: SearchStats, use_pallas: bool, trace=None):
     """Superstep port of `_iterative_scan` (pgvector resumable post-filter).
 
     Same per-query emit/resume logic and counters as the legacy body; the
     expansion path shares the traversal-first chunked machinery, and the
     big (EFMAX,) result buffer is maintained with O(EFMAX) gather merges
-    instead of a per-hop top_k over EFMAX + 2M candidates.  `t_index`
-    traces adjacency reads (popped nodes) like `_frontier_base`.
-    Returns (dists, ids, stats, visited, t_index-or-None).
+    instead of a per-hop top_k over EFMAX + 2M candidates.  `trace`
+    ((heap_steps, index_steps) first-touch stamps) records adjacency reads
+    (popped nodes) and newly scored rows like `_frontier_base`; under
+    graph_quant="sq8" the emit reranks through `_iter_emit_sq8`.
+    Returns (dists, ids, stats, (heap_steps, index_steps)-or-None,
+    rerank_rows-or-None).
     """
-    tracing = t_index is not None
-    if not tracing:
-        t_index = jnp.zeros((queries.shape[0], 0), jnp.uint32)
+    tracing = trace is not None
+    hs, is_ = trace if tracing else \
+        (jnp.zeros((queries.shape[0], 0), jnp.int32),) * 2
     n = graph.n
     qn = queries.shape[0]
     p = params.beam_width
-    ppv = _pages_per_vector(store.dim)
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
     nw = bitset_words(n)
     efmax = params.batch_tuples * params.max_rounds
     tm_on = params.translation_map
@@ -975,7 +1116,7 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         return ~state[-1].all()
 
     def body(state):
-        (pool_d, pool_id, w_d, w_id, visited, t_index, st, eff, rnd, checked,
+        (pool_d, pool_id, w_d, w_id, visited, hs, is_, st, eff, rnd, checked,
          done) = state
         best_d, best_id = pool_d[:, 0], pool_id[:, 0]
         w_worst = jnp.take_along_axis(
@@ -1005,8 +1146,9 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
 
         # ---- normal expansion path (gated to active lanes)
         node = jnp.maximum(best_id, 0)
+        step = st.hops + 1
         if tracing:
-            t_index = _trace_mark(t_index, node[:, None], active[:, None])
+            is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
         nb1 = graph.neighbors[0, node]
         score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
         n_s = score_m.sum(-1).astype(jnp.int32)
@@ -1014,7 +1156,9 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
          _) = _score_insert_chunks(
             queries, bitmaps, store, nb1, score_m & active[:, None],
             params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
-            visited, use_pallas, drop_head=active)
+            visited, use_pallas, drop_head=active, quant=quant)
+        if tracing:
+            hs = _stamp_newly_marked(hs, visited, visited2, step)
 
         inc = lambda v: jnp.where(active, v, 0)
         st2 = SearchStats(
@@ -1024,15 +1168,29 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
             st.page_accesses_index + inc(jnp.int32(1)) + pai_emit,
             st.page_accesses_heap + inc(n_s * ppv),
             st.tmap_lookups + tm_emit, st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, t_index, st2, eff2,
+        return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2, eff2,
                 rnd2, checked2, done | (live & finish))
 
-    state = (pool_d, pool_id, w_d, w_id, visited, t_index, stats,
+    state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
              jnp.full((qn,), params.batch_tuples, jnp.int32),
              jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
              jnp.zeros((qn,), bool))
-    (pool_d, pool_id, w_d, w_id, visited, t_index, stats, eff, rnd, checked,
+    (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, eff, rnd, checked,
      _) = jax.lax.while_loop(cond, body, state)
+    trace_out = (hs, is_) if tracing else None
+
+    if quant == "sq8":
+        r = min(params.k * params.reorder_factor, efmax)
+        dk, out_ids, n_r, cand = jax.vmap(
+            lambda q, wd, wi, bm, e: _iter_emit_sq8(store, q, wd, wi, bm, e,
+                                                    params.k, r))(
+            queries, w_d, w_id, bitmaps, eff)
+        ppv_full = heap_pages_per_vector(store.dim)
+        stats = SearchStats(stats.distance_comps + n_r, stats.filter_checks,
+                            stats.hops, stats.page_accesses_index,
+                            stats.page_accesses_heap + n_r * ppv_full,
+                            stats.tmap_lookups, stats.reorder_rows + n_r)
+        return dk, out_ids, stats, trace_out, cand
 
     def emit(d, ids, bm, eff_q):
         in_batch = jnp.arange(efmax) < eff_q
@@ -1043,29 +1201,40 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         return dk, jnp.where(jnp.isinf(dk), -1, im[pos])
 
     dk, out_ids = jax.vmap(emit)(w_d, w_id, bitmaps, eff)
-    return dk, out_ids, stats, visited, (t_index if tracing else None)
+    return dk, out_ids, stats, trace_out, None
 
 
 def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
                            bitmaps, params: SearchParams, use_pallas: bool,
                            collect_trace: bool = False):
     n = graph.n
+    quant = params.graph_quant
 
     def zoom(q):
-        trace = (bitset_zeros(n), bitset_zeros(n)) if collect_trace else None
-        return _zoom_in(graph, store, q, SearchStats.zeros(), trace=trace)
+        trace = ((jnp.full((n,), TRACE_UNTOUCHED, jnp.int32),) * 2
+                 if collect_trace else None)
+        return _zoom_in(graph, store, q, SearchStats.zeros(), trace=trace,
+                        quant=quant)
 
     entry, entry_d, stats, zoom_trace = jax.vmap(zoom)(queries)
-    t_index0 = zoom_trace[1] if collect_trace else None
+    rerank_rows = None
     if params.strategy == "iterative_scan":
-        dk, ids, stats, visited, t_index = _frontier_iterative(
+        dk, ids, stats, trace0, rerank_rows = _frontier_iterative(
             graph, store, queries, bitmaps, params, entry, entry_d, stats,
-            use_pallas, t_index=t_index0)
+            use_pallas, trace=zoom_trace)
     else:
-        w_d, w_id, visited, stats, t_index = _frontier_base(
+        w_d, w_id, stats, trace0 = _frontier_base(
             graph, store, queries, bitmaps, params, entry, entry_d, stats,
             ef_result=params.ef_search, use_pallas=use_pallas,
-            t_index=t_index0)
+            trace=zoom_trace)
+        if quant == "sq8":
+            # exact full-precision rescore of the final beam — vmap of the
+            # same per-query helper the legacy engine calls, so the two
+            # engines stay bit-identical under sq8 too
+            w_d, stats = jax.vmap(
+                lambda q, wi, st: _rerank_beam(store, q, wi, st))(
+                queries, w_id, stats)
+            rerank_rows = w_id
         check = params.strategy in ("unfiltered",)
         dk, ids = jax.vmap(
             lambda wd, wi, bm: _finalize(wd, wi, bm, params.k,
@@ -1073,8 +1242,11 @@ def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
                                              w_d, w_id, bitmaps)
     if not collect_trace:
         return dk, ids, stats
-    # heap rows fetched = zoom-in scored ∪ base-loop scored (the visited
-    # set marks exactly the scored candidates + entry) — word-wise OR of
-    # packed bitsets is trivially repeat-safe
-    trace = {"heap_rows": zoom_trace[0] | visited, "index_nodes": t_index}
+    # heap_steps stamps zoom-in scored ∪ every superstep's newly scored
+    # rows (first-touch superstep order); index_steps stamps adjacency
+    # reads.  The sq8 rerank's full-width fetches are traced separately
+    # (they hit the full-precision heap segment, not the shadow).
+    trace = {"heap_steps": trace0[0], "index_steps": trace0[1]}
+    if quant == "sq8":
+        trace["rerank_rows"] = rerank_rows
     return dk, ids, stats, trace

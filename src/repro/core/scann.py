@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
                               distance, heap_pages_per_vector,
-                              probe_bitmap, topk_smallest)
+                              probe_bitmap, sq8_quantize, topk_smallest)
 from repro.kernels import ops as kops
 from repro.storage.pages import PAGE_BYTES, scann_pages_per_leaf
 
@@ -124,11 +124,9 @@ def build_scann(store: VectorStore, num_leaves: int, levels: int = 2,
         rowids[a, offs[a]] = row
         offs[a] += 1
 
-    # SQ8: per-dimension affine quantization over the dataset
-    lo, hi = xp.min(0), xp.max(0)
-    scale = np.maximum((hi - lo) / 254.0, 1e-8).astype(np.float32)
-    mean = ((hi + lo) / 2.0).astype(np.float32)
-    q = np.clip(np.round((xp - mean) / scale), -127, 127).astype(np.int8)
+    # SQ8: per-dimension affine quantization over the dataset (the shared
+    # quantizer — the graph engine's shadow store uses the same one)
+    q, scale, mean = sq8_quantize(xp)
     tiles = np.zeros((num_leaves, cap, dp), np.int8)
     valid = rowids >= 0
     tiles[valid] = q[rowids[valid]]

@@ -22,7 +22,8 @@ import numpy as np
 # names are re-exported here for backward compatibility — every historical
 # consumer imported them from core.types.
 from repro.storage.pages import (HEAP_PAGE_BYTES,  # noqa: F401
-                                 heap_pages_per_vector)
+                                 heap_pages_per_vector,
+                                 quant_heap_pages_per_vector)
 
 Array = jax.Array
 
@@ -39,11 +40,23 @@ class VectorStore:
 
     vectors: (N, d) float32 full-precision rows ("heap" in the paper).
     norms_sq: (N,) precomputed squared norms (L2 fast path).
+
+    The SQ8 shadow (DESIGN.md §9) is the quantized-traversal tier of the
+    graph engine: per-dimension affine int8 rows (the same quantizer the
+    ScaNN leaves use) plus build-time ||dequant(x)||² so the L2 fast path
+    never recomputes norms during traversal.  None until `quantize_store`
+    attaches it; the full-precision rows stay authoritative (exact rerank,
+    reordering, ground truth).
     """
 
     vectors: Array
     norms_sq: Array
     metric: str = dataclasses.field(metadata=dict(static=True), default=METRIC_L2)
+    # SQ8 shadow (graph_quant="sq8"): dequant is x = q_vectors*q_scale+q_mean
+    q_vectors: Optional[Array] = None      # (N, d) int8
+    q_scale: Optional[Array] = None        # (d,) f32
+    q_mean: Optional[Array] = None         # (d,) f32
+    q_norms_sq: Optional[Array] = None     # (N,) f32 of the dequantized rows
 
     @property
     def n(self) -> int:
@@ -53,11 +66,45 @@ class VectorStore:
     def dim(self) -> int:
         return self.vectors.shape[1]
 
+    @property
+    def has_sq8(self) -> bool:
+        return self.q_vectors is not None
+
     @staticmethod
     def build(vectors: Array | np.ndarray, metric: str = METRIC_L2) -> "VectorStore":
         vectors = jnp.asarray(vectors, jnp.float32)
         norms_sq = jnp.sum(vectors * vectors, axis=-1)
         return VectorStore(vectors=vectors, norms_sq=norms_sq, metric=metric)
+
+
+def sq8_quantize(x: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-dimension affine SQ8 over a dataset (the one quantizer in the
+    repo — the ScaNN leaf builder and the graph shadow store share it).
+
+    Returns (q (n, d) int8, scale (d,) f32, mean (d,) f32) with
+    dequantization x̂ = q * scale + mean.
+    """
+    x = np.asarray(x, np.float32)
+    lo, hi = x.min(0), x.max(0)
+    scale = np.maximum((hi - lo) / 254.0, 1e-8).astype(np.float32)
+    mean = ((hi + lo) / 2.0).astype(np.float32)
+    q = np.clip(np.round((x - mean) / scale), -127, 127).astype(np.int8)
+    return q, scale, mean
+
+
+def quantize_store(store: "VectorStore") -> "VectorStore":
+    """Attach the SQ8 shadow to a store (idempotent).  The shadow norms are
+    computed with the same dequant + reduction arithmetic the frontier
+    kernels/oracles apply, so precomputed and inline norms agree."""
+    if store.has_sq8:
+        return store
+    q, scale, mean = sq8_quantize(np.asarray(store.vectors))
+    qj = jnp.asarray(q)
+    scale_j, mean_j = jnp.asarray(scale), jnp.asarray(mean)
+    deq = qj.astype(jnp.float32) * scale_j + mean_j
+    return dataclasses.replace(
+        store, q_vectors=qj, q_scale=scale_j, q_mean=mean_j,
+        q_norms_sq=jnp.sum(deq * deq, axis=-1))
 
 
 def distance(metric: str, q: Array, x: Array, x_norm_sq: Optional[Array] = None) -> Array:
@@ -195,6 +242,14 @@ class SearchParams:
     # packed visited bitsets, and chunked need-only scoring; "vmapped" is
     # the legacy per-query beam loop kept as the bit-identical oracle.
     graph_exec_mode: str = "frontier"
+    # Quantized graph traversal (DESIGN.md §9): "sq8" makes BOTH graph
+    # engines navigate over the store's SQ8 shadow rows (int8 fetches,
+    # in-kernel dequant on the Pallas path) and exactly re-score the final
+    # result beam from the full-precision heap (ScaNN-reorder-style,
+    # counted in reorder_rows + full-width heap pages).  "none" is the
+    # classic full-precision traversal — bit-identical to the
+    # pre-quantization engines.  Requires a `quantize_store`d VectorStore.
+    graph_quant: str = "none"
     # Frontier-engine chunk sizes (DESIGN.md §7): candidates that actually
     # need scoring are compacted and scored `chunk` at a time.  0 = score
     # the full candidate width in one pass (no compaction) — the right

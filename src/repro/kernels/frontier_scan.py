@@ -26,6 +26,17 @@ VMEM envelope per grid step (f32): query d + chunk C×d + norms/ids/out C
 16 MB/core, leaving the double-buffered prefetch of the next query's
 chunk free (the grid walks queries, so the union block's rows stream
 HBM→VMEM at most once per appearance in a chunk).
+
+`frontier_scan_sq8_pallas` is the quantized-traversal variant
+(DESIGN.md §9): the chunk arrives as SQ8 int8 rows straight from the
+shadow heap — 4× less HBM→VMEM traffic per candidate — and is
+dequantized IN-KERNEL (x = t·scale + mean, the `leaf_scan` fusion math)
+before the same contraction + bitmap probe.  Per-row ‖x̂‖² of the
+dequantized rows is precomputed at quantization time and streamed in,
+so the L2 completion never re-reduces inside the step.  VMEM per grid
+step: C×d int8 chunk + C×d f32 dequant + 2×d scale/mean — for C=128,
+d=1024: 0.64 MB.  int8 blocks obey the (32, 128) min-tile; C pads to
+the 128-lane output axis, satisfying both.
 """
 from __future__ import annotations
 
@@ -96,4 +107,78 @@ def frontier_scan_pallas(queries: jax.Array, vecs: jax.Array,
         ],
         interpret=interpret,
     )(q, v, nrm, idp, bitmaps)
+    return dist[:, :c], ok[:, :c].astype(bool)
+
+
+def _frontier_scan_sq8_kernel(q_ref, vec_ref, scale_ref, mean_ref, norm_ref,
+                              id_ref, bitmap_ref, dist_ref, pass_ref, *,
+                              metric: str):
+    q = q_ref[...][0]                                # (d,) f32
+    t = vec_ref[...][0]                              # (C, d) int8
+    scale = scale_ref[...]                           # (1, d) f32
+    mean = mean_ref[...]                             # (1, d) f32
+    xn = norm_ref[...][0]                            # (C,) f32 ||x̂||²
+    rid = id_ref[...][0]                             # (C,) int32
+    x = t.astype(jnp.float32) * scale + mean         # in-kernel dequant
+    ip = jnp.dot(x, q, preferred_element_type=jnp.float32)     # (C,)
+    if metric == "ip":
+        d = -ip
+    else:
+        qn = jnp.sum(q * q)
+        d = qn + xn - 2.0 * ip
+    safe = jnp.maximum(rid, 0)
+    words = bitmap_ref[...][0]                       # (W,) uint32
+    w = jnp.take(words, safe >> 5, axis=0)
+    bit = (w >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    ok = (bit == 1) & (rid >= 0)
+    dist_ref[...] = jnp.where(rid >= 0, d, jnp.inf)[None, :]
+    pass_ref[...] = ok.astype(jnp.int8)[None, :]
+
+
+def frontier_scan_sq8_pallas(queries: jax.Array, qvecs: jax.Array,
+                             scale: jax.Array, mean: jax.Array,
+                             norms: jax.Array, ids: jax.Array,
+                             bitmaps: jax.Array, metric: str = "l2",
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """queries (Q, d) f32, qvecs (Q, C, d) int8 (SQ8 shadow rows),
+    scale/mean (d,) f32, norms (Q, C) f32 (precomputed ‖dequant‖²),
+    ids (Q, C) int32, bitmaps (Q, W) uint32
+    → (dists (Q, C) f32, pass (Q, C) bool).
+
+    Same grid/fusion as `frontier_scan_pallas`, with the dequantization
+    folded into the kernel so only int8 rows cross HBM→VMEM."""
+    nq, c, d = qvecs.shape
+    w = bitmaps.shape[1]
+    pd = (-d) % 128
+    pc = (-c) % 128          # C is the lane axis of the (1, C) outputs
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pd)))
+    v = jnp.pad(qvecs, ((0, 0), (0, pc), (0, pd)))
+    s = jnp.pad(scale.astype(jnp.float32), (0, pd))[None, :]
+    m = jnp.pad(mean.astype(jnp.float32), (0, pd))[None, :]
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pc)))
+    idp = jnp.pad(ids, ((0, 0), (0, pc)), constant_values=-1)
+    cp, dp = c + pc, d + pd
+    dist, ok = pl.pallas_call(
+        functools.partial(_frontier_scan_sq8_kernel, metric=metric),
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),          # query
+            pl.BlockSpec((1, cp, dp), lambda i: (i, 0, 0)),   # int8 chunk
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # scale
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # mean
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # dequant norms
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # row ids
+            pl.BlockSpec((1, w), lambda i: (i, 0)),           # bitmap
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, cp), jnp.float32),
+            jax.ShapeDtypeStruct((nq, cp), jnp.int8),
+        ],
+        interpret=interpret,
+    )(q, v, s, m, nrm, idp, bitmaps)
     return dist[:, :c], ok[:, :c].astype(bool)

@@ -19,7 +19,8 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.frontier_scan import frontier_scan_pallas
+from repro.kernels.frontier_scan import (frontier_scan_pallas,
+                                         frontier_scan_sq8_pallas)
 from repro.kernels.leaf_scan import leaf_scan_batched_pallas, leaf_scan_pallas
 from repro.kernels.topk import topk_pallas
 
@@ -77,6 +78,25 @@ def frontier_scan(queries, vecs, norms, ids, bitmaps, metric: str = "l2",
         return frontier_scan_pallas(queries, vecs, norms, ids, bitmaps,
                                     metric, interpret=_interpret())
     return ref.frontier_scan_ref(queries, vecs, norms, ids, bitmaps, metric)
+
+
+@partial(jax.jit, static_argnames=("metric", "use_pallas"))
+def frontier_scan_sq8(queries, qvecs, scale, mean, norms, ids, bitmaps,
+                      metric: str = "l2", use_pallas: bool = False):
+    """SQ8 frontier-chunk scoring + filter probe (DESIGN.md §9): the chunk
+    arrives int8 from the shadow heap and is dequantized in-kernel.
+    Returns (dists (Q, C), pass (Q, C)).
+
+    Like `frontier_scan`, defaults to the jnp oracle — its dequant +
+    elementwise arithmetic is the bit-identical mirror of the legacy
+    vmapped engine's quantized gather path; the MXU kernel is
+    allclose-only.  cos always routes through the oracle."""
+    if use_pallas and metric != "cos":
+        return frontier_scan_sq8_pallas(queries, qvecs, scale, mean, norms,
+                                        ids, bitmaps, metric,
+                                        interpret=_interpret())
+    return ref.frontier_scan_sq8_ref(queries, qvecs, scale, mean, norms,
+                                     ids, bitmaps, metric)
 
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))

@@ -112,6 +112,32 @@ def frontier_scan_ref(queries: jax.Array, vecs: jax.Array, norms: jax.Array,
     return jnp.where(ids >= 0, d, jnp.inf), ok
 
 
+def frontier_scan_sq8_ref(queries: jax.Array, qvecs: jax.Array,
+                          scale: jax.Array, mean: jax.Array,
+                          norms: jax.Array, ids: jax.Array,
+                          bitmaps: jax.Array, metric: str = "l2"
+                          ) -> tuple[jax.Array, jax.Array]:
+    """SQ8 quantized-traversal frontier scoring, reference semantics
+    (DESIGN.md §9).
+
+    queries (Q, d) f32    — one query per in-flight traversal
+    qvecs   (Q, C, d) int8 — SQ8 shadow rows of each query's chunk
+    scale/mean (d,) f32   — dequantization: x̂ = qvecs * scale + mean
+    norms   (Q, C) f32    — precomputed ‖x̂‖² (L2 path; the shadow store's
+                            build-time `q_norms_sq`)
+    ids     (Q, C) int32  — heap row ids, -1 padded
+    bitmaps (Q, W) uint32 — per-query packed filter bitmaps
+    returns (dists (Q, C) f32 with +inf at padded slots, pass (Q, C) bool).
+
+    Dequantization + distance arithmetic deliberately mirror the legacy
+    vmapped engine's quantized gather path (elementwise product +
+    last-axis sum on the dequantized rows), so the two graph engines stay
+    bit-identical under graph_quant="sq8" (tests/test_graph_quant.py).
+    """
+    x = qvecs.astype(jnp.float32) * scale + mean          # (Q, C, d)
+    return frontier_scan_ref(queries, x, norms, ids, bitmaps, metric)
+
+
 def topk_partial_ref(values: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Global k smallest (values, indices) over a 1-D array.
 

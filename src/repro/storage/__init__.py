@@ -8,15 +8,18 @@ executor access traces into pooled page streams and `StorageStats`.
 from repro.storage.pages import (PAGE_BYTES, HEAP_PAGE_BYTES,
                                  GraphAdjacencyLayout, HeapLayout,
                                  ScannLeafLayout, heap_pages_per_vector,
+                                 quant_heap_pages_per_vector,
                                  scann_pages_per_leaf)
 from repro.storage.bufferpool import (POLICIES, BufferPool, BufferPoolState,
                                       PoolCounters)
-from repro.storage.engine import (SEGMENTS, StorageEngine, StorageStats,
-                                  make_storage_engine)
+from repro.storage.engine import (SEGMENTS, TRACE_UNTOUCHED, StorageEngine,
+                                  StorageStats, make_storage_engine)
 
 __all__ = [
     "PAGE_BYTES", "HEAP_PAGE_BYTES", "GraphAdjacencyLayout", "HeapLayout",
-    "ScannLeafLayout", "heap_pages_per_vector", "scann_pages_per_leaf",
+    "ScannLeafLayout", "heap_pages_per_vector",
+    "quant_heap_pages_per_vector", "scann_pages_per_leaf",
     "POLICIES", "BufferPool", "BufferPoolState", "PoolCounters",
-    "SEGMENTS", "StorageEngine", "StorageStats", "make_storage_engine",
+    "SEGMENTS", "TRACE_UNTOUCHED", "StorageEngine", "StorageStats",
+    "make_storage_engine",
 ]

@@ -1,11 +1,12 @@
 """Paged storage engine: layouts + buffer pool + per-batch accounting
 (DESIGN.md §8).
 
-`StorageEngine` owns the three page segments of the paged object model —
+`StorageEngine` owns the page segments of the paged object model —
 
     heap   — full-precision vector rows        (pages.HeapLayout)
     scann  — quantized ScaNN posting lists     (pages.ScannLeafLayout)
     graph  — HNSW adjacency / element tuples   (pages.GraphAdjacencyLayout)
+    qheap  — SQ8 shadow vector rows            (pages.HeapLayout, 1 B/dim)
 
 — mapped into one global page-id space, fronted by one `BufferPool`
 (shared buffers).  Executors run their (bit-identical) jitted searches
@@ -28,12 +29,22 @@ validated against — tests/test_storage.py):
   * heap (reorder / seqscan / graph fetches): always per query —
     `pages_per_row` logical pages per fetched row; cross-query repeats
     are hits, not elided accesses.
-  * graph traces arrive as packed touched-object bitsets (order within a
-    query is id-ascending — the documented approximation of first-touch
-    order; DESIGN.md §8), so graph measured-logical counts each touched
-    object once.  Zoom-in re-scores (a node scored at two upper levels)
-    are charged once here but twice by the analytic counters — the only
-    place measured ≤ analytic instead of ==.
+  * graph traces arrive as per-query FIRST-TOUCH superstep stamps
+    (`steps[obj]` = hop counter of the step that first fetched the
+    object, TRACE_UNTOUCHED where never fetched), so graph
+    measured-logical counts each touched object once AND the replay is
+    superstep-order-faithful: within a query, objects are fed to the
+    pool sorted by (first-touch step, id) — LRU/clock sees them in the
+    order the traversal actually fetched them, id-ascending only as the
+    within-step tiebreak.  Zoom-in re-scores (a node scored at two upper
+    levels) are charged once here but twice by the analytic counters —
+    the only place measured ≤ analytic instead of ==.
+  * sq8 quantized traversal (DESIGN.md §9): the traversal's row fetches
+    replay through the dense "qheap" shadow segment (4× more rows per
+    page), and the exact rerank's full-width fetches replay through
+    "heap" in candidate order — so the Table 4 question (does quantized
+    traversal actually shrink heap traffic?) is answered by measured
+    pages, not a rescaled counter.
 
 Host-side numpy only; nothing here enters a jitted trace.
 """
@@ -48,7 +59,12 @@ from repro.storage.bufferpool import BufferPool, BufferPoolState
 from repro.storage.pages import (GraphAdjacencyLayout, HeapLayout,
                                  ScannLeafLayout)
 
-SEGMENTS = ("heap", "scann", "graph")
+SEGMENTS = ("heap", "scann", "graph", "qheap")
+
+# First-touch stamp sentinel for untouched objects — numerically pinned to
+# int32 max, the same value core.graph_search.TRACE_UNTOUCHED stamps with
+# (both derive from iinfo(int32); they cannot drift).
+TRACE_UNTOUCHED = np.iinfo(np.int32).max
 
 
 def _unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
@@ -56,6 +72,14 @@ def _unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
     w = np.asarray(words, np.uint32)
     bits = (w[:, None] >> np.arange(32, dtype=np.uint32)) & np.uint32(1)
     return bits.reshape(-1)[:n].astype(bool)
+
+
+def _ordered_touches(steps: np.ndarray) -> np.ndarray:
+    """Touched object ids of one query's first-touch stamp array, in
+    replay order: sorted by (first-touch step, id)."""
+    steps = np.asarray(steps)
+    ids = np.nonzero(steps < TRACE_UNTOUCHED)[0]
+    return ids[np.argsort(steps[ids], kind="stable")]
 
 
 @dataclasses.dataclass
@@ -69,6 +93,11 @@ class StorageStats:
     # per-query measured logical counters (the SearchStats comparables):
     index_pages: np.ndarray  # (Q,) scann-or-graph index pages charged
     heap_pages: np.ndarray   # (Q,) heap pages charged
+    # segment -> DISTINCT pages touched this batch (pool-independent):
+    # unique/logical is the batch's page-sharing (unique-fetch) fraction,
+    # the measured replacement for costmodel.FRONTIER_PAGE_AMORT's
+    # calibration anchor (DESIGN.md §9).
+    unique: dict = dataclasses.field(default_factory=dict)
 
     @property
     def logical_total(self) -> int:
@@ -83,10 +112,19 @@ class StorageStats:
         t = self.logical_total
         return float(sum(self.hits.values())) / t if t else 0.0
 
+    def unique_fraction(self, segments=None) -> float:
+        """Distinct/logical page fraction over `segments` (default: all).
+        1.0 = no intra-batch page sharing; lower = queries share pages."""
+        segs = segments if segments is not None else self.logical.keys()
+        log = sum(self.logical.get(s, 0) for s in segs)
+        unq = sum(self.unique.get(s, 0) for s in segs)
+        return unq / log if log else 1.0
+
     def as_dict(self) -> dict:
         return dict(logical=dict(self.logical), hits=dict(self.hits),
                     misses=dict(self.misses), evictions=self.evictions,
                     hit_rate=round(self.hit_rate, 4),
+                    unique=dict(self.unique),
                     index_pages=self.index_pages.tolist(),
                     heap_pages=self.heap_pages.tolist())
 
@@ -98,11 +136,13 @@ class StorageEngine:
                  scann: Optional[ScannLeafLayout] = None,
                  graph: Optional[GraphAdjacencyLayout] = None,
                  capacity_pages: Optional[int] = None,
-                 capacity_frac: float = 0.5, policy: str = "lru"):
+                 capacity_frac: float = 0.5, policy: str = "lru",
+                 qheap: Optional[HeapLayout] = None):
         self.heap = heap
         self.scann = scann
         self.graph = graph
-        # global page-id space: [heap | scann | graph]
+        self.qheap = qheap
+        # global page-id space: [heap | scann | graph | qheap]
         self._base = {"heap": 0}
         off = heap.num_pages
         if scann is not None:
@@ -111,6 +151,9 @@ class StorageEngine:
         if graph is not None:
             self._base["graph"] = off
             off += graph.num_pages
+        if qheap is not None:
+            self._base["qheap"] = off
+            off += qheap.num_pages
         self.total_pages = off
         if capacity_pages is None:
             capacity_pages = max(1, int(round(capacity_frac * off)))
@@ -120,7 +163,7 @@ class StorageEngine:
     # -- segment helpers ----------------------------------------------------
     def segment_ranges(self) -> dict[str, tuple[int, int]]:
         layouts = {"heap": self.heap, "scann": self.scann,
-                   "graph": self.graph}
+                   "graph": self.graph, "qheap": self.qheap}
         return {name: (lo, lo + layouts[name].num_pages)
                 for name, lo in self._base.items()}
 
@@ -141,21 +184,25 @@ class StorageEngine:
         log = dict.fromkeys(segs, 0)
         hit = dict.fromkeys(segs, 0)
         mis = dict.fromkeys(segs, 0)
+        uniq: dict[str, set] = {s: set() for s in segs}
         ev = 0
         idx_pages = np.zeros(q, np.int64)
         heap_pages = np.zeros(q, np.int64)
         for i, per_q in enumerate(streams):
             for seg, pages in per_q:
-                d = self.pool.access(self._base[seg] + np.asarray(pages))
+                pages = np.asarray(pages)
+                d = self.pool.access(self._base[seg] + pages)
                 log[seg] += d.logical
                 hit[seg] += d.hits
                 mis[seg] += d.misses
+                uniq[seg].update(pages.tolist())
                 ev += d.evictions
-                if seg == "heap":
+                if seg in ("heap", "qheap"):
                     heap_pages[i] += d.logical
                 else:
                     idx_pages[i] += d.logical
-        return StorageStats(log, hit, mis, ev, idx_pages, heap_pages)
+        return StorageStats(log, hit, mis, ev, idx_pages, heap_pages,
+                            unique={s: len(v) for s, v in uniq.items()})
 
     def account_scann(self, leaves: np.ndarray, cand_rows: np.ndarray,
                       cand_ok: np.ndarray,
@@ -196,22 +243,43 @@ class StorageEngine:
             ])
         return self._replay(streams)
 
-    def account_graph(self, heap_rows_bits: np.ndarray,
-                      index_nodes_bits: np.ndarray) -> StorageStats:
-        """Packed per-query touched-object bitsets from the frontier
-        engine's trace: heap_rows (rows fetched full-precision),
-        index_nodes (adjacency entries read)."""
+    def account_graph(self, heap_steps: np.ndarray,
+                      index_steps: np.ndarray,
+                      rerank_rows: Optional[np.ndarray] = None,
+                      quant: bool = False) -> StorageStats:
+        """Per-query first-touch superstep stamps from the frontier
+        engine's trace: heap_steps (rows fetched during traversal),
+        index_steps (adjacency entries read) — each (Q, n) int32,
+        TRACE_UNTOUCHED where never touched.  Within a query, pages
+        replay in (first-touch step, id) order: superstep-faithful for
+        LRU/clock, id-ascending only as the within-step tiebreak.
+
+        `quant=True` (graph_quant="sq8", DESIGN.md §9) routes the
+        traversal's row fetches through the dense SQ8 "qheap" shadow
+        segment, and `rerank_rows` ((Q, r) int32, -1-padded, candidate
+        order) charges the exact rerank's full-width fetches to "heap"."""
         if self.graph is None:
             raise ValueError("engine built without a graph layout")
-        hbits = np.asarray(heap_rows_bits)
-        ibits = np.asarray(index_nodes_bits)
-        n = self.heap.n
-        streams = [[
-            ("graph", self.graph.pages_for_nodes(
-                np.nonzero(_unpack_bits(ibits[i], n))[0])),
-            ("heap", self.heap.pages_for_rows(
-                np.nonzero(_unpack_bits(hbits[i], n))[0])),
-        ] for i in range(hbits.shape[0])]
+        if quant and self.qheap is None:
+            raise ValueError("engine built without a qheap (SQ8 shadow) "
+                             "layout; build it from a quantize_store'd "
+                             "store")
+        hsteps = np.asarray(heap_steps)
+        isteps = np.asarray(index_steps)
+        row_seg = "qheap" if quant else "heap"
+        row_layout = self.qheap if quant else self.heap
+        streams = []
+        for i in range(hsteps.shape[0]):
+            per_q = [
+                ("graph", self.graph.pages_for_nodes(
+                    _ordered_touches(isteps[i]))),
+                (row_seg, row_layout.pages_for_rows(
+                    _ordered_touches(hsteps[i]))),
+            ]
+            if rerank_rows is not None:
+                rr = np.asarray(rerank_rows[i])
+                per_q.append(("heap", self.heap.pages_for_rows(rr[rr >= 0])))
+            streams.append(per_q)
         return self._replay(streams)
 
     def account_seqscan(self, bitmaps: np.ndarray) -> StorageStats:
@@ -230,9 +298,15 @@ def make_storage_engine(store, index=None, graph=None,
                         capacity_frac: float = 0.5,
                         policy: str = "lru") -> StorageEngine:
     """Build an engine from live components: a core VectorStore, optional
-    ScannIndex, optional HNSWGraph (duck-typed on shapes — no core import)."""
+    ScannIndex, optional HNSWGraph (duck-typed on shapes — no core import).
+    The dense "qheap" SQ8-shadow segment is always laid out (it is pure
+    geometry — n rows at 1 B/dim), so quantized traversal replays through
+    shadow pages whether or not the store object in hand carries the
+    shadow arrays (DESIGN.md §9)."""
     heap = HeapLayout(n=int(store.vectors.shape[0]),
                       dim=int(store.vectors.shape[1]))
+    qheap = HeapLayout(n=int(store.vectors.shape[0]),
+                       dim=int(store.vectors.shape[1]), value_bytes=1)
     scann = None
     if index is not None:
         L, C, dp = index.leaf_tiles.shape
@@ -242,4 +316,5 @@ def make_storage_engine(store, index=None, graph=None,
         gl = GraphAdjacencyLayout(n=int(graph.neighbors.shape[1]),
                                   degree=int(graph.neighbors.shape[2]))
     return StorageEngine(heap, scann, gl, capacity_pages=capacity_pages,
-                         capacity_frac=capacity_frac, policy=policy)
+                         capacity_frac=capacity_frac, policy=policy,
+                         qheap=qheap)

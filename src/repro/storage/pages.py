@@ -35,6 +35,15 @@ def heap_pages_per_vector(dim: int) -> int:
     return max(1, -(-dim * 4 // PAGE_BYTES))
 
 
+def quant_heap_pages_per_vector(dim: int) -> int:
+    """Heap pages touched per SQ8 (1 byte/dim) vector fetch.  Same
+    no-straddle convention as the f32 formula; 4× more rows pack per page,
+    so the per-fetch constant only drops for rows wider than a page —
+    the density win shows up in *which* pages are touched (fewer distinct
+    pages per traversal), which the buffer pool measures (DESIGN.md §9)."""
+    return max(1, -(-dim // PAGE_BYTES))
+
+
 def scann_pages_per_leaf(cap: int, dp: int) -> int:
     """Quantized-leaf pages per ScaNN leaf: (C, dp) int8 tile on 8 KB pages."""
     return max(1, -(-cap * dp // PAGE_BYTES))
@@ -42,25 +51,31 @@ def scann_pages_per_leaf(cap: int, dp: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class HeapLayout:
-    """Full-precision vector rows on 8 KB heap pages.
+    """Vector rows on 8 KB heap pages.
 
     If a row fits in a page, `rows_per_page` rows pack per page and one
     fetch touches 1 page; otherwise each row owns `pages_per_row`
     consecutive pages and one fetch touches all of them.  Either way the
     logical page touches per fetched row equal
     `heap_pages_per_vector(dim)` — the analytic constant, now derived.
+
+    `value_bytes` is the stored width per dimension: 4 for the
+    full-precision heap, 1 for the SQ8 shadow heap (DESIGN.md §9) —
+    quantized rows pack 4× denser, so the same traversal touches ~4×
+    fewer distinct pages.
     """
 
     n: int
     dim: int
+    value_bytes: int = 4
 
     @property
     def row_bytes(self) -> int:
-        return self.dim * 4
+        return self.dim * self.value_bytes
 
     @property
     def pages_per_row(self) -> int:
-        return heap_pages_per_vector(self.dim)
+        return max(1, -(-self.row_bytes // PAGE_BYTES))
 
     @property
     def rows_per_page(self) -> int:

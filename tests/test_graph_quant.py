@@ -1,0 +1,446 @@
+"""SQ8 quantized graph traversal (DESIGN.md §9).
+
+Four layers of guarantees:
+
+  * the int8 `frontier_scan_sq8` kernel matches its jnp oracle in
+    interpret mode (deterministic + hypothesis sweeps when the dev dep
+    is installed);
+  * graph_quant="none" stays bit-identical to the pre-quantization
+    engines (the shadow arrays are inert), and under graph_quant="sq8"
+    the frontier and vmapped engines stay bit-identical to EACH OTHER
+    (ids, dists, all seven counters) across strategies × selectivity;
+  * the exact full-precision rerank bounds recall: sq8 recall@10 within
+    0.02 of f32 across the selectivity grid, with ScaNN-reorder-style
+    accounting (reorder_rows, full-width heap pages);
+  * the storage engine routes quantized traversal through the dense
+    "qheap" shadow segment, and the first-touch trace replays pages in
+    superstep order (the order-faithful LRU regression).
+
+Plus the quant-aware cost model (rerank surcharge, cheaper int8
+materialization, shadow-segment misses) and the planner's sweeping_sq8
+dispatch candidate + pool-measured engine amortization.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep (requirements-dev.txt):
+    # property tests skip individually; plain tests in this module still run
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:  # stub strategies so decorator arguments still evaluate
+        integers = floats = sampled_from = staticmethod(
+            lambda *a, **k: None)
+
+from repro.core import (SYSTEM, SearchParams, SearchPlan, WorkloadSpec,
+                        build_scann, filtered_knn, generate_bitmaps,
+                        heap_pages_per_vector, make_executor, pack_bool_bitmap,
+                        predict_counters, predict_cycles,
+                        quant_heap_pages_per_vector, quantize_store,
+                        recall_at_k, search_batch)
+from repro.core.costmodel import (FRONTIER_CALIB_UNIQUE, FRONTIER_PAGE_AMORT,
+                                  IndexShape, cache_miss_penalty,
+                                  engine_scale)
+from repro.core.graph_search import TRACE_UNTOUCHED
+from repro.kernels import ops, ref
+from repro.storage import (BufferPoolState, GraphAdjacencyLayout, HeapLayout,
+                           StorageEngine, make_storage_engine)
+
+STRATS = ("unfiltered", "sweeping", "acorn", "navix", "iterative_scan")
+STAT_FIELDS = ("distance_comps", "filter_checks", "hops",
+               "page_accesses_index", "page_accesses_heap", "tmap_lookups",
+               "reorder_rows")
+PARAMS = SearchParams(k=10, ef_search=48, beam_width=128, max_hops=500)
+
+
+@pytest.fixture(scope="module")
+def quant_store(small_dataset):
+    store, _ = small_dataset
+    return quantize_store(store)
+
+
+@pytest.fixture(scope="module")
+def scann_index(small_dataset):
+    store, _ = small_dataset
+    return build_scann(store, num_leaves=64, levels=2, seed=0)
+
+
+def _assert_engines_identical(graph, store, queries, bm, p):
+    pv = dataclasses.replace(p, graph_exec_mode="vmapped")
+    pf = dataclasses.replace(p, graph_exec_mode="frontier")
+    dv, iv, sv = search_batch(graph, store, queries, bm, pv)
+    df, iff, sf = search_batch(graph, store, queries, bm, pf)
+    np.testing.assert_array_equal(np.asarray(iv), np.asarray(iff))
+    assert np.array_equal(np.asarray(dv), np.asarray(df), equal_nan=True), \
+        "distances not bit-identical"
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sv, f)), np.asarray(getattr(sf, f)),
+            err_msg=f"counter {f} diverged")
+    return dv, iv, sv
+
+
+# ---------------- the SQ8 shadow store ----------------
+
+def test_quantize_store_roundtrip(small_dataset, quant_store):
+    store, _ = small_dataset
+    sq = quant_store
+    assert not store.has_sq8 and sq.has_sq8
+    assert quantize_store(sq) is sq                    # idempotent
+    assert sq.q_vectors.dtype == jnp.int8
+    deq = (np.asarray(sq.q_vectors, np.float32) * np.asarray(sq.q_scale)
+           + np.asarray(sq.q_mean))
+    err = np.abs(deq - np.asarray(store.vectors))
+    # affine SQ8 over [lo, hi] with 254 steps: error ≤ scale/2 per dim
+    assert (err <= np.asarray(sq.q_scale)[None, :] * 0.51).all()
+    np.testing.assert_allclose(np.asarray(sq.q_norms_sq),
+                               (deq * deq).sum(-1), rtol=1e-5)
+
+
+def test_sq8_requires_shadow(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=2)
+    p = dataclasses.replace(PARAMS, strategy="sweeping", graph_quant="sq8")
+    with pytest.raises(ValueError, match="quantize_store"):
+        search_batch(small_graph, store, queries, bm, p)
+    with pytest.raises(ValueError, match="graph_quant"):
+        search_batch(small_graph, store, queries, bm,
+                     dataclasses.replace(PARAMS, graph_quant="fp4"))
+
+
+# ---------------- frontier_scan_sq8 kernel parity ----------------
+
+def _sq8_case(rng, q, c, d, n_rows, density):
+    queries = jnp.asarray(rng.randn(q, d).astype(np.float32))
+    ids = rng.randint(0, n_rows, (q, c)).astype(np.int32)
+    ids[rng.rand(q, c) < 0.15] = -1
+    qv = rng.randint(-127, 128, (q, c, d)).astype(np.int8)
+    scale = jnp.asarray((np.abs(rng.randn(d)) * 0.05 + 1e-3)
+                        .astype(np.float32))
+    mean = jnp.asarray((rng.randn(d) * 0.1).astype(np.float32))
+    x = jnp.asarray(qv, jnp.float32) * scale + mean
+    norms = jnp.sum(x * x, -1)
+    bms = jnp.stack([pack_bool_bitmap(rng.rand(n_rows) < density)
+                     for _ in range(q)])
+    return queries, jnp.asarray(qv), scale, mean, norms, \
+        jnp.asarray(ids), bms
+
+
+def _assert_sq8_parity(case, metric):
+    queries, qv, scale, mean, norms, ids, bms = case
+    da, pa = ops.frontier_scan_sq8(queries, qv, scale, mean, norms, ids,
+                                   bms, metric=metric, use_pallas=True)
+    db, pb = ref.frontier_scan_sq8_ref(queries, qv, scale, mean, norms,
+                                       ids, bms, metric)
+    fa, fb = np.isfinite(np.asarray(da)), np.isfinite(np.asarray(db))
+    np.testing.assert_array_equal(fa, fb)
+    np.testing.assert_allclose(np.asarray(da)[fa], np.asarray(db)[fb],
+                               atol=2e-3, rtol=1e-3)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_frontier_scan_sq8_parity_basic():
+    rng = np.random.RandomState(5)
+    case = _sq8_case(rng, q=5, c=33, d=70, n_rows=512, density=0.5)
+    for metric in ("l2", "ip"):
+        _assert_sq8_parity(case, metric)
+
+
+@settings(max_examples=10, deadline=None)
+@given(q=st.integers(1, 9), c=st.integers(1, 70), d=st.integers(1, 150),
+       metric=st.sampled_from(["l2", "ip"]), density=st.floats(0.0, 1.0),
+       seed=st.integers(0, 99))
+def test_frontier_scan_sq8_parity_sweep(q, c, d, metric, density, seed):
+    rng = np.random.RandomState(seed)
+    case = _sq8_case(rng, q, c, d, n_rows=256, density=density)
+    _assert_sq8_parity(case, metric)
+
+
+# ---------------- engine equivalence ----------------
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_none_mode_ignores_shadow(small_dataset, small_graph, quant_store,
+                                  strategy):
+    """graph_quant="none" on a shadow-carrying store must be bit-identical
+    to the plain store (the shadow arrays are inert bookkeeping), on both
+    engines."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=4)
+    p = dataclasses.replace(PARAMS, strategy=strategy, graph_quant="none")
+    d0, i0, s0 = _assert_engines_identical(small_graph, store, queries, bm,
+                                           p)
+    d1, i1, s1 = _assert_engines_identical(small_graph, quant_store,
+                                           queries, bm, p)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    assert np.array_equal(np.asarray(d0), np.asarray(d1), equal_nan=True)
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(s0, f)),
+                                      np.asarray(getattr(s1, f)), f)
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_sq8_engines_bit_identical(small_dataset, small_graph, quant_store,
+                                   strategy):
+    """Under graph_quant="sq8" the frontier engine must reproduce the
+    vmapped engine exactly (same quantized traversal, same exact rerank,
+    same counters) across the selectivity grid."""
+    _, queries = small_dataset
+    p = dataclasses.replace(PARAMS, strategy=strategy, graph_quant="sq8")
+    for sel in (0.05, 0.5):
+        bm = generate_bitmaps(quant_store, queries, WorkloadSpec(sel, "none"),
+                              seed=int(sel * 100) + 1)
+        _, _, stats = _assert_engines_identical(small_graph, quant_store,
+                                                queries, bm, p)
+        assert int(np.asarray(stats.reorder_rows).sum()) > 0
+
+
+def test_sq8_rerank_accounting(small_dataset, small_graph, quant_store):
+    """ScaNN-reorder-style rerank semantics: reorder_rows counts the valid
+    final-beam entries, each charged one full-width heap fetch and one
+    exact distance comp on top of the quantized traversal."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=6)
+    p0 = dataclasses.replace(PARAMS, strategy="sweeping")
+    p1 = dataclasses.replace(p0, graph_quant="sq8")
+    _, _, s0 = search_batch(small_graph, quant_store, queries, bm, p0)
+    _, _, s1 = search_batch(small_graph, quant_store, queries, bm, p1)
+    rr = np.asarray(s1.reorder_rows)
+    assert (rr > 0).all() and (rr <= PARAMS.ef_search).all()
+    assert (np.asarray(s0.reorder_rows) == 0).all()
+    ppv = heap_pages_per_vector(store.dim)
+    # the rerank's full-width pages ride the heap counter
+    assert (np.asarray(s1.page_accesses_heap) >= rr * ppv).all()
+
+
+@pytest.mark.parametrize("strategy", ("sweeping", "acorn"))
+def test_sq8_recall_guardrail(small_dataset, small_graph, quant_store,
+                              strategy):
+    """sq8 + exact rerank recall@10 stays within 0.02 of f32 across the
+    selectivity grid (the quantized tier's recall bound)."""
+    store, queries = small_dataset
+    p = SearchParams(k=10, ef_search=64, beam_width=128, strategy=strategy,
+                     max_hops=1000)
+    for sel in (0.05, 0.2, 0.5):
+        bm = generate_bitmaps(store, queries, WorkloadSpec(sel, "none"),
+                              seed=int(sel * 1000))
+        _, tid = filtered_knn(store, queries, bm, p.k)
+
+        def rec(params):
+            _, ids, _ = search_batch(small_graph, quant_store, queries, bm,
+                                     params)
+            return float(np.mean(np.asarray(jax.vmap(
+                lambda f, t: recall_at_k(f, t, p.k))(ids, tid))))
+
+        r_f32 = rec(p)
+        r_sq8 = rec(dataclasses.replace(p, graph_quant="sq8"))
+        assert r_sq8 >= r_f32 - 0.02, (strategy, sel, r_f32, r_sq8)
+
+
+# ---------------- storage integration ----------------
+
+def test_sq8_storage_uses_qheap_segment(small_dataset, small_graph,
+                                        quant_store):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=8)
+    p = SearchParams(k=10, ef_search=96, beam_width=512, max_hops=2048)
+    runs = {}
+    for method in ("sweeping", "sweeping_sq8"):
+        eng = make_storage_engine(quant_store, graph=small_graph,
+                                  capacity_frac=1.0)
+        ex = make_executor(method, quant_store, graph=small_graph,
+                           storage=eng)
+        runs[method] = ex.search(queries, bm, p)
+    s_f32, s_sq8 = runs["sweeping"].storage, runs["sweeping_sq8"].storage
+    assert "qheap" not in s_f32.logical
+    assert s_sq8.logical["qheap"] > 0
+    # traversal logical moves to the shadow segment; what remains on
+    # "heap" is the rerank (full-width, reorder_rows pages)
+    rr = int(np.asarray(runs["sweeping_sq8"].stats.reorder_rows).sum())
+    assert s_sq8.logical["heap"] == rr * heap_pages_per_vector(store.dim)
+    # the dense shadow segment is 4x smaller -> cold physical reads of
+    # the traversal can never exceed the f32 run's
+    assert s_sq8.misses["qheap"] < s_f32.misses["heap"]
+    # tracing is write-only bookkeeping: same ids as the un-pooled run
+    ex0 = make_executor("sweeping_sq8", quant_store, graph=small_graph)
+    r0 = ex0.search(queries, bm, p)
+    np.testing.assert_array_equal(np.asarray(r0.ids),
+                                  np.asarray(runs["sweeping_sq8"].ids))
+
+
+def test_trace_first_touch_superstep_order(small_dataset, small_graph):
+    """The graph trace stamps first touches with the hop counter: the
+    entry row is stamped 0, every stamp is bounded by the query's hop
+    count, and the resulting replay order differs from id-ascending
+    (the pre-PR approximation) for real traversals."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=9)
+    p = SearchParams(k=10, ef_search=48, beam_width=128,
+                     strategy="sweeping", max_hops=500)
+    _, _, stats, trace = search_batch(small_graph, store, queries, bm, p,
+                                      collect_trace=True)
+    hs = np.asarray(trace["heap_steps"])
+    entry = int(small_graph.entry_point)
+    assert (hs[:, entry] == 0).all()
+    hops = np.asarray(stats.hops)
+    touched = hs < TRACE_UNTOUCHED
+    assert touched.any(axis=1).all()
+    for i in range(hs.shape[0]):
+        assert hs[i][touched[i]].max() <= hops[i]
+    # the stamps carry real order information: for at least one query the
+    # step-sorted replay differs from plain id-ascending order
+    nontrivial = any(
+        not np.all(np.diff(np.argsort(hs[i][touched[i]],
+                                      kind="stable")) > 0)
+        for i in range(hs.shape[0]))
+    assert nontrivial, "replay order degenerated to id-ascending"
+
+
+def test_account_graph_replay_order_is_superstep_faithful():
+    """Order-faithful LRU regression (ROADMAP follow-up): with a
+    capacity-1 pool, the page of the LAST-touched row must be resident
+    after replay — id-ascending replay (the old semantics) would keep
+    the highest row id instead."""
+    heap = HeapLayout(n=100, dim=2048)          # 1 row per page
+    gl = GraphAdjacencyLayout(n=100, degree=8)
+    eng = StorageEngine(heap, graph=gl, capacity_pages=1)
+    steps = np.full((1, 100), TRACE_UNTOUCHED, np.int32)
+    steps[0, 50] = 0                            # touched first...
+    steps[0, 3] = 1                             # ...then row 3
+    isteps = np.full((1, 100), TRACE_UNTOUCHED, np.int32)
+    eng.account_graph(steps, isteps)
+    base = eng.segment_ranges()["heap"][0]
+    assert (base + 3) in eng.pool               # last touch stays resident
+    assert (base + 50) not in eng.pool
+    # id-ascending would have replayed 3 then 50 and kept page 50
+
+
+def test_storage_stats_unique_fraction(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=10)
+    eng = make_storage_engine(store, graph=small_graph, capacity_frac=1.0)
+    ex = make_executor("sweeping", store, graph=small_graph, storage=eng)
+    res = ex.search(queries, bm,
+                    SearchParams(k=10, ef_search=96, beam_width=512,
+                                 max_hops=2048))
+    s = res.storage
+    for seg in s.logical:
+        assert 0 < s.unique[seg] <= s.logical[seg]
+    assert 0.0 < s.unique_fraction() <= 1.0
+    assert s.unique_fraction(["heap"]) == s.unique["heap"] / s.logical["heap"]
+
+
+# ---------------- quant-aware cost model ----------------
+
+def test_predict_counters_sq8_rerank_surcharge():
+    shape = IndexShape(n=20_000, dim=768, graph_m=16)
+    p = SearchParams(k=10, ef_search=64, strategy="sweeping")
+    psq = dataclasses.replace(p, graph_quant="sq8")
+    c0 = predict_counters("sweeping", shape, p, 0.1)
+    c1 = predict_counters("sweeping", shape, psq, 0.1)
+    ef = float(max(p.ef_search, 2 * p.k))
+    assert c1["reorder_rows"] == ef and c0["reorder_rows"] == 0.0
+    assert c1["distance_comps"] == pytest.approx(c0["distance_comps"] + ef)
+    ppv = heap_pages_per_vector(shape.dim)
+    qppv = quant_heap_pages_per_vector(shape.dim)
+    assert c1["page_accesses_heap"] == pytest.approx(
+        c0["page_accesses_heap"] / ppv * qppv + ef * ppv)
+    # at transformer widths the int8 materialization saving beats the
+    # rerank surcharge even cold-blind
+    assert predict_cycles("sweeping", shape, psq, 0.1) < \
+        predict_cycles("sweeping", shape, p, 0.1)
+
+
+def test_cache_miss_penalty_sq8_uses_shadow_segment():
+    shape = IndexShape(n=20_000, dim=768, graph_m=16)
+    p = SearchParams(k=10, ef_search=64, strategy="sweeping")
+    psq = dataclasses.replace(p, graph_quant="sq8")
+    c1 = predict_counters("sweeping", shape, psq, 0.1)
+    cold = BufferPoolState(capacity=0, used=0, residency={})
+    warm_shadow = BufferPoolState(
+        capacity=0, used=0,
+        residency={"qheap": 1.0, "heap": 0.0, "graph": 0.0})
+    pen_cold = cache_miss_penalty(c1, "sweeping", cold, SYSTEM,
+                                  graph_quant="sq8", dim=shape.dim)
+    pen_warm = cache_miss_penalty(c1, "sweeping", warm_shadow, SYSTEM,
+                                  graph_quant="sq8", dim=shape.dim)
+    assert pen_warm < pen_cold
+    # with the shadow fully warm, only the rerank's full-width pages and
+    # the index pages still pay misses
+    extra = SYSTEM.page_access * (SYSTEM.page_miss_extra - 1.0)
+    expect = (c1["reorder_rows"] * heap_pages_per_vector(shape.dim)
+              + c1["page_accesses_index"]) * extra
+    assert pen_warm == pytest.approx(expect)
+
+
+def test_engine_scale_measured_amortization():
+    p = SearchParams(k=10, strategy="sweeping")
+    assert engine_scale("sweeping", p, 1) is None
+    s0 = engine_scale("sweeping", p, 32)
+    assert s0["vector_retrieval"] == FRONTIER_PAGE_AMORT
+    s1 = engine_scale("sweeping", p, 32,
+                      measured_unique_frac=FRONTIER_CALIB_UNIQUE / 2)
+    assert s1["vector_retrieval"] == pytest.approx(FRONTIER_PAGE_AMORT / 2)
+    assert s1["index_page_access"] == s1["vector_retrieval"]
+    # clamped: a pathological measurement can't zero the costs
+    s2 = engine_scale("sweeping", p, 32, measured_unique_frac=1e-6)
+    assert s2["vector_retrieval"] == 0.05
+
+
+# ---------------- planner integration ----------------
+
+def test_planner_has_sq8_candidate(small_dataset, small_graph, scann_index):
+    store, queries = small_dataset
+    planner = make_executor("adaptive", store, graph=small_graph,
+                            index=scann_index, graph_m=small_graph.m)
+    assert "sweeping_sq8" in planner.candidates
+    ex = planner.candidates["sweeping_sq8"]
+    assert ex.strategy == "sweeping" and ex.graph_quant == "sq8"
+    assert ex.store.has_sq8
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=12)
+    plan = planner.plan(queries, bm, PARAMS)
+    assert "sweeping_sq8" in plan.predicted_cycles
+    # the twins are priced differently (rerank surcharge vs int8 saving)
+    assert plan.predicted_cycles["sweeping_sq8"] != \
+        plan.predicted_cycles["sweeping"]
+
+
+def test_registry_sq8_methods(small_dataset, small_graph):
+    store, _ = small_dataset
+    ex = make_executor("sweeping_sq8", store, graph=small_graph)
+    assert ex.name == "sweeping_sq8" and ex.store.has_sq8
+    with pytest.raises(ValueError, match="needs graph"):
+        make_executor("acorn_sq8", store)
+
+
+def test_planner_measured_amortization_feedback(small_dataset, small_graph,
+                                                scann_index):
+    """After a pooled graph dispatch, the planner reprices graph
+    candidates with the batch's MEASURED page-sharing fraction instead of
+    the FRONTIER_PAGE_AMORT constant (ROADMAP follow-up)."""
+    store, queries = small_dataset
+    eng = make_storage_engine(store, index=scann_index, graph=small_graph,
+                              capacity_frac=1.0)
+    planner = make_executor("adaptive", store, graph=small_graph,
+                            index=scann_index, graph_m=small_graph.m,
+                            storage=eng)
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=13)
+    p = SearchParams(k=10, ef_search=96, beam_width=512, max_hops=2048)
+    assert planner._measured_unique is None
+    before = planner.plan(queries, bm, p).predicted_cycles
+    # force a graph dispatch through the planner's execute path
+    inner = planner.candidates["sweeping"].plan(queries, bm, p)
+    planner.execute(SearchPlan("sweeping", inner.params, queries, bm))
+    assert planner._measured_unique is not None
+    assert 0.0 < planner._measured_unique <= 1.0
+    after = planner.plan(queries, bm, p).predicted_cycles
+    assert after["sweeping"] != before["sweeping"]

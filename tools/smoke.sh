@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # CI smoke: tier-1 test suite + the perf/planner/storage microbenchmarks.
 # Each benchmark emits one JSON record (BENCH_leaf_scan.json /
-# BENCH_frontier.json / BENCH_planner.json / BENCH_storage.json) so the
-# perf trajectory gets populated run-over-run;
+# BENCH_frontier.json / BENCH_planner.json / BENCH_storage.json /
+# BENCH_graph_quant.json) so the perf trajectory gets populated
+# run-over-run;
 # benchmarks run even when tier-1 fails, but the tier-1 status is
 # propagated.  SMOKE_SKIP_TESTS=1 skips the pytest phase (tools/ci.sh runs
 # the full suite itself first).
@@ -26,5 +27,6 @@ python benchmarks/bench_leaf_scan.py || exit 1
 python benchmarks/bench_frontier.py --tiny || exit 1
 python benchmarks/fig_planner.py --tiny || exit 1
 python benchmarks/bench_storage.py --tiny || exit 1
+python benchmarks/bench_graph_quant.py --tiny || exit 1
 
 exit "$tier1"
