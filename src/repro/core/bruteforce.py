@@ -32,3 +32,34 @@ def filtered_knn(store: VectorStore, queries: jax.Array, bitmaps: jax.Array,
     dists, idx = topk_smallest(d, k)
     idx = jnp.where(jnp.isinf(dists), -1, idx)
     return dists, idx
+
+
+@partial(jax.jit, static_argnames=("k", "max_rows"))
+def filtered_knn_partial(store: VectorStore, queries: jax.Array,
+                         bitmaps: jax.Array, k: int, max_rows: int):
+    """Budgeted partial seqscan (DESIGN.md §10): exact top-k over the
+    first `max_rows` PASSING rows in row order — the scan a page budget
+    can afford, stopping once the budget's worth of heap fetches is
+    spent.  The degradation ladder's last rung: always returns something,
+    flagged partial when the scan stopped early.
+
+    Returns (dists, ids, n_scored, probes, truncated), all per-query:
+    n_scored = passing rows actually fetched+scored (≤ max_rows),
+    probes = rows filter-probed before the scan stopped (= n when the
+    whole bitmap fit the budget), truncated = the cap cut the scan short.
+    """
+    d = full_distances(store, queries)
+    ids = jnp.arange(store.n)
+    passing = jax.vmap(lambda bm: probe_bitmap(bm, ids))(bitmaps)
+    cum = jnp.cumsum(passing.astype(jnp.int32), axis=1)
+    scored = passing & (cum <= max_rows)
+    d = jnp.where(scored, d, jnp.inf)
+    dists, idx = topk_smallest(d, k)
+    idx = jnp.where(jnp.isinf(dists), -1, idx)
+    n_scored = scored.sum(1).astype(jnp.int32)
+    truncated = cum[:, -1] > max_rows
+    probes = jnp.where(truncated,
+                       jnp.argmax(cum > max_rows, axis=1).astype(jnp.int32)
+                       + 1,
+                       jnp.int32(store.n))
+    return dists, idx, n_scored, probes, truncated

@@ -37,7 +37,7 @@ from typing import Mapping, Optional
 
 import numpy as np
 
-from repro.core.types import (SearchParams, SearchStats,
+from repro.core.types import (AnytimeInfo, SearchParams, SearchStats,
                               heap_pages_per_vector,
                               quant_heap_pages_per_vector)
 
@@ -460,3 +460,114 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
     return base + cache_miss_penalty(counters, strategy, pool_state,
                                      constants, graph_quant=gq,
                                      dim=shape.dim)
+
+
+# ---------------------------------------------------------------------------
+# Anytime budgets (DESIGN.md §10).
+#
+# The deadline budget needs a cycle estimate INSIDE the jitted traversal
+# loops, so it is priced with a pure linear form of the Table 6 counters —
+# exactly `component_cycles` at scale=None / graph_quant="none", whose
+# terms are all counter-proportional.  The post-hoc flag derivation
+# (`evaluate_anytime`) applies the SAME weights to the final counters, so
+# "the loop's deadline predicate fired" and "linear_cycles >= deadline"
+# agree bit-for-bit for full-precision traversal.  Under sq8-with-rerank
+# the post-loop exact rerank adds counters after the budget check, so the
+# budget covers TOTAL per-query work and the flags are conservative
+# (never a missed truncation; see DESIGN.md §10).
+# ---------------------------------------------------------------------------
+
+def budget_cycle_weights(dim: int, constants: CostConstants = SYSTEM
+                         ) -> dict[str, float]:
+    """Per-counter cycle weights of the linear cost form: cycles =
+    Σ counter · weight.  Matches component_cycles(scale=None,
+    graph_quant="none") exactly.  Plain python floats — safe to close
+    over inside a jitted loop predicate."""
+    return {
+        "distance_comps": dim * constants.distance_per_dim
+        + dim * 4 * constants.tuple_materialize,
+        "filter_checks": constants.filter_check,
+        "hops": 0.0,
+        "page_accesses_index": constants.page_access,
+        "page_accesses_heap": constants.page_access,
+        "tmap_lookups": constants.tmap_lookup,
+        "reorder_rows": constants.reorder_sort_per_row,
+    }
+
+
+def linear_cycles(stats: SearchStats, dim: int,
+                  constants: CostConstants = SYSTEM) -> np.ndarray:
+    """Per-query modeled cycles under the linear budget form — the
+    post-hoc mirror of the in-loop deadline predicate (same float32
+    arithmetic in the same term order, so flag derivation and the loop's
+    stop decision agree at the boundary)."""
+    w = budget_cycle_weights(dim, constants)
+    d = stats.as_dict()
+    out = None
+    for name, weight in w.items():
+        term = np.asarray(d[name], np.float32) * np.float32(weight)
+        out = term if out is None else out + term
+    return np.atleast_1d(out)
+
+
+def evaluate_anytime(stats: Optional[SearchStats], params: SearchParams,
+                     dim: int, ids, constants: CostConstants = SYSTEM,
+                     hop_cap: Optional[int] = None,
+                     extra_truncated: Optional[np.ndarray] = None,
+                     extra_budget: Optional[np.ndarray] = None
+                     ) -> AnytimeInfo:
+    """Derive per-query AnytimeInfo flags from final counters (host-side).
+
+    The graph loops check their stop predicates BEFORE each step, so at
+    exit `hops == max_hops` iff the safety cap fired and
+    `pages >= page_budget` iff the page predicate fired — the derivation
+    is exact for graph_quant="none" (and conservative under
+    sq8-with-rerank, whose post-loop rerank counters also count).
+
+    hop_cap: the engine's safety cap (params.max_hops for graph
+    executors); None for executors whose `hops` counter is not a
+    traversal length (ScaNN counts leaves, bruteforce passing rows).
+    extra_truncated / extra_budget: executor-supplied per-query masks for
+    truncation the counters cannot show (e.g. a plan-level leaf clamp or
+    a bruteforce partial-scan row cap).
+    """
+    ids = np.asarray(ids)
+    completion = np.mean(ids >= 0, axis=-1, dtype=np.float32)
+    completion = np.atleast_1d(completion)
+    q = completion.shape[0]
+    budget = np.zeros(q, bool)
+    truncated = np.zeros(q, bool)
+    if stats is not None:
+        hops = np.atleast_1d(np.asarray(stats.hops, np.int64))
+        pages = np.atleast_1d(
+            np.asarray(stats.page_accesses_index, np.int64)
+            + np.asarray(stats.page_accesses_heap, np.int64))
+        if params.page_budget > 0:
+            budget |= pages >= params.page_budget
+        if params.hop_budget > 0:
+            budget |= hops >= params.hop_budget
+        if params.deadline_cycles > 0:
+            budget |= linear_cycles(stats, dim, constants) \
+                >= params.deadline_cycles
+        if hop_cap is not None:
+            truncated |= hops >= hop_cap
+    if extra_budget is not None:
+        budget |= np.atleast_1d(np.asarray(extra_budget, bool))
+    truncated |= budget
+    if extra_truncated is not None:
+        truncated |= np.atleast_1d(np.asarray(extra_truncated, bool))
+    return AnytimeInfo(truncated=truncated, budget_exhausted=budget,
+                       completion=completion)
+
+
+def fault_penalty(storage_stats, batch_q: int,
+                  constants: CostConstants = SYSTEM) -> float:
+    """Per-query extra cycles from injected storage faults (a
+    storage.StorageStats with fault counters) — recovery cost in the
+    paper's own currency, matching `measured_miss_penalty`: every retry
+    re-pays a miss-grade read and every latency spike pays the same
+    page_miss_extra-style surcharge on top of the access it slowed."""
+    extra = constants.page_access * (constants.page_miss_extra - 1.0)
+    events = getattr(storage_stats, "retries", 0) \
+        + getattr(storage_stats, "spikes", 0)
+    return events * extra / max(batch_q, 1)

@@ -34,11 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costmodel
-from repro.core.bruteforce import filtered_knn
+from repro.core.bruteforce import filtered_knn, filtered_knn_partial
 from repro.core.graph_search import search_batch
 from repro.core.hnsw import HNSWGraph
 from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
-                              project_query, scann_search_batch,
+                              leaves_within_budget, project_query,
+                              scann_search_batch,
                               scann_search_batch_vmapped)
 from repro.core.types import (SearchParams, SearchResult, SearchStats,
                               VectorStore, heap_pages_per_vector,
@@ -60,6 +61,10 @@ class SearchPlan:
     est_selectivity: Optional[np.ndarray] = None    # (Q,) popcount/n
     correlation_proxy: Optional[float] = None       # local/global density
     predicted_cycles: Optional[Mapping[str, float]] = None
+    # Plan-level adjustments (DESIGN.md §10), e.g. a budget-driven ScaNN
+    # leaf clamp or a bruteforce partial-scan row cap — surfaced so the
+    # executor can flag the affected queries budget_exhausted.
+    notes: Any = None
 
 
 @runtime_checkable
@@ -144,7 +149,10 @@ class GraphExecutor(BaseExecutor):
                                          plan.params,
                                          use_pallas=self.use_pallas)
             return SearchResult(dists=d, ids=ids, stats=stats,
-                                strategy=self.strategy, plan=plan)
+                                strategy=self.strategy, plan=plan,
+                                anytime=costmodel.evaluate_anytime(
+                                    stats, plan.params, self.store.dim, ids,
+                                    hop_cap=plan.params.max_hops))
         if plan.params.graph_exec_mode != "frontier":
             raise ValueError("storage accounting needs the frontier "
                              "engine (graph_exec_mode='frontier')")
@@ -159,7 +167,10 @@ class GraphExecutor(BaseExecutor):
             quant=self.graph_quant == "sq8")
         return SearchResult(dists=d, ids=ids, stats=stats,
                             strategy=self.strategy, plan=plan,
-                            storage=sstats)
+                            storage=sstats,
+                            anytime=costmodel.evaluate_anytime(
+                                stats, plan.params, self.store.dim, ids,
+                                hop_cap=plan.params.max_hops))
 
 
 class ScannExecutor(BaseExecutor):
@@ -191,7 +202,27 @@ class ScannExecutor(BaseExecutor):
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
         if params.strategy != "scann":
             params = dataclasses.replace(params, strategy="scann")
-        return SearchPlan("scann", params, queries, bitmaps)
+        # Anytime budgets (DESIGN.md §10): ScaNN's leaf count is a static
+        # shape, so budget enforcement is plan-time — clamp
+        # num_leaves_to_search to what the budgets afford and flag the
+        # batch via plan.notes.  Zero budgets short-circuit to (nl, False)
+        # and the params object is untouched (bit-identicality).
+        nl, clamped = leaves_within_budget(self.index, self.store, params)
+        notes = None
+        if clamped:
+            params = dataclasses.replace(params, num_leaves_to_search=nl)
+            notes = {"leaf_clamp": nl}
+        return SearchPlan("scann", params, queries, bitmaps, notes=notes)
+
+    def _anytime(self, plan: SearchPlan, ids):
+        # flags come from the plan-time clamp, not the counters: the
+        # clamped plan fits the budget by construction, so counter-derived
+        # predicates would never fire (stats=None skips them)
+        q = np.asarray(ids).shape[0]
+        clamped = plan.notes is not None and "leaf_clamp" in plan.notes
+        return costmodel.evaluate_anytime(
+            None, plan.params, self.store.dim, ids,
+            extra_budget=np.full((q,), clamped, bool))
 
     def execute(self, plan: SearchPlan) -> SearchResult:
         if self.storage is not None:
@@ -204,20 +235,34 @@ class ScannExecutor(BaseExecutor):
                 accounting=plan.params.scann_page_accounting,
                 query_block=plan.params.scann_query_block)
             return SearchResult(dists=d, ids=ids, stats=stats,
-                                strategy="scann", plan=plan, storage=sstats)
+                                strategy="scann", plan=plan, storage=sstats,
+                                anytime=self._anytime(plan, ids))
         fn = scann_search_batch if self.pipeline == "batched" \
             else scann_search_batch_vmapped
         d, ids, stats = fn(self.index, self.store, plan.queries,
                            plan.bitmaps, plan.params,
                            use_pallas=self.use_pallas)
         return SearchResult(dists=d, ids=ids, stats=stats, strategy="scann",
-                            plan=plan)
+                            plan=plan, anytime=self._anytime(plan, ids))
 
 
 @jax.jit
 def _bitmap_popcount(bitmaps):
     """Per-query popcount over packed bitmap words. (Q, W) -> (Q,) int32."""
     return jax.lax.population_count(bitmaps).sum(axis=-1).astype(jnp.int32)
+
+
+def _mask_bitmap_prefix(bm: np.ndarray, probes: np.ndarray) -> np.ndarray:
+    """Zero every bitmap bit at row id >= probes[q] — the part of the
+    seqscan a partial (budgeted) scan never reached, so the storage
+    replay only charges pages the scan actually touched."""
+    words = bm.shape[1]
+    keep = np.clip(probes[:, None].astype(np.int64)
+                   - np.arange(words, dtype=np.int64)[None, :] * 32, 0, 32)
+    mask = np.where(keep >= 32, np.uint32(0xFFFFFFFF),
+                    ((np.uint64(1) << keep.astype(np.uint64)) - 1)
+                    .astype(np.uint32))
+    return (bm & mask).astype(np.uint32)
 
 
 def index_shape(store: VectorStore, index: Optional[ScannIndex] = None,
@@ -259,27 +304,71 @@ class BruteForceExecutor(BaseExecutor):
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
         if params.strategy != "bruteforce":
             params = dataclasses.replace(params, strategy="bruteforce")
-        return SearchPlan("bruteforce", params, queries, bitmaps)
+        # Anytime budgets (DESIGN.md §10): a page or deadline budget caps
+        # how many passing rows the scan can afford to fetch+score — a
+        # static row cap resolved at plan time (hop_budget has no meaning
+        # for a seqscan and is ignored).  At least k rows always scan so
+        # the last ladder rung returns a usable, flagged top-k.
+        max_rows = self._budget_rows(params)
+        notes = {"max_rows": max_rows} if max_rows is not None else None
+        return SearchPlan("bruteforce", params, queries, bitmaps,
+                          notes=notes)
+
+    def _budget_rows(self, params: SearchParams) -> Optional[int]:
+        if params.page_budget <= 0 and params.deadline_cycles <= 0:
+            return None
+        n = self.store.n
+        ppv = heap_pages_per_vector(self.store.dim)
+        rows = n
+        if params.page_budget > 0:
+            rows = min(rows, params.page_budget // ppv)
+        if params.deadline_cycles > 0:
+            w = costmodel.budget_cycle_weights(self.store.dim)
+            per_row = w["distance_comps"] + ppv * w["page_accesses_heap"]
+            fixed = n * w["filter_checks"]
+            rows = min(rows, int(max(params.deadline_cycles - fixed, 0.0)
+                                 // max(per_row, 1e-9)))
+        rows = max(min(rows, n), params.k)
+        return None if rows >= n else rows
 
     def execute(self, plan: SearchPlan) -> SearchResult:
-        d, ids = filtered_knn(self.store, plan.queries, plan.bitmaps,
-                              plan.params.k)
         q = plan.queries.shape[0]
         n = self.store.n
         ppv = heap_pages_per_vector(self.store.dim)
-        npass = _bitmap_popcount(plan.bitmaps)              # (Q,)
         z = jnp.zeros((q,), jnp.int32)
-        stats = SearchStats(
-            distance_comps=npass, filter_checks=z + n, hops=z,
-            page_accesses_index=z, page_accesses_heap=npass * ppv,
-            tmap_lookups=z, reorder_rows=z)
+        max_rows = (plan.notes or {}).get("max_rows")
+        if max_rows is None:
+            d, ids = filtered_knn(self.store, plan.queries, plan.bitmaps,
+                                  plan.params.k)
+            npass = _bitmap_popcount(plan.bitmaps)          # (Q,)
+            stats = SearchStats(
+                distance_comps=npass, filter_checks=z + n, hops=z,
+                page_accesses_index=z, page_accesses_heap=npass * ppv,
+                tmap_lookups=z, reorder_rows=z)
+            truncated = np.zeros((q,), bool)
+            scan_bitmaps = np.asarray(plan.bitmaps)
+        else:
+            d, ids, n_scored, probes, trunc = filtered_knn_partial(
+                self.store, plan.queries, plan.bitmaps, plan.params.k,
+                max_rows)
+            stats = SearchStats(
+                distance_comps=n_scored, filter_checks=probes, hops=z,
+                page_accesses_index=z, page_accesses_heap=n_scored * ppv,
+                tmap_lookups=z, reorder_rows=z)
+            truncated = np.asarray(trunc)
+            # the storage replay must see only the scanned prefix
+            scan_bitmaps = _mask_bitmap_prefix(np.asarray(plan.bitmaps),
+                                               np.asarray(probes))
         sstats = None
         if self.storage is not None:
             # the bitmap IS the seqscan trace: passing rows in row-id order
-            sstats = self.storage.account_seqscan(np.asarray(plan.bitmaps))
+            sstats = self.storage.account_seqscan(scan_bitmaps)
         return SearchResult(dists=d, ids=ids, stats=stats,
                             strategy="bruteforce", plan=plan,
-                            storage=sstats)
+                            storage=sstats,
+                            anytime=costmodel.evaluate_anytime(
+                                None, plan.params, self.store.dim, ids,
+                                extra_budget=truncated))
 
 
 # ---------------------------------------------------------------------------
@@ -429,7 +518,7 @@ class AdaptivePlanner(BaseExecutor):
         return SearchPlan(strategy=chosen, params=inner.params,
                           queries=queries, bitmaps=bitmaps,
                           est_selectivity=sel, correlation_proxy=gamma,
-                          predicted_cycles=preds)
+                          predicted_cycles=preds, notes=inner.notes)
 
     def execute(self, plan: SearchPlan) -> SearchResult:
         chosen = self.candidates[plan.strategy]

@@ -31,6 +31,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.costmodel import budget_cycle_weights
 from repro.core.hnsw import HNSWGraph
 from repro.core.types import (SearchParams, SearchStats, VectorStore,
                               bitset_mark, bitset_words, distance,
@@ -41,6 +42,39 @@ from repro.kernels import ops as kops
 INF = jnp.inf
 
 GRAPH_QUANT_MODES = ("none", "sq8")
+
+
+def _budget_over(st: SearchStats, params: SearchParams, dim: int):
+    """Anytime budget-stop predicate over the carried counters
+    (DESIGN.md §10).  Returns None when no budget is set — the predicate
+    is then never traced, so zero-budget programs are jaxpr-identical to
+    the pre-budget engines (bit-identicality by construction).  Works on
+    scalar (legacy per-query) and (Q,)-leaved (frontier) stats alike.
+
+    The deadline term prices the counters with the linear
+    `costmodel.budget_cycle_weights` form in float32, term order fixed —
+    `costmodel.linear_cycles` applies the identical arithmetic post-hoc,
+    so the derived budget_exhausted flag agrees with the in-loop stop.
+    """
+    terms = []
+    if params.page_budget > 0:
+        pages = st.page_accesses_index + st.page_accesses_heap
+        terms.append(pages >= params.page_budget)
+    if params.hop_budget > 0:
+        terms.append(st.hops >= params.hop_budget)
+    if params.deadline_cycles > 0:
+        w = budget_cycle_weights(dim)
+        cyc = None
+        for name, weight in w.items():
+            t = getattr(st, name).astype(jnp.float32) * jnp.float32(weight)
+            cyc = t if cyc is None else cyc + t
+        terms.append(cyc >= jnp.float32(params.deadline_cycles))
+    if not terms:
+        return None
+    out = terms[0]
+    for t in terms[1:]:
+        out = out | t
+    return out
 
 
 def _ppv(store: VectorStore, quant: str) -> int:
@@ -252,6 +286,9 @@ def _base_search(graph: HNSWGraph, store: VectorStore, q, bitmap,
             else w_d[-1]
         stop = (best_d > w_worst) | jnp.isinf(best_d) | \
             (st.hops >= params.max_hops)
+        over = _budget_over(st, params, store.dim)
+        if over is not None:
+            stop = stop | over
         # pop
         pool_d = pool_d.at[j].set(INF)
         pool_id = pool_id.at[j].set(-1)
@@ -465,7 +502,7 @@ def _search_single(graph: HNSWGraph, store: VectorStore, q, bitmap,
     w_d, w_id, _, _, stats = _base_search(
         graph, store, q, bitmap, params, entry, entry_d, stats,
         ef_result=params.ef_search)
-    if quant == "sq8":
+    if quant == "sq8" and params.sq8_rerank:
         w_d, stats = _rerank_beam(store, q, w_id, stats)
     check = params.strategy in ("unfiltered",)
     dk, ids = _finalize(w_d, w_id, bitmap, params.k,
@@ -505,8 +542,11 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
         j = jnp.argmin(pool_d)
         best_d, best_id = pool_d[j], pool_id[j]
         w_worst = w_d[jnp.minimum(eff, EFMAX) - 1]
+        over = _budget_over(st, params, store.dim)
         batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
             (st.hops >= params.max_hops)
+        if over is not None:
+            batch_done = batch_done | over
 
         # ---- resume/emit path: filter the batch, maybe extend the scan
         n_pass = (probe_bitmap(bitmap, w_id) &
@@ -518,6 +558,8 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
         enough = n_pass >= params.k
         exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
             (rnd + 1 >= params.max_rounds)
+        if over is not None:
+            exhausted = exhausted | over
         finish = batch_done & (enough | exhausted)
         eff2 = jnp.where(batch_done & ~finish, eff + params.batch_tuples, eff)
         rnd2 = jnp.where(batch_done & ~finish, rnd + 1, rnd)
@@ -558,7 +600,7 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
              jnp.array(False))
     pool_d, pool_id, w_d, w_id, visited, stats, eff, rnd, checked, _ = \
         jax.lax.while_loop(cond, body, state)
-    if quant == "sq8":
+    if quant == "sq8" and params.sq8_rerank:
         r = min(params.k * params.reorder_factor, EFMAX)
         dk, out_ids, n_r, _ = _iter_emit_sq8(store, q, w_d, w_id, bitmap,
                                              eff, params.k, r)
@@ -931,6 +973,9 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         w_worst = w_d[:, we_idx]
         stop = (best_d > w_worst) | jnp.isinf(best_d) | \
             (st.hops >= params.max_hops)
+        over = _budget_over(st, params, store.dim)
+        if over is not None:
+            stop = stop | over
         active = ~done & ~stop
         node = jnp.maximum(best_id, 0)
         step = st.hops + 1          # this superstep's post-increment stamp
@@ -1121,8 +1166,11 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         best_d, best_id = pool_d[:, 0], pool_id[:, 0]
         w_worst = jnp.take_along_axis(
             w_d, (jnp.minimum(eff, efmax) - 1)[:, None], axis=1)[:, 0]
+        over = _budget_over(st, params, store.dim)
         batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
             (st.hops >= params.max_hops)
+        if over is not None:
+            batch_done = batch_done | over
         live = ~done
         active = live & ~batch_done          # lanes that expand this step
 
@@ -1137,6 +1185,8 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
         enough = n_pass >= params.k
         exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
             (rnd + 1 >= params.max_rounds)
+        if over is not None:
+            exhausted = exhausted | over
         finish = batch_done & (enough | exhausted)
         extend = live & batch_done & ~finish
         eff2 = jnp.where(extend, eff + params.batch_tuples, eff)
@@ -1179,7 +1229,7 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
      _) = jax.lax.while_loop(cond, body, state)
     trace_out = (hs, is_) if tracing else None
 
-    if quant == "sq8":
+    if quant == "sq8" and params.sq8_rerank:
         r = min(params.k * params.reorder_factor, efmax)
         dk, out_ids, n_r, cand = jax.vmap(
             lambda q, wd, wi, bm, e: _iter_emit_sq8(store, q, wd, wi, bm, e,
@@ -1227,7 +1277,7 @@ def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
             graph, store, queries, bitmaps, params, entry, entry_d, stats,
             ef_result=params.ef_search, use_pallas=use_pallas,
             trace=zoom_trace)
-        if quant == "sq8":
+        if quant == "sq8" and params.sq8_rerank:
             # exact full-precision rescore of the final beam — vmap of the
             # same per-query helper the legacy engine calls, so the two
             # engines stay bit-identical under sq8 too
@@ -1247,6 +1297,6 @@ def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
     # reads.  The sq8 rerank's full-width fetches are traced separately
     # (they hit the full-precision heap segment, not the shadow).
     trace = {"heap_steps": trace0[0], "index_steps": trace0[1]}
-    if quant == "sq8":
+    if quant == "sq8" and rerank_rows is not None:
         trace["rerank_rows"] = rerank_rows
     return dk, ids, stats, trace

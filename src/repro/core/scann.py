@@ -188,6 +188,47 @@ def _quant_pages_per_leaf(index: ScannIndex) -> int:
 _heap_pages_per_vector = heap_pages_per_vector  # shared formula (types.py)
 
 
+def leaves_within_budget(index: ScannIndex, store: VectorStore,
+                         params: SearchParams) -> tuple[int, bool]:
+    """Plan-time anytime clamp (DESIGN.md §10): the largest
+    `num_leaves_to_search` whose worst-case per-query cost fits the
+    budgets in `params` — ScaNN's leaf count is a static shape, so its
+    budget enforcement happens at planning, not inside the kernels.
+
+    Returns (nl, clamped).  Never returns less than one leaf: the last
+    leaf always scans and the caller flags the query budget_exhausted
+    instead (ScannExecutor threads `clamped` into AnytimeInfo).
+    """
+    from repro.core.costmodel import budget_cycle_weights
+    L, C, _ = index.leaf_tiles.shape
+    nl0 = min(params.num_leaves_to_search, L)
+    if params.page_budget <= 0 and params.hop_budget <= 0 \
+            and params.deadline_cycles <= 0:
+        return nl0, False
+    qppl = _quant_pages_per_leaf(index)
+    ppv = _heap_pages_per_vector(store.dim)
+    cent = L + (index.branch_centroids.shape[0] if index.levels >= 2 else 0)
+    w = budget_cycle_weights(store.dim)
+    for nl in range(nl0, 0, -1):
+        r = min(params.k * params.reorder_factor, nl * C)
+        ok = True
+        if params.hop_budget > 0:
+            ok = nl <= params.hop_budget
+        if ok and params.page_budget > 0:
+            ok = nl * qppl + r * ppv <= params.page_budget
+        if ok and params.deadline_cycles > 0:
+            rows = nl * C
+            cyc = (rows + cent + r) * w["distance_comps"] \
+                + rows * w["filter_checks"] \
+                + nl * qppl * w["page_accesses_index"] \
+                + r * ppv * w["page_accesses_heap"] \
+                + r * w["reorder_rows"]
+            ok = cyc <= params.deadline_cycles
+        if ok:
+            return nl, nl < nl0
+    return 1, nl0 > 1
+
+
 def _search_single(index: ScannIndex, store: VectorStore, q, bitmap,
                    params: SearchParams, use_pallas: bool):
     qp = project_query(index, q)

@@ -277,6 +277,45 @@ class SearchParams:
     # Iterative-scan knobs (pgvector max_scan_tuples analogue):
     batch_tuples: int = 128
     max_rounds: int = 16
+    # Anytime budgets (DESIGN.md §10).  0 / 0.0 disables a budget and the
+    # jitted programs are identical to the unbudgeted ones (the predicate
+    # is only traced when a budget is set, so zero-budget runs stay
+    # bit-identical to pre-budget behavior).  A query that stops on a
+    # budget keeps its best-so-far beam; the executor surfaces per-query
+    # truncation flags in SearchResult.anytime (costmodel.evaluate_anytime).
+    page_budget: int = 0           # stop once index+heap page accesses >= budget
+    hop_budget: int = 0            # stop once hops >= budget (< max_hops cap)
+    deadline_cycles: float = 0.0   # stop once modeled cycles >= deadline
+    # Exact full-precision rerank of the SQ8 beam (DESIGN.md §9).  False is
+    # the "sq8-no-rerank" degradation rung: quantized distances are
+    # returned as-is, saving the full-width heap fetch per result row.
+    sq8_rerank: bool = True
+
+
+@dataclasses.dataclass
+class AnytimeInfo:
+    """Per-query anytime-execution flags (DESIGN.md §10), derived
+    host-side from the final SearchStats counters (`costmodel.
+    evaluate_anytime`) — never carried through a jitted loop.
+
+    truncated: the query stopped before its stop condition converged
+    (budget hit OR the max_hops/max_rounds safety cap fired); its
+    ids/dists are still the best-so-far beam.
+    budget_exhausted: a user-set budget (page/hop/deadline or a
+    plan-level clamp) specifically caused the stop.
+    completion: fraction of the k result slots holding a valid row id —
+    the uniform "how much of the answer did I get" measure across all
+    executors (1.0 = full top-k, possibly still truncated-but-converged).
+    """
+
+    truncated: np.ndarray          # (Q,) bool
+    budget_exhausted: np.ndarray   # (Q,) bool
+    completion: np.ndarray         # (Q,) f32 in [0, 1]
+
+    def as_dict(self) -> dict[str, Any]:
+        return dict(truncated=self.truncated.tolist(),
+                    budget_exhausted=self.budget_exhausted.tolist(),
+                    completion=self.completion.tolist())
 
 
 @dataclasses.dataclass
@@ -292,6 +331,8 @@ class SearchResult:
     predicted cycles — executor.py).
     storage: measured storage telemetry (storage.StorageStats) when the
     executor ran with a StorageEngine attached; None otherwise.
+    anytime: per-query AnytimeInfo flags when the executor derives them
+    (all local executors do); None on backends without counters.
     """
 
     dists: Array
@@ -300,6 +341,7 @@ class SearchResult:
     strategy: str
     plan: Any = None
     storage: Any = None
+    anytime: Any = None
 
 
 def topk_smallest(values: Array, k: int) -> tuple[Array, Array]:

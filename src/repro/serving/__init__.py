@@ -1,4 +1,8 @@
 from repro.serving.engine import ServeEngine
-from repro.serving.rag import RetrievalAugmentedServer
+from repro.serving.rag import (LadderRung, RetrievalAugmentedServer,
+                               admission_floor, bucket_deadline,
+                               default_ladder, price_ladder)
 
-__all__ = ["ServeEngine", "RetrievalAugmentedServer"]
+__all__ = ["ServeEngine", "RetrievalAugmentedServer", "LadderRung",
+           "admission_floor", "bucket_deadline", "default_ladder",
+           "price_ladder"]

@@ -26,14 +26,20 @@ hit-rate lift vs FIFO batching is directly measurable
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.executor import Executor
-from repro.core.types import SearchParams, SearchResult
+from repro.core import costmodel
+from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
+                                 Executor, GraphExecutor, ScannExecutor,
+                                 index_shape)
+from repro.core.types import (SearchParams, SearchResult,
+                              heap_pages_per_vector)
 from repro.models.api import ModelBundle
 
 BATCH_POLICIES = ("fifo", "centroid")
@@ -78,6 +84,179 @@ def nearest_centroid(index, queries):
     return jnp.argmin(d, axis=-1).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Graceful degradation (DESIGN.md §10): deadline buckets, admission
+# control, and the rung ladder serve_queue walks under budget/fault
+# pressure.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LadderRung:
+    """One rung of the graceful-degradation ladder: which executor serves
+    the rung and how the request's SearchParams degrade on it.  Rung 0 is
+    always the primary executor with untouched params; each later rung
+    trades recall/precision for a cheaper, more fault-tolerant plan."""
+
+    name: str
+    executor: Executor
+    adjust: Optional[Callable[[SearchParams], SearchParams]] = None
+
+    def resolve(self, params: SearchParams) -> SearchParams:
+        return self.adjust(params) if self.adjust is not None else params
+
+
+def _find_graph_executor(executor: Executor) -> Optional[GraphExecutor]:
+    if isinstance(executor, GraphExecutor):
+        return executor
+    if isinstance(executor, AdaptivePlanner):
+        gs = [ex for ex in executor.candidates.values()
+              if isinstance(ex, GraphExecutor)]
+        for g in gs:
+            if g.graph_quant == "sq8":
+                return g
+        return gs[0] if gs else None
+    return None
+
+
+def _find_scann_executor(executor: Executor) -> Optional[ScannExecutor]:
+    if isinstance(executor, ScannExecutor):
+        return executor
+    if isinstance(executor, AdaptivePlanner):
+        return executor._scann
+    return None
+
+
+def default_ladder(executor: Executor) -> list[LadderRung]:
+    """The standard ladder for whatever the primary executor supports:
+
+        primary  ->  sq8_norerank  ->  scann_lite  ->  partial_scan
+
+    sq8_norerank reruns the graph traversal on the SQ8 shadow tier with
+    the exact rerank off (cheapest graph answer); scann_lite halves the
+    opened leaves; partial_scan is BruteForceExecutor's budgeted prefix
+    seqscan — always available, always returns a flagged-but-usable
+    top-k.  Rungs whose components the executor lacks are skipped."""
+    rungs = [LadderRung("primary", executor)]
+    g = _find_graph_executor(executor)
+    if g is not None and (g.graph_quant == "sq8"
+                          or g.store.q_vectors is not None):
+        sq8 = g if g.graph_quant == "sq8" else GraphExecutor(
+            g.graph, g.store, strategy=g.strategy, use_pallas=g.use_pallas,
+            storage=g.storage, graph_quant="sq8")
+        rungs.append(LadderRung(
+            "sq8_norerank", sq8,
+            lambda p: dataclasses.replace(p, sq8_rerank=False)))
+    sc = _find_scann_executor(executor)
+    if sc is not None:
+        rungs.append(LadderRung(
+            "scann_lite", sc,
+            lambda p: dataclasses.replace(
+                p, num_leaves_to_search=max(
+                    1, p.num_leaves_to_search // 2))))
+    store = executor.store
+    bf = BruteForceExecutor(store,
+                            storage=getattr(executor, "storage", None))
+    ppv = heap_pages_per_vector(store.dim)
+
+    def _partial(p: SearchParams) -> SearchParams:
+        # a budgetless request still gets a PARTIAL scan on the last rung
+        # (~10% of the heap, never below k rows) — the rung exists to be
+        # cheap, not to silently fall back to a full exact scan
+        if p.page_budget > 0 or p.deadline_cycles > 0:
+            return p
+        return dataclasses.replace(
+            p, page_budget=max(p.k, store.n // 10) * ppv)
+
+    rungs.append(LadderRung("partial_scan", bf, _partial))
+    return rungs
+
+
+def bucket_deadline(deadline: float) -> float:
+    """Floor a per-request deadline (modeled cycles) to 2 significant
+    figures.  SearchParams is a static jit argument, so every distinct
+    deadline value compiles a fresh program — bucketing keeps the compile
+    cache small; flooring keeps the bucket conservative (never serves
+    with MORE budget than the request asked for)."""
+    if not math.isfinite(deadline) or deadline <= 0:
+        return 0.0
+    exp = math.floor(math.log10(deadline))
+    scale = 10.0 ** (exp - 1)
+    return float(math.floor(deadline / scale + 1e-9) * scale)
+
+
+def admission_floor(store, params: SearchParams,
+                    constants=costmodel.SYSTEM) -> float:
+    """Cheapest possible service in modeled cycles: the last rung's
+    minimal partial scan (probe every filter bit, fetch+score k rows).
+    A request whose deadline is below this cannot be served at ANY rung
+    and is rejected at admission rather than burning pool bandwidth."""
+    w = costmodel.budget_cycle_weights(store.dim, constants)
+    ppv = heap_pages_per_vector(store.dim)
+    return (store.n * w["filter_checks"]
+            + params.k * (w["distance_comps"]
+                          + ppv * w["page_accesses_heap"]))
+
+
+def price_ladder(rungs: list[LadderRung], params: SearchParams,
+                 selectivity: float, batch_q: int = 16,
+                 constants=costmodel.SYSTEM) -> dict[str, float]:
+    """Modeled per-query cycles of each priceable rung
+    (costmodel.predict_cycles) — the AdaptivePlanner's prediction
+    machinery reused to price degradation instead of strategy choice.
+    Planner rungs are skipped (their price depends on their own
+    dispatch); the dict is telemetry for admission/bench, not a
+    decision boundary."""
+    sc = next((r.executor for r in rungs
+               if isinstance(r.executor, ScannExecutor)), None)
+    prices: dict[str, float] = {}
+    for r in rungs:
+        ex = r.executor
+        if isinstance(ex, AdaptivePlanner):
+            continue
+        if isinstance(ex, ScannExecutor):
+            kind = "scann"
+        elif isinstance(ex, BruteForceExecutor):
+            # budget-aware: a partial scan is priced on the rows its
+            # budget affords (mirrors BruteForceExecutor._budget_rows),
+            # not on a full seqscan
+            p = r.resolve(params)
+            n = ex.store.n
+            ppv = heap_pages_per_vector(ex.store.dim)
+            w = costmodel.budget_cycle_weights(ex.store.dim, constants)
+            rows = selectivity * n
+            if p.page_budget > 0:
+                rows = min(rows, p.page_budget // ppv)
+            if p.deadline_cycles > 0:
+                per = w["distance_comps"] + ppv * w["page_accesses_heap"]
+                rows = min(rows, max(p.deadline_cycles
+                                     - n * w["filter_checks"], 0.0) / per)
+            rows = max(min(rows, n), p.k)
+            prices[r.name] = (n * w["filter_checks"]
+                              + rows * (w["distance_comps"]
+                                        + ppv * w["page_accesses_heap"]))
+            continue
+        elif isinstance(ex, GraphExecutor):
+            kind = ex.strategy
+        else:
+            continue
+        p = r.resolve(params)
+        gm = 16
+        if isinstance(ex, GraphExecutor):
+            gm = int(ex.graph.neighbors.shape[2])
+            p = dataclasses.replace(p, strategy=ex.strategy,
+                                    graph_quant=ex.graph_quant)
+        shape = index_shape(ex.store,
+                            sc.index if sc is not None else None,
+                            graph_m=gm)
+        try:
+            prices[r.name] = costmodel.predict_cycles(
+                kind, shape, p, selectivity, constants=constants,
+                batch_q=batch_q)
+        except ValueError:
+            continue
+    return prices
+
+
 class RetrievalAugmentedServer:
     def __init__(self, bundle: ModelBundle, params, executor: Executor,
                  search_params: SearchParams,
@@ -111,9 +290,28 @@ class RetrievalAugmentedServer:
             [chunks.reshape(idn.shape[0], -1), prompts], axis=1)
         return aug.astype(np.int32)
 
+    @staticmethod
+    def _validate_queue(prompts: np.ndarray, bitmaps) -> None:
+        if prompts.ndim != 2:
+            raise ValueError(
+                f"prompts must be (B, P) token rows, got shape "
+                f"{prompts.shape}")
+        if prompts.shape[0] == 0:
+            raise ValueError("empty request queue (B=0): nothing to "
+                             "serve — submit at least one prompt")
+        if bitmaps.ndim != 2 or bitmaps.shape[0] != prompts.shape[0]:
+            raise ValueError(
+                f"prompts/bitmaps length mismatch: {prompts.shape[0]} "
+                f"prompts vs {np.shape(bitmaps)[0] if np.ndim(bitmaps) else 0} "
+                f"bitmaps — every request needs exactly one filter bitmap "
+                f"row")
+
     def retrieve(self, prompts: np.ndarray,
                  bitmaps: jax.Array) -> RetrievalResult:
         """prompts (B, P) int32; bitmaps (B, words) — the evaluated filter."""
+        prompts = np.asarray(prompts)
+        bitmaps = jnp.asarray(bitmaps)
+        self._validate_queue(prompts, bitmaps)
         q = self._embed(self.params, jnp.asarray(prompts))
         res: SearchResult = self.executor.search(q, bitmaps,
                                                  self.search_params)
@@ -123,8 +321,10 @@ class RetrievalAugmentedServer:
                                strategy=res.strategy)
 
     def serve_queue(self, prompts: np.ndarray, bitmaps: jax.Array,
-                    batch_size: int = 16, policy: str = "centroid"
-                    ) -> tuple[RetrievalResult, dict]:
+                    batch_size: int = 16, policy: str = "centroid",
+                    deadlines: Optional[np.ndarray] = None,
+                    ladder: Optional[list[LadderRung]] = None,
+                    admit: bool = True) -> tuple[RetrievalResult, dict]:
         """Serve a whole request queue in dispatch batches.
 
         policy "fifo" batches requests in arrival order; "centroid"
@@ -132,37 +332,94 @@ class RetrievalAugmentedServer:
         by each embedded query's nearest ScaNN leaf centroid first, so
         requests that will open the same leaves (and walk the same graph
         neighborhoods) share a batch — raising buffer-pool hit rates and
-        frontier-union overlap.  Results are returned in arrival order
-        either way, and for FIXED executors ids/dists are policy-invariant
-        (each query's result depends only on the query itself).  An
-        AdaptivePlanner executor picks its strategy per dispatch batch
-        from batch-level selectivity estimates, so regrouping the queue
-        can change which strategy serves a query — same recall target,
-        not bit-identical results.
+        frontier-union overlap.  When the executor has no ScaNN index to
+        route with, "centroid" falls back to "fifo" LOUDLY: a
+        RuntimeWarning fires and info records policy_effective="fifo"
+        with the reason — never a silently different batching than asked
+        for.  Results are returned in arrival order either way, and for
+        FIXED executors ids/dists are policy-invariant (each query's
+        result depends only on the query itself).  An AdaptivePlanner
+        executor picks its strategy per dispatch batch from batch-level
+        selectivity estimates, so regrouping the queue can change which
+        strategy serves a query — same recall target, not bit-identical
+        results.
+
+        Robust serving (DESIGN.md §10): `deadlines` gives each request a
+        budget in modeled cycles (0/inf = none).  Deadlines are floored
+        to 2-significant-figure buckets (`bucket_deadline` — SearchParams
+        is a static jit arg, so distinct deadlines mean distinct
+        programs) and requests dispatch bucket by bucket.  Requests whose
+        deadline cannot cover even the minimal partial scan
+        (`admission_floor`) are rejected at admission (`admit=False`
+        disables this) — ids stay -1 and info flags them, they never
+        reach an executor.  Each dispatch batch then walks the
+        degradation `ladder` (default: `default_ladder(executor)`):
+        requests that come back FAULTED (a storage read that never
+        completed — StorageStats.faulted) are retried once on the primary
+        rung; requests still faulted or budget-exhausted descend rung by
+        rung (f32 graph -> sq8-no-rerank -> scann-lite -> partial scan)
+        until one serves them cleanly or the ladder ends, in which case
+        the last rung's flagged partial answer is returned.  Every
+        request therefore ends with either k results or an explicit
+        degraded/truncated/rejected marking in info.  With no deadlines,
+        a fault-free pool, and no budgets in search_params, the ladder
+        never engages and the dispatch loop is exactly the classic one
+        (bit-identical results).
 
         Returns (RetrievalResult in arrival order, info) where info
-        carries the dispatch order, per-batch strategies, and the
-        executor's storage telemetry delta when a StorageEngine is
-        attached (the pool persists across batches — warm serving).
+        carries the dispatch order, per-batch strategies, per-request
+        rung/flag telemetry, and the executor's storage telemetry delta
+        when a StorageEngine is attached (the pool persists across
+        batches — warm serving).
         """
         if policy not in BATCH_POLICIES:
             raise ValueError(
                 f"unknown policy {policy!r}; one of {BATCH_POLICIES}")
         prompts = np.asarray(prompts)
+        bitmaps = jnp.asarray(bitmaps)
+        self._validate_queue(prompts, bitmaps)
         q = self._embed(self.params, jnp.asarray(prompts))
         nreq = q.shape[0]
         order = np.arange(nreq)
+        policy_effective = policy
+        fallback_reason = None
         if policy == "centroid":
             index = find_scann_index(self.executor)
             if index is None:
-                raise ValueError("centroid policy needs an executor with "
-                                 "a ScaNN index (use policy='fifo')")
-            keys = np.asarray(nearest_centroid(index, q))
-            order = np.argsort(keys, kind="stable")
-        bitmaps = jnp.asarray(bitmaps)
+                fallback_reason = ("centroid batching needs an executor "
+                                   "with a ScaNN index; serving FIFO "
+                                   "instead")
+                warnings.warn(fallback_reason, RuntimeWarning,
+                              stacklevel=2)
+                policy_effective = "fifo"
+            else:
+                keys = np.asarray(nearest_centroid(index, q))
+                order = np.argsort(keys, kind="stable")
+        if ladder is None:
+            ladder = default_ladder(self.executor)
+        # -- admission + deadline buckets -------------------------------
+        buckets = np.zeros(nreq)
+        admitted = np.ones(nreq, bool)
+        if deadlines is not None:
+            deadlines = np.asarray(deadlines, np.float64).reshape(-1)
+            if deadlines.shape[0] != nreq:
+                raise ValueError(
+                    f"deadlines length mismatch: {deadlines.shape[0]} "
+                    f"deadlines vs {nreq} requests")
+            buckets = np.array([bucket_deadline(d) for d in deadlines])
+            if admit:
+                floor = admission_floor(self.executor.store,
+                                        self.search_params)
+                admitted = (buckets <= 0) | (buckets >= floor)
         k = self.k
         ids = np.full((nreq, k), -1, np.int32)
         dists = np.full((nreq, k), np.inf, np.float32)
+        rung_names = np.full(nreq, "rejected", object)
+        rung_level = np.full(nreq, -1, np.int32)
+        truncated = np.zeros(nreq, bool)
+        exhausted = np.zeros(nreq, bool)
+        faulted = np.zeros(nreq, bool)
+        retried = np.zeros(nreq, bool)
         strategies = []
         # NB: `is not None`, not truthiness — BufferPool defines __len__,
         # so an empty (freshly reset) pool is falsy
@@ -170,21 +427,139 @@ class RetrievalAugmentedServer:
                        None)
         h0, m0 = (pool.counters.hits, pool.counters.misses) \
             if pool is not None else (0, 0)
-        for s in range(0, nreq, batch_size):
-            sel = jnp.asarray(order[s:s + batch_size])
-            res: SearchResult = self.executor.search(
-                q[sel], bitmaps[sel], self.search_params)
-            ids[order[s:s + batch_size]] = np.asarray(res.ids)
-            dists[order[s:s + batch_size]] = np.asarray(res.dists)
-            strategies.append(res.strategy)
-        info = {"order": order, "strategies": strategies, "policy": policy}
+        bm_np = np.asarray(bitmaps)
+        order_adm = order[admitted[order]]
+        for b in sorted(set(buckets[order_adm].tolist())):
+            idxs = order_adm[buckets[order_adm] == b]
+            params = self.search_params
+            if b > 0:
+                params = dataclasses.replace(params,
+                                             deadline_cycles=float(b))
+            for s in range(0, len(idxs), batch_size):
+                sel = idxs[s:s + batch_size]
+                strategies.append(self._ladder_dispatch(
+                    q, bm_np, sel, params, ladder,
+                    ids, dists, rung_names, rung_level,
+                    truncated, exhausted, faulted, retried))
+        degraded = (rung_level > 0) | truncated | exhausted | faulted
+        info = {"order": order, "strategies": strategies, "policy": policy,
+                "policy_effective": policy_effective,
+                "ladder": [r.name for r in ladder],
+                "rung": rung_names, "rung_level": rung_level,
+                "admitted": admitted, "deadline_bucket": buckets,
+                "truncated": truncated, "budget_exhausted": exhausted,
+                "faulted": faulted, "retried": retried,
+                "degraded": degraded}
+        if fallback_reason is not None:
+            info["policy_fallback_reason"] = fallback_reason
         if pool is not None:
             dh = pool.counters.hits - h0
             dm = pool.counters.misses - m0
             info["pool_hits"] = dh
             info["pool_misses"] = dm
             info["pool_hit_rate"] = dh / max(dh + dm, 1)
+            info["pool_retries"] = pool.counters.retries
+            info["pool_failed_reads"] = pool.counters.failed_reads
+            info["pool_spikes"] = pool.counters.spikes
         strategy = strategies[0] if len(set(strategies)) == 1 else "mixed"
+        if not strategies:
+            strategy = "rejected"
         return RetrievalResult(ids=ids, dists=dists,
                                tokens=self._augment(ids, prompts),
                                strategy=strategy), info
+
+    def _ladder_dispatch(self, q, bm_np, sel, params, ladder,
+                         ids, dists, rung_names, rung_level,
+                         truncated, exhausted, faulted, retried) -> str:
+        """Serve one dispatch batch, walking the degradation ladder for
+        requests that come back faulted or budget-exhausted.  Scatters
+        results/flags into the queue-level output arrays; returns the
+        primary rung's strategy name (the batch's nominal strategy)."""
+        pend = np.asarray(sel)
+        batch_strategy = None
+        for level, rung in enumerate(ladder):
+            if not len(pend):
+                break
+            rp = rung.resolve(params)
+            res = self._run_rung(rung, q, bm_np, pend, rp)
+            if level == 0:
+                batch_strategy = res.strategy
+                f, _ = self._flags(res, len(pend))
+                if f.any():
+                    # transient faults: one retry on the primary rung
+                    # before any degradation (the injector's counter has
+                    # advanced, so the retry draws a fresh schedule)
+                    bad = pend[f]
+                    res2 = self._run_rung(rung, q, bm_np, bad, rp)
+                    self._scatter(res2, bad, level, rung.name, ids, dists,
+                                  rung_names, rung_level, truncated,
+                                  exhausted, faulted)
+                    retried[bad] = True
+                    ok = pend[~f]
+                    if len(ok):
+                        self._scatter(self._subset(res, ~f), ok, level,
+                                      rung.name, ids, dists, rung_names,
+                                      rung_level, truncated, exhausted,
+                                      faulted)
+                    pend = pend[faulted[pend] | exhausted[pend]]
+                    continue
+            self._scatter(res, pend, level, rung.name, ids, dists,
+                          rung_names, rung_level, truncated, exhausted,
+                          faulted)
+            pend = pend[faulted[pend] | exhausted[pend]]
+        return batch_strategy
+
+    def _run_rung(self, rung: LadderRung, q, bm_np, sel,
+                  params: SearchParams) -> SearchResult:
+        gather = jnp.asarray(sel)
+        return rung.executor.search(q[gather], jnp.asarray(bm_np[sel]),
+                                    params)
+
+    @staticmethod
+    def _flags(res: SearchResult, m: int) -> tuple[np.ndarray, np.ndarray]:
+        """(faulted, budget_exhausted) bool masks of one rung's result."""
+        f = np.zeros(m, bool)
+        st = res.storage
+        if st is not None and getattr(st, "faulted", None) is not None:
+            f = np.asarray(st.faulted, bool).copy()
+        b = np.zeros(m, bool)
+        if res.anytime is not None:
+            b = np.asarray(res.anytime.budget_exhausted, bool).copy()
+        return f, b
+
+    @staticmethod
+    def _subset(res: SearchResult, mask: np.ndarray) -> SearchResult:
+        """Row-select a SearchResult's per-query fields (enough for
+        scatter: ids/dists/anytime/storage.faulted)."""
+        anytime = res.anytime
+        if anytime is not None:
+            anytime = dataclasses.replace(
+                anytime,
+                truncated=np.asarray(anytime.truncated)[mask],
+                budget_exhausted=np.asarray(
+                    anytime.budget_exhausted)[mask],
+                completion=np.asarray(anytime.completion)[mask])
+        storage = res.storage
+        if storage is not None and getattr(storage, "faulted",
+                                           None) is not None:
+            storage = dataclasses.replace(
+                storage, faulted=np.asarray(storage.faulted)[mask])
+        return dataclasses.replace(
+            res, ids=np.asarray(res.ids)[mask],
+            dists=np.asarray(res.dists)[mask], anytime=anytime,
+            storage=storage)
+
+    def _scatter(self, res: SearchResult, sel: np.ndarray, level: int,
+                 name: str, ids, dists, rung_names, rung_level,
+                 truncated, exhausted, faulted) -> None:
+        ids[sel] = np.asarray(res.ids)
+        dists[sel] = np.asarray(res.dists)
+        rung_names[sel] = name
+        rung_level[sel] = level
+        f, b = self._flags(res, len(sel))
+        faulted[sel] = f
+        exhausted[sel] = b
+        if res.anytime is not None:
+            truncated[sel] = np.asarray(res.anytime.truncated, bool)
+        else:
+            truncated[sel] = False

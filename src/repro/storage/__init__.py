@@ -12,6 +12,7 @@ from repro.storage.pages import (PAGE_BYTES, HEAP_PAGE_BYTES,
                                  scann_pages_per_leaf)
 from repro.storage.bufferpool import (POLICIES, BufferPool, BufferPoolState,
                                       PoolCounters)
+from repro.storage.faults import FaultInjector, FaultPlan
 from repro.storage.engine import (SEGMENTS, TRACE_UNTOUCHED, StorageEngine,
                                   StorageStats, make_storage_engine)
 
@@ -20,6 +21,7 @@ __all__ = [
     "ScannLeafLayout", "heap_pages_per_vector",
     "quant_heap_pages_per_vector", "scann_pages_per_leaf",
     "POLICIES", "BufferPool", "BufferPoolState", "PoolCounters",
+    "FaultInjector", "FaultPlan",
     "SEGMENTS", "TRACE_UNTOUCHED", "StorageEngine", "StorageStats",
     "make_storage_engine",
 ]

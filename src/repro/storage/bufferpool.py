@@ -39,6 +39,10 @@ class PoolCounters:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    # fault-injection telemetry (storage/faults.py; zero without a plan):
+    retries: int = 0       # transient read failures that were retried
+    failed_reads: int = 0  # reads whose every attempt failed
+    spikes: int = 0        # slow (latency-spiked) physical reads
 
     @property
     def hit_rate(self) -> float:
@@ -47,7 +51,8 @@ class PoolCounters:
     def as_dict(self) -> dict:
         return dict(logical=self.logical, hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
-                    hit_rate=round(self.hit_rate, 4))
+                    retries=self.retries, failed_reads=self.failed_reads,
+                    spikes=self.spikes, hit_rate=round(self.hit_rate, 4))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,11 +80,16 @@ class BufferPool:
     by AdaptivePlanner on every plan — never scans the resident set."""
 
     def __init__(self, capacity_pages: int, policy: str = "lru",
-                 segments: Optional[Mapping[str, tuple[int, int]]] = None):
+                 segments: Optional[Mapping[str, tuple[int, int]]] = None,
+                 faults=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.capacity = int(capacity_pages)
         self.policy = policy
+        # optional storage/faults.FaultInjector consulted on the access
+        # path; None (or an inactive plan) keeps this path byte-identical
+        # to the fault-free pool
+        self.faults = faults
         # page id -> clock reference bit (ignored under LRU; OrderedDict
         # order IS the recency/insertion order for lru/clock respectively)
         self._pages: OrderedDict[int, bool] = OrderedDict()
@@ -139,9 +149,13 @@ class BufferPool:
         if dedup and len(pages):
             _, first = np.unique(pages, return_index=True)
             pages = pages[np.sort(first)]        # first-touch order kept
+        inj = self.faults if (self.faults is not None
+                              and self.faults.plan.active) else None
         delta = PoolCounters()
         for p in pages.tolist():
             delta.logical += 1
+            if inj is not None:
+                inj.tick()
             if p in self._pages:
                 delta.hits += 1
                 if self.policy == "lru":
@@ -150,16 +164,34 @@ class BufferPool:
                     self._pages[p] = True        # clock reference bit
                 continue
             delta.misses += 1
-            if self.capacity > 0 and len(self._pages) >= self.capacity:
-                self._evict()
-                delta.evictions += 1
+            if inj is not None:
+                retries, failed, spike = inj.on_miss()
+                delta.retries += retries
+                delta.spikes += int(spike)
+                if failed:
+                    # read never completed: page stays non-resident (a
+                    # later access retries the physical read afresh)
+                    delta.failed_reads += 1
+                    continue
+            cap = self.capacity
+            if cap > 0 and inj is not None:
+                cap = max(1, int(cap * inj.capacity_frac()))
+            if cap > 0:
+                while len(self._pages) >= cap:   # pressure may shrink cap
+                    self._evict()                # below current residency
+                    delta.evictions += 1
             self._pages[p] = False
             self._count(p, +1)
-        self.counters.logical += delta.logical
-        self.counters.hits += delta.hits
-        self.counters.misses += delta.misses
-        self.counters.evictions += delta.evictions
+        self._merge(delta)
         return delta
+
+    def _merge(self, delta: "PoolCounters") -> None:
+        c, d = self.counters, delta
+        (c.logical, c.hits, c.misses, c.evictions, c.retries,
+         c.failed_reads, c.spikes) = (
+            c.logical + d.logical, c.hits + d.hits, c.misses + d.misses,
+            c.evictions + d.evictions, c.retries + d.retries,
+            c.failed_reads + d.failed_reads, c.spikes + d.spikes)
 
     def _evict(self) -> None:
         if self.policy == "lru":

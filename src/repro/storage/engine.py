@@ -56,6 +56,7 @@ from typing import Mapping, Optional
 import numpy as np
 
 from repro.storage.bufferpool import BufferPool, BufferPoolState
+from repro.storage.faults import FaultInjector, FaultPlan
 from repro.storage.pages import (GraphAdjacencyLayout, HeapLayout,
                                  ScannLeafLayout)
 
@@ -98,6 +99,13 @@ class StorageStats:
     # the measured replacement for costmodel.FRONTIER_PAGE_AMORT's
     # calibration anchor (DESIGN.md §9).
     unique: dict = dataclasses.field(default_factory=dict)
+    # fault-injection telemetry (storage/faults.py; zeros without a plan):
+    retries: int = 0                          # retried transient failures
+    failed_reads: int = 0                     # reads that never completed
+    spikes: int = 0                           # latency-spiked reads
+    faulted: Optional[np.ndarray] = None      # (Q,) bool: query saw a
+    #                                           failed read (serving ladder
+    #                                           degrades/retries these)
 
     @property
     def logical_total(self) -> int:
@@ -125,6 +133,10 @@ class StorageStats:
                     misses=dict(self.misses), evictions=self.evictions,
                     hit_rate=round(self.hit_rate, 4),
                     unique=dict(self.unique),
+                    retries=self.retries, failed_reads=self.failed_reads,
+                    spikes=self.spikes,
+                    faulted=(self.faulted.tolist()
+                             if self.faulted is not None else None),
                     index_pages=self.index_pages.tolist(),
                     heap_pages=self.heap_pages.tolist())
 
@@ -137,7 +149,8 @@ class StorageEngine:
                  graph: Optional[GraphAdjacencyLayout] = None,
                  capacity_pages: Optional[int] = None,
                  capacity_frac: float = 0.5, policy: str = "lru",
-                 qheap: Optional[HeapLayout] = None):
+                 qheap: Optional[HeapLayout] = None,
+                 faults: Optional[FaultPlan] = None):
         self.heap = heap
         self.scann = scann
         self.graph = graph
@@ -157,8 +170,12 @@ class StorageEngine:
         self.total_pages = off
         if capacity_pages is None:
             capacity_pages = max(1, int(round(capacity_frac * off)))
+        self.faults = faults
+        injector = FaultInjector(faults) if (faults is not None
+                                            and faults.active) else None
         self.pool = BufferPool(capacity_pages, policy=policy,
-                               segments=self.segment_ranges())
+                               segments=self.segment_ranges(),
+                               faults=injector)
 
     # -- segment helpers ----------------------------------------------------
     def segment_ranges(self) -> dict[str, tuple[int, int]]:
@@ -185,9 +202,10 @@ class StorageEngine:
         hit = dict.fromkeys(segs, 0)
         mis = dict.fromkeys(segs, 0)
         uniq: dict[str, set] = {s: set() for s in segs}
-        ev = 0
+        ev = ret = fail = spk = 0
         idx_pages = np.zeros(q, np.int64)
         heap_pages = np.zeros(q, np.int64)
+        faulted = np.zeros(q, bool)
         for i, per_q in enumerate(streams):
             for seg, pages in per_q:
                 pages = np.asarray(pages)
@@ -197,12 +215,19 @@ class StorageEngine:
                 mis[seg] += d.misses
                 uniq[seg].update(pages.tolist())
                 ev += d.evictions
+                ret += d.retries
+                fail += d.failed_reads
+                spk += d.spikes
+                if d.failed_reads:
+                    faulted[i] = True
                 if seg in ("heap", "qheap"):
                     heap_pages[i] += d.logical
                 else:
                     idx_pages[i] += d.logical
         return StorageStats(log, hit, mis, ev, idx_pages, heap_pages,
-                            unique={s: len(v) for s, v in uniq.items()})
+                            unique={s: len(v) for s, v in uniq.items()},
+                            retries=ret, failed_reads=fail, spikes=spk,
+                            faulted=faulted)
 
     def account_scann(self, leaves: np.ndarray, cand_rows: np.ndarray,
                       cand_ok: np.ndarray,
@@ -296,7 +321,8 @@ class StorageEngine:
 def make_storage_engine(store, index=None, graph=None,
                         capacity_pages: Optional[int] = None,
                         capacity_frac: float = 0.5,
-                        policy: str = "lru") -> StorageEngine:
+                        policy: str = "lru",
+                        faults: Optional[FaultPlan] = None) -> StorageEngine:
     """Build an engine from live components: a core VectorStore, optional
     ScannIndex, optional HNSWGraph (duck-typed on shapes — no core import).
     The dense "qheap" SQ8-shadow segment is always laid out (it is pure
@@ -317,4 +343,4 @@ def make_storage_engine(store, index=None, graph=None,
                                   degree=int(graph.neighbors.shape[2]))
     return StorageEngine(heap, scann, gl, capacity_pages=capacity_pages,
                          capacity_frac=capacity_frac, policy=policy,
-                         qheap=qheap)
+                         qheap=qheap, faults=faults)

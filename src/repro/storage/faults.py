@@ -1,0 +1,139 @@
+"""Seeded, deterministic storage fault injection (DESIGN.md §10).
+
+The robustness layer's chaos source: a `FaultPlan` describes *what can go
+wrong* on the physical read path — transient page-read failures, latency
+spikes, buffer-pool pressure windows — and a `FaultInjector` turns it into
+a reproducible schedule.  Faults only ever fire on buffer-pool MISSES
+(the physical reads); pool hits are memory reads and stay clean.
+
+Determinism contract: every random draw is a pure hash of
+(plan.seed, access counter, salt) — splitmix64, no global RNG state — and
+the access counter advances once per logical page access.  Therefore the
+same seed driven by the same page-access stream yields the same fault
+schedule, the same retry/spike accounting, and the same flagged queries,
+run after run (the chaos tests replay this exactly).
+
+Faults are ACCOUNTING-ONLY, like the rest of the storage layer: search
+results are always computed from the dense arrays and stay bit-identical;
+a failed read marks the owning query `faulted` in StorageStats so the
+serving layer can degrade or retry it — it never corrupts data.  An
+all-zero plan (`FaultPlan()`) draws nothing and is byte-for-byte the
+fault-free path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+_M64 = (1 << 64) - 1
+
+
+def _splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _M64
+    return (x ^ (x >> 31)) & _M64
+
+
+def _uniform(seed: int, counter: int, salt: int) -> float:
+    """Deterministic U[0,1) from (seed, counter, salt) — counter-keyed so
+    the schedule is a pure function of the access stream.  (counter, salt)
+    pack disjoint bit ranges (salt < 2**16, counter < 2**48), so every
+    (access, decision-kind, attempt) triple draws independently."""
+    h = _splitmix64((seed & _M64) ^ _splitmix64(((counter << 16) ^ salt)
+                                               & _M64))
+    return h / float(1 << 64)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """What the injector may do, with what probability.  All-zero
+    probabilities (the default) disable injection entirely."""
+
+    seed: int = 0
+    # transient page-read failure per physical read ATTEMPT; each failed
+    # attempt retries (with accounting) up to max_retries times — a read
+    # whose every attempt fails is a failed read and flags the query
+    read_fail_prob: float = 0.0
+    max_retries: int = 3
+    # latency spike per successful physical read (charged a
+    # page_miss_extra-style surcharge by costmodel.fault_penalty)
+    latency_spike_prob: float = 0.0
+    # pool-pressure windows: per logical access, chance a window opens
+    # during which the pool's effective capacity shrinks to pressure_frac
+    # of nominal for the next pressure_len logical accesses
+    pressure_prob: float = 0.0
+    pressure_len: int = 256
+    pressure_frac: float = 0.5
+
+    @property
+    def active(self) -> bool:
+        return (self.read_fail_prob > 0 or self.latency_spike_prob > 0
+                or self.pressure_prob > 0)
+
+
+# draw salts (namespacing the counter-keyed hash per decision kind)
+_SALT_FAIL = 1
+_SALT_SPIKE = 2
+_SALT_PRESSURE = 3
+
+
+class FaultInjector:
+    """Stateful executor of one FaultPlan over one pool's access stream.
+
+    State is two integers — the monotone logical-access counter and the
+    end of the current pressure window — so `reset()` (or constructing a
+    fresh injector) replays the identical schedule.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.counter = 0
+        self._pressure_until = 0
+
+    def reset(self) -> None:
+        self.counter = 0
+        self._pressure_until = 0
+
+    # -- per-access hooks (called by BufferPool.access) ---------------------
+    def tick(self) -> None:
+        """Advance the logical-access counter; maybe open a pressure
+        window.  Called once per logical page access, hit or miss, so the
+        schedule depends only on the access stream."""
+        self.counter += 1
+        p = self.plan
+        if p.pressure_prob > 0 and self.counter >= self._pressure_until:
+            if _uniform(p.seed, self.counter, _SALT_PRESSURE) \
+                    < p.pressure_prob:
+                self._pressure_until = self.counter + p.pressure_len
+
+    def capacity_frac(self) -> float:
+        """Effective-capacity fraction right now (1.0 outside windows)."""
+        if self.counter < self._pressure_until:
+            return self.plan.pressure_frac
+        return 1.0
+
+    def on_miss(self) -> tuple[int, bool, bool]:
+        """Fault outcome of one physical read (a pool miss).
+
+        Returns (retries, failed, spike): `retries` attempts were repeated
+        after transient failures; `failed` means every attempt (1 +
+        max_retries) failed — the read never completed and the owning
+        query must be flagged; `spike` marks a slow (but successful) read.
+        """
+        p = self.plan
+        retries = 0
+        failed = False
+        if p.read_fail_prob > 0:
+            for attempt in range(1 + p.max_retries):
+                if _uniform(p.seed, self.counter,
+                            _SALT_FAIL + (attempt << 8)) >= p.read_fail_prob:
+                    break
+                if attempt == p.max_retries:
+                    failed = True
+                else:
+                    retries += 1
+        spike = False
+        if not failed and p.latency_spike_prob > 0:
+            spike = _uniform(p.seed, self.counter, _SALT_SPIKE) \
+                < p.latency_spike_prob
+        return retries, failed, spike

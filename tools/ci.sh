@@ -7,7 +7,14 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -q
+# hang protection: pass --timeout only when the optional pytest-timeout
+# plugin is installed; the built-in faulthandler dump needs no plugin
+PYTEST_GUARD=(-o faulthandler_timeout=600)
+if python -c "import pytest_timeout" 2>/dev/null; then
+    PYTEST_GUARD+=(--timeout=600 --timeout-method=thread)
+fi
+
+python -m pytest -q "${PYTEST_GUARD[@]}"
 tier1=$?
 
 SMOKE_SKIP_TESTS=1 tools/smoke.sh || exit 1

@@ -2,8 +2,8 @@
 # CI smoke: tier-1 test suite + the perf/planner/storage microbenchmarks.
 # Each benchmark emits one JSON record (BENCH_leaf_scan.json /
 # BENCH_frontier.json / BENCH_planner.json / BENCH_storage.json /
-# BENCH_graph_quant.json) so the perf trajectory gets populated
-# run-over-run;
+# BENCH_graph_quant.json / BENCH_robustness.tiny.json) so the perf
+# trajectory gets populated run-over-run;
 # benchmarks run even when tier-1 fails, but the tier-1 status is
 # propagated.  SMOKE_SKIP_TESTS=1 skips the pytest phase (tools/ci.sh runs
 # the full suite itself first).
@@ -12,14 +12,23 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# hang protection: per-test --timeout needs the optional pytest-timeout
+# plugin (requirements-dev.txt); without it, fall back to pytest's
+# built-in faulthandler, which dumps stacks after the same budget but
+# does not kill the test
+PYTEST_GUARD=(-o faulthandler_timeout=600)
+if python -c "import pytest_timeout" 2>/dev/null; then
+    PYTEST_GUARD+=(--timeout=600 --timeout-method=thread)
+fi
+
 tier1=0
 if [ "${SMOKE_SKIP_TESTS:-0}" != "1" ]; then
-    python -m pytest -x -q
+    python -m pytest -x -q "${PYTEST_GUARD[@]}"
     tier1=$?
     if [ "$tier1" -ne 0 ]; then
         # -x died early in some unrelated file: still report whether the
         # executor/planner tests themselves are green
-        python -m pytest -q tests/test_executor.py
+        python -m pytest -q "${PYTEST_GUARD[@]}" tests/test_executor.py
     fi
 fi
 
@@ -28,5 +37,6 @@ python benchmarks/bench_frontier.py --tiny || exit 1
 python benchmarks/fig_planner.py --tiny || exit 1
 python benchmarks/bench_storage.py --tiny || exit 1
 python benchmarks/bench_graph_quant.py --tiny || exit 1
+python benchmarks/bench_robustness.py --tiny || exit 1
 
 exit "$tier1"
