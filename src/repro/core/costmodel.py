@@ -33,6 +33,7 @@ two regimes reproduce Fig. 1's crossover-point shift.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Mapping, Optional
 
 import numpy as np
@@ -558,6 +559,41 @@ def evaluate_anytime(stats: Optional[SearchStats], params: SearchParams,
         truncated |= np.atleast_1d(np.asarray(extra_truncated, bool))
     return AnytimeInfo(truncated=truncated, budget_exhausted=budget,
                        completion=completion)
+
+
+def queueing_delay_cycles(offered_per_cycle: float, service_cycles: float,
+                          servers: int) -> float:
+    """Expected queueing wait (modeled cycles) at an open-loop arrival
+    rate of `offered_per_cycle` requests/cycle against `servers` slots
+    each taking `service_cycles` per request.
+
+    Sakasegawa's M/M/c approximation, Lq ≈ ρ^{√(2(c+1))} / (1 − ρ) with
+    ρ = λ·S/c and Wq = Lq/λ, halved toward M/D/c since slot service times
+    are tightly clustered within a deadline bucket.  Returns 0.0 when the
+    system is idle (λ = 0) and +inf at or past saturation (ρ ≥ 1) — the
+    admission gate treats an unstable operating point as an immediate
+    reject, the same way a sub-floor deadline is (DESIGN.md §11)."""
+    if offered_per_cycle <= 0.0 or service_cycles <= 0.0:
+        return 0.0
+    c = max(int(servers), 1)
+    rho = offered_per_cycle * service_cycles / c
+    if rho >= 1.0:
+        return float("inf")
+    lq = rho ** math.sqrt(2.0 * (c + 1)) / (1.0 - rho)
+    return 0.5 * lq / offered_per_cycle
+
+
+def queue_aware_floor(floor: float, queued: int, servers: int,
+                      service_cycles: float) -> float:
+    """Deadline admission floor inflated by the wait already visible in
+    the arrival queue: `queued` requests ahead drain at roughly
+    `servers` per `service_cycles`, so a request that would only meet
+    its deadline on an empty queue is rejected instead of admitted to
+    expire in line.  Degenerates to the plain `admission_floor` when the
+    queue is empty."""
+    if queued <= 0 or service_cycles <= 0.0:
+        return floor
+    return floor + (queued / max(int(servers), 1)) * service_cycles
 
 
 def fault_penalty(storage_stats, batch_q: int,

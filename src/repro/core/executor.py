@@ -35,7 +35,10 @@ import numpy as np
 
 from repro.core import costmodel
 from repro.core.bruteforce import filtered_knn, filtered_knn_partial
-from repro.core.graph_search import search_batch
+from repro.core.graph_search import (FrontierState, frontier_finalize,
+                                     frontier_idle, frontier_init,
+                                     frontier_write_slot, search_batch,
+                                     step_supersteps)
 from repro.core.hnsw import HNSWGraph
 from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
                               leaves_within_budget, project_query,
@@ -135,12 +138,57 @@ class GraphExecutor(BaseExecutor):
         self.name = strategy if graph_quant == "none" \
             else f"{strategy}_{graph_quant}"
 
-    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+    def resolve_params(self, params: SearchParams) -> SearchParams:
+        """Plan-time strategy/quant coercion as a reusable helper.
+
+        External steppers (serving/continuous.py) must resolve params
+        exactly the way `plan` does — the resolved object is the jit
+        cache key, so resolving differently would compile a second
+        stepper for the same logical plan."""
         if params.strategy != self.strategy or \
                 params.graph_quant != self.graph_quant:
             params = dataclasses.replace(params, strategy=self.strategy,
                                          graph_quant=self.graph_quant)
-        return SearchPlan(self.strategy, params, queries, bitmaps)
+        return params
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        return SearchPlan(self.strategy, self.resolve_params(params),
+                          queries, bitmaps)
+
+    # ---- stepped frontier driver (DESIGN.md §11) --------------------
+    # Thin delegates so the continuous-batching scheduler never imports
+    # graph_search directly; trace collection follows the storage
+    # attachment the same way `execute` does.
+
+    def idle_frontier(self, params: SearchParams, width: int
+                      ) -> FrontierState:
+        return frontier_idle(self.graph, self.store,
+                             self.resolve_params(params), width,
+                             collect_trace=self.storage is not None)
+
+    def init_frontier(self, queries, bitmaps, params: SearchParams,
+                      deadlines=None) -> FrontierState:
+        return frontier_init(self.graph, self.store, queries, bitmaps,
+                             self.resolve_params(params),
+                             collect_trace=self.storage is not None,
+                             deadlines=deadlines)
+
+    def write_frontier_slot(self, state: FrontierState,
+                            lane: FrontierState, slot: int) -> FrontierState:
+        return frontier_write_slot(state, lane, slot)
+
+    def step_frontier(self, state: FrontierState, params: SearchParams,
+                      n_hops: int, dynamic_deadline: bool = False
+                      ) -> FrontierState:
+        return step_supersteps(self.graph, self.store, state,
+                               self.resolve_params(params), n_hops,
+                               use_pallas=self.use_pallas,
+                               dynamic_deadline=dynamic_deadline)
+
+    def finalize_frontier(self, state: FrontierState,
+                          params: SearchParams):
+        return frontier_finalize(self.graph, self.store, state,
+                                 self.resolve_params(params))
 
     def execute(self, plan: SearchPlan) -> SearchResult:
         if self.storage is None:

@@ -26,6 +26,7 @@ search vmaps over queries and jits once per (graph shape, params).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -33,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.costmodel import budget_cycle_weights
 from repro.core.hnsw import HNSWGraph
-from repro.core.types import (SearchParams, SearchStats, VectorStore,
+from repro.core.types import (Array, SearchParams, SearchStats, VectorStore,
                               bitset_mark, bitset_words, distance,
                               heap_pages_per_vector, probe_bitmap,
                               quant_heap_pages_per_vector, topk_smallest)
@@ -44,7 +45,8 @@ INF = jnp.inf
 GRAPH_QUANT_MODES = ("none", "sq8")
 
 
-def _budget_over(st: SearchStats, params: SearchParams, dim: int):
+def _budget_over(st: SearchStats, params: SearchParams, dim: int,
+                 deadline=None):
     """Anytime budget-stop predicate over the carried counters
     (DESIGN.md §10).  Returns None when no budget is set — the predicate
     is then never traced, so zero-budget programs are jaxpr-identical to
@@ -55,6 +57,14 @@ def _budget_over(st: SearchStats, params: SearchParams, dim: int):
     `costmodel.budget_cycle_weights` form in float32, term order fixed —
     `costmodel.linear_cycles` applies the identical arithmetic post-hoc,
     so the derived budget_exhausted flag agrees with the in-loop stop.
+
+    `deadline` (DESIGN.md §11): optional traced (Q,) float32 per-lane
+    deadline array for the externally stepped driver, where slots hold
+    requests from DIFFERENT deadline buckets at once (+inf = no
+    deadline, so the term is inert per lane).  Same weights, same float32
+    comparison as the static `params.deadline_cycles` term — a lane with
+    deadline array value b stops exactly where a batch run with
+    deadline_cycles=b would.
     """
     terms = []
     if params.page_budget > 0:
@@ -62,13 +72,16 @@ def _budget_over(st: SearchStats, params: SearchParams, dim: int):
         terms.append(pages >= params.page_budget)
     if params.hop_budget > 0:
         terms.append(st.hops >= params.hop_budget)
-    if params.deadline_cycles > 0:
+    if params.deadline_cycles > 0 or deadline is not None:
         w = budget_cycle_weights(dim)
         cyc = None
         for name, weight in w.items():
             t = getattr(st, name).astype(jnp.float32) * jnp.float32(weight)
             cyc = t if cyc is None else cyc + t
-        terms.append(cyc >= jnp.float32(params.deadline_cycles))
+        if params.deadline_cycles > 0:
+            terms.append(cyc >= jnp.float32(params.deadline_cycles))
+        if deadline is not None:
+            terms.append(cyc >= deadline)
     if not terms:
         return None
     out = terms[0]
@@ -917,6 +930,203 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
     return pool_d, pool_id, w_d, w_id, visited, n_would
 
 
+def _base_state_init(graph: HNSWGraph, store: VectorStore, bitmaps,
+                     params: SearchParams, entry, entry_d, ef_result: int):
+    """Initial (pool, W, visited) lane state of the base frontier engine —
+    shared by the one-shot driver and the stepped `frontier_init` so the
+    two paths start from bit-identical state."""
+    qn = entry.shape[0]
+    p = params.beam_width
+    nw = bitset_words(graph.n)
+    pool_d = jnp.full((qn, p), INF).at[:, 0].set(entry_d)
+    pool_id = jnp.full((qn, p), -1, jnp.int32).at[:, 0].set(entry)
+    visited = _mark_batch(jnp.zeros((qn, nw), jnp.uint32), entry[:, None],
+                          jnp.ones((qn, 1), bool))
+    w_d = jnp.full((qn, ef_result), INF)
+    w_id = jnp.full((qn, ef_result), -1, jnp.int32)
+    entry_pass = _probe_batch(bitmaps, entry[:, None])[:, 0]
+    seed_ok = entry_pass | (params.strategy in ("unfiltered",
+                                                "iterative_scan"))
+    w_d = jnp.where(seed_ok[:, None], w_d.at[:, 0].set(entry_d), w_d)
+    w_id = jnp.where(seed_ok[:, None], w_id.at[:, 0].set(entry), w_id)
+    return pool_d, pool_id, w_d, w_id, visited
+
+
+def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
+                    params: SearchParams, ef_result: int, use_pallas: bool,
+                    tracing: bool, deadline, state):
+    """One superstep of the base (non-iterative) frontier engine.
+
+    `state` is the 9-tuple (pool_d, pool_id, w_d, w_id, visited, hs, is_,
+    stats, done); the function is the exact loop body of the one-shot
+    `lax.while_loop` AND the unit the external driver steps in fixed-hop
+    chunks (`step_supersteps`) — shared verbatim so chunked execution is
+    bit-identical by construction.  A fully-done lane is an exact no-op
+    (pops suppressed, all-INF merges, masked counters), so applying the
+    body past a lane's stop point never changes its state — that is what
+    makes mid-flight slot retire/admit sound.  `deadline` is the optional
+    per-lane (Q,) float32 deadline array (see `_budget_over`).
+    """
+    qn = queries.shape[0]
+    strat = params.strategy
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
+    deg = graph.neighbors.shape[2]
+    tm_on = params.translation_map
+    we_idx = params.ef_search - 1 if ef_result >= params.ef_search \
+        else ef_result - 1
+
+    pool_d, pool_id, w_d, w_id, visited, hs, is_, st, done = state
+    # the pool is kept sorted ascending, so the legacy argmin-pop is
+    # always slot 0; the pop itself is folded into the insertions
+    best_d, best_id = pool_d[:, 0], pool_id[:, 0]
+    w_worst = w_d[:, we_idx]
+    stop = (best_d > w_worst) | jnp.isinf(best_d) | \
+        (st.hops >= params.max_hops)
+    over = _budget_over(st, params, store.dim, deadline)
+    if over is not None:
+        stop = stop | over
+    active = ~done & ~stop
+    node = jnp.maximum(best_id, 0)
+    step = st.hops + 1          # this superstep's post-increment stamp
+    if tracing:   # adjacency read of the popped node (step ①)
+        is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
+
+    nb1 = graph.neighbors[0, node]                       # (Q, deg)
+    v1 = nb1 >= 0
+    unv1 = v1 & ~_probe_batch(visited, nb1)
+
+    z = jnp.zeros((qn,), jnp.int32)
+    dc = fc = pai = pah = tm = z
+    pai = pai + 1                      # step ①: current node's index page
+
+    if strat in ("unfiltered", "sweeping"):
+        # -------- traversal-first: score every unvisited 1-hop neighbor
+        score_m = unv1
+        n_s = score_m.sum(-1).astype(jnp.int32)
+        dc = dc + n_s
+        pah = pah + n_s * ppv
+        (pool_d2, pool_id2, w_d2, w_id2, visited2,
+         n_w) = _score_insert_chunks(
+            queries, bitmaps, store, nb1, score_m & active[:, None],
+            params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
+            visited, use_pallas,
+            sweep_worst=w_worst if strat == "sweeping" else None,
+            drop_head=active, quant=quant)
+        if strat == "sweeping":
+            fc = fc + n_w
+            tm = tm + jnp.where(tm_on, n_w, 0)
+            pai = pai + jnp.where(tm_on, 0, n_w)
+    else:
+        # -------- filter-first (acorn / navix): predicate subgraph
+        d1, pass1 = _frontier_scores(queries, store, nb1, bitmaps,
+                                     use_pallas, quant)
+        n1 = v1.sum(-1).astype(jnp.int32)
+        fc = fc + n1                               # check all 1-hop
+        tm = tm + jnp.where(tm_on, n1, 0)
+        pai = pai + jnp.where(tm_on, 0, n1)
+        pass1v = pass1 & v1
+        local_sel = pass1v.sum(-1) / jnp.maximum(n1, 1)
+
+        if strat == "acorn":
+            do_directed = jnp.zeros((qn,), bool)
+            do_twohop_all = jnp.ones((qn,), bool)
+        else:  # navix heuristics
+            h = params.navix_heuristic
+            if h == "blind":
+                do_directed = jnp.zeros((qn,), bool)
+                do_twohop_all = jnp.ones((qn,), bool)
+            elif h == "directed":
+                do_directed = jnp.ones((qn,), bool)
+                do_twohop_all = jnp.zeros((qn,), bool)
+            elif h == "onehop":
+                do_directed = jnp.zeros((qn,), bool)
+                do_twohop_all = jnp.zeros((qn,), bool)
+            else:  # adaptive-local (paper §2.3.4)
+                do_directed = (local_sel > 0.08) & (local_sel <= 0.35)
+                do_twohop_all = local_sel <= 0.08
+
+        # 1-hop: score the passing, unvisited ones
+        s1 = pass1v & unv1
+        n_s1 = s1.sum(-1).astype(jnp.int32)
+        dc = dc + n_s1
+        pah = pah + n_s1 * ppv
+
+        # decide which branches expand to 2 hops
+        expand_branch = v1
+        if params.adaptive_skip_2hop:
+            expand_branch = expand_branch & ~pass1v
+        if strat == "navix" and params.navix_heuristic in ("directed",
+                                                           "adaptive"):
+            rank = jnp.argsort(jnp.where(v1, d1, INF), axis=-1)
+            topr = jax.vmap(
+                lambda r: jnp.zeros((deg,), bool)
+                .at[r[: max(1, deg // 4)]].set(True))(rank)
+            directed_branch = expand_branch & topr
+            expand_branch = jnp.where(
+                do_twohop_all[:, None], expand_branch,
+                jnp.where(do_directed[:, None], directed_branch, False))
+            extra_rank_dc = jnp.where(
+                do_directed, (v1 & ~s1).sum(-1), 0).astype(jnp.int32)
+            dc = dc + extra_rank_dc
+            pah = pah + extra_rank_dc * ppv
+        elif strat == "navix" and params.navix_heuristic == "onehop":
+            expand_branch = jnp.zeros_like(expand_branch)
+
+        n_exp = expand_branch.sum(-1).astype(jnp.int32)
+        pai = pai + n_exp                          # step ②: branch pages
+        if tracing:   # adjacency reads of the expanded branches
+            is_ = _stamp_batch(is_, nb1,
+                               expand_branch & active[:, None], step)
+        nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
+        nb2 = jnp.where(v1[:, :, None], nb2, -1)
+        v2 = nb2 >= 0
+        pass2 = _probe_batch(bitmaps, nb2)
+        unv2 = v2 & ~_probe_batch(visited, nb2)
+        m2 = v2 & expand_branch[:, :, None]
+        n2 = m2.sum((-2, -1)).astype(jnp.int32)
+        fc = fc + n2                               # step ④: 2-hop checks
+        tm = tm + jnp.where(tm_on, n2, 0)
+        pai = pai + jnp.where(tm_on, 0, n2)
+        s2 = m2 & pass2 & unv2
+        n_s2 = s2.sum((-2, -1)).astype(jnp.int32)
+        dc = dc + n_s2                             # step ⑤
+        pah = pah + n_s2 * ppv
+
+        # 1-hop insertion + marking first (neighbor lists are
+        # duplicate-free, so every s1 candidate is a first occurrence
+        # of the legacy concat dedup); the pool pop rides along
+        ins1 = s1 & active[:, None]
+        in1_d = jnp.where(ins1, d1, INF)
+        in1_i = jnp.where(ins1, nb1, -1)
+        pool_d2, pool_id2 = _merge_smallest(pool_d, pool_id, in1_d,
+                                            in1_i, active)
+        w_d2, w_id2 = _merge_smallest(w_d, w_id, in1_d, in1_i)
+        visited2 = _mark_batch(visited, nb1, ins1)
+        # lazy 2-hop: survivors of the chunked visited-probe dedup are
+        # the exact survivors of the legacy `_dedup_first` (1-hop
+        # occurrences were just marked, earlier chunks mark as they go)
+        cid2 = jnp.where(s2, nb2, -1).reshape(qn, deg * deg)
+        (pool_d2, pool_id2, w_d2, w_id2, visited2,
+         _) = _score_insert_chunks(
+            queries, bitmaps, store, cid2, s2.reshape(qn, deg * deg)
+            & active[:, None], params.frontier_chunk2,
+            (pool_d2, pool_id2), (w_d2, w_id2), visited2, use_pallas,
+            dedup=True, quant=quant)
+
+    if tracing:   # this superstep's newly scored rows, in stamp order
+        hs = _stamp_newly_marked(hs, visited, visited2, step)
+    inc = lambda v: jnp.where(active, v, 0)
+    st2 = SearchStats(st.distance_comps + inc(dc),
+                      st.filter_checks + inc(fc),
+                      st.hops + inc(jnp.int32(1)),
+                      st.page_accesses_index + inc(pai),
+                      st.page_accesses_heap + inc(pah),
+                      st.tmap_lookups + inc(tm), st.reorder_rows)
+    return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2,
+            done | stop)
+
+
 def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                    params: SearchParams, entry, entry_d, stats: SearchStats,
                    ef_result: int, use_pallas: bool, trace=None):
@@ -934,193 +1144,125 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     expanded branch nodes for filter-first) stamp index_steps; each
     superstep's newly scored rows stamp heap_steps with the post-increment
     hop counter, so replay order is superstep-faithful (DESIGN.md §8).
+    The loop body is `_base_superstep` — the exact unit `step_supersteps`
+    drives externally in fixed-hop chunks (DESIGN.md §11).
     Returns (W_d, W_id sorted asc, stats, (heap_steps, index_steps)-or-None).
     """
     tracing = trace is not None
     hs, is_ = trace if tracing else \
         (jnp.zeros((queries.shape[0], 0), jnp.int32),) * 2
-    n = graph.n
     qn = queries.shape[0]
-    p = params.beam_width
-    strat = params.strategy
-    quant = params.graph_quant
-    ppv = _ppv(store, quant)
-    deg = graph.neighbors.shape[2]
-    nw = bitset_words(n)
-    tm_on = params.translation_map
-    we_idx = params.ef_search - 1 if ef_result >= params.ef_search \
-        else ef_result - 1
+    pool_d, pool_id, w_d, w_id, visited = _base_state_init(
+        graph, store, bitmaps, params, entry, entry_d, ef_result)
+    body = partial(_base_superstep, graph, store, queries, bitmaps, params,
+                   ef_result, use_pallas, tracing, None)
+    state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
+             jnp.zeros((qn,), bool))
+    pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, _ = \
+        jax.lax.while_loop(lambda s: ~s[-1].all(), body, state)
+    return w_d, w_id, stats, ((hs, is_) if tracing else None)
 
+
+def _iter_state_init(graph: HNSWGraph, store: VectorStore, bitmaps,
+                     params: SearchParams, entry, entry_d):
+    """Initial (pool_d, pool_id, W_d, W_id, visited) for the iterative-scan
+    superstep engine.  W is the (EFMAX,) resumable result buffer — seeded
+    unconditionally with the entry (iterative_scan post-filters at emit
+    time), pool seeded at slot 0, entry marked visited."""
+    n = graph.n
+    qn = entry.shape[0]
+    p = params.beam_width
+    nw = bitset_words(n)
+    efmax = params.batch_tuples * params.max_rounds
     pool_d = jnp.full((qn, p), INF).at[:, 0].set(entry_d)
     pool_id = jnp.full((qn, p), -1, jnp.int32).at[:, 0].set(entry)
     visited = _mark_batch(jnp.zeros((qn, nw), jnp.uint32), entry[:, None],
                           jnp.ones((qn, 1), bool))
-    w_d = jnp.full((qn, ef_result), INF)
-    w_id = jnp.full((qn, ef_result), -1, jnp.int32)
-    entry_pass = _probe_batch(bitmaps, entry[:, None])[:, 0]
-    seed_ok = entry_pass | (strat in ("unfiltered", "iterative_scan"))
-    w_d = jnp.where(seed_ok[:, None], w_d.at[:, 0].set(entry_d), w_d)
-    w_id = jnp.where(seed_ok[:, None], w_id.at[:, 0].set(entry), w_id)
+    w_d = jnp.full((qn, efmax), INF).at[:, 0].set(entry_d)
+    w_id = jnp.full((qn, efmax), -1, jnp.int32).at[:, 0].set(entry)
+    return pool_d, pool_id, w_d, w_id, visited
 
-    def cond(state):
-        return ~state[-1].all()
 
-    def body(state):
-        pool_d, pool_id, w_d, w_id, visited, hs, is_, st, done = state
-        # the pool is kept sorted ascending, so the legacy argmin-pop is
-        # always slot 0; the pop itself is folded into the insertions
-        best_d, best_id = pool_d[:, 0], pool_id[:, 0]
-        w_worst = w_d[:, we_idx]
-        stop = (best_d > w_worst) | jnp.isinf(best_d) | \
-            (st.hops >= params.max_hops)
-        over = _budget_over(st, params, store.dim)
-        if over is not None:
-            stop = stop | over
-        active = ~done & ~stop
-        node = jnp.maximum(best_id, 0)
-        step = st.hops + 1          # this superstep's post-increment stamp
-        if tracing:   # adjacency read of the popped node (step ①)
-            is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
+def _iter_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
+                    params: SearchParams, use_pallas: bool, tracing: bool,
+                    deadline, state):
+    """One superstep of the iterative-scan engine on its 12-tuple state
+    `(pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, eff, rnd,
+    checked, done)`.
 
-        nb1 = graph.neighbors[0, node]                       # (Q, deg)
-        v1 = nb1 >= 0
-        unv1 = v1 & ~_probe_batch(visited, nb1)
+    Exactly one application of the legacy `_frontier_iterative` loop body:
+    retired (`done`) lanes are frozen (pops suppressed, merges identity,
+    counters masked), so applying the body k extra times to a finished
+    lane is a no-op — the property `step_supersteps` relies on
+    (DESIGN.md §11).  `deadline` is an optional (Q,) f32 per-lane cycle
+    budget (+inf = none) folded into `_budget_over` alongside the static
+    `params.deadline_cycles`, feeding both the emit trigger and the
+    `exhausted` finish condition like the static budget does.
+    """
+    (pool_d, pool_id, w_d, w_id, visited, hs, is_, st, eff, rnd, checked,
+     done) = state
+    quant = params.graph_quant
+    ppv = _ppv(store, quant)
+    efmax = params.batch_tuples * params.max_rounds
+    tm_on = params.translation_map
 
-        z = jnp.zeros((qn,), jnp.int32)
-        dc = fc = pai = pah = tm = z
-        pai = pai + 1                      # step ①: current node's index page
+    best_d, best_id = pool_d[:, 0], pool_id[:, 0]
+    w_worst = jnp.take_along_axis(
+        w_d, (jnp.minimum(eff, efmax) - 1)[:, None], axis=1)[:, 0]
+    over = _budget_over(st, params, store.dim, deadline)
+    batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
+        (st.hops >= params.max_hops)
+    if over is not None:
+        batch_done = batch_done | over
+    live = ~done
+    active = live & ~batch_done          # lanes that expand this step
 
-        if strat in ("unfiltered", "sweeping"):
-            # -------- traversal-first: score every unvisited 1-hop neighbor
-            score_m = unv1
-            n_s = score_m.sum(-1).astype(jnp.int32)
-            dc = dc + n_s
-            pah = pah + n_s * ppv
-            (pool_d2, pool_id2, w_d2, w_id2, visited2,
-             n_w) = _score_insert_chunks(
-                queries, bitmaps, store, nb1, score_m & active[:, None],
-                params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
-                visited, use_pallas,
-                sweep_worst=w_worst if strat == "sweeping" else None,
-                drop_head=active, quant=quant)
-            if strat == "sweeping":
-                fc = fc + n_w
-                tm = tm + jnp.where(tm_on, n_w, 0)
-                pai = pai + jnp.where(tm_on, 0, n_w)
-        else:
-            # -------- filter-first (acorn / navix): predicate subgraph
-            d1, pass1 = _frontier_scores(queries, store, nb1, bitmaps,
-                                         use_pallas, quant)
-            n1 = v1.sum(-1).astype(jnp.int32)
-            fc = fc + n1                               # check all 1-hop
-            tm = tm + jnp.where(tm_on, n1, 0)
-            pai = pai + jnp.where(tm_on, 0, n1)
-            pass1v = pass1 & v1
-            local_sel = pass1v.sum(-1) / jnp.maximum(n1, 1)
+    # ---- resume/emit path: filter the batch, maybe extend the scan
+    in_batch = jnp.arange(efmax)[None, :] < eff[:, None]
+    n_pass = (_probe_batch(bitmaps, w_id) & in_batch &
+              (w_id >= 0)).sum(-1)
+    newly = jnp.maximum(jnp.minimum(eff, efmax) - checked, 0)
+    fc_emit = jnp.where(live & batch_done, newly, 0)
+    tm_emit = jnp.where(tm_on, fc_emit, 0)
+    pai_emit = jnp.where(tm_on, 0, fc_emit)
+    enough = n_pass >= params.k
+    exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
+        (rnd + 1 >= params.max_rounds)
+    if over is not None:
+        exhausted = exhausted | over
+    finish = batch_done & (enough | exhausted)
+    extend = live & batch_done & ~finish
+    eff2 = jnp.where(extend, eff + params.batch_tuples, eff)
+    rnd2 = jnp.where(extend, rnd + 1, rnd)
+    checked2 = jnp.where(live & batch_done, jnp.minimum(eff, efmax),
+                         checked)
 
-            if strat == "acorn":
-                do_directed = jnp.zeros((qn,), bool)
-                do_twohop_all = jnp.ones((qn,), bool)
-            else:  # navix heuristics
-                h = params.navix_heuristic
-                if h == "blind":
-                    do_directed = jnp.zeros((qn,), bool)
-                    do_twohop_all = jnp.ones((qn,), bool)
-                elif h == "directed":
-                    do_directed = jnp.ones((qn,), bool)
-                    do_twohop_all = jnp.zeros((qn,), bool)
-                elif h == "onehop":
-                    do_directed = jnp.zeros((qn,), bool)
-                    do_twohop_all = jnp.zeros((qn,), bool)
-                else:  # adaptive-local (paper §2.3.4)
-                    do_directed = (local_sel > 0.08) & (local_sel <= 0.35)
-                    do_twohop_all = local_sel <= 0.08
+    # ---- normal expansion path (gated to active lanes)
+    node = jnp.maximum(best_id, 0)
+    step = st.hops + 1
+    if tracing:
+        is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
+    nb1 = graph.neighbors[0, node]
+    score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
+    n_s = score_m.sum(-1).astype(jnp.int32)
+    (pool_d2, pool_id2, w_d2, w_id2, visited2,
+     _) = _score_insert_chunks(
+        queries, bitmaps, store, nb1, score_m & active[:, None],
+        params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
+        visited, use_pallas, drop_head=active, quant=quant)
+    if tracing:
+        hs = _stamp_newly_marked(hs, visited, visited2, step)
 
-            # 1-hop: score the passing, unvisited ones
-            s1 = pass1v & unv1
-            n_s1 = s1.sum(-1).astype(jnp.int32)
-            dc = dc + n_s1
-            pah = pah + n_s1 * ppv
-
-            # decide which branches expand to 2 hops
-            expand_branch = v1
-            if params.adaptive_skip_2hop:
-                expand_branch = expand_branch & ~pass1v
-            if strat == "navix" and params.navix_heuristic in ("directed",
-                                                               "adaptive"):
-                rank = jnp.argsort(jnp.where(v1, d1, INF), axis=-1)
-                topr = jax.vmap(
-                    lambda r: jnp.zeros((deg,), bool)
-                    .at[r[: max(1, deg // 4)]].set(True))(rank)
-                directed_branch = expand_branch & topr
-                expand_branch = jnp.where(
-                    do_twohop_all[:, None], expand_branch,
-                    jnp.where(do_directed[:, None], directed_branch, False))
-                extra_rank_dc = jnp.where(
-                    do_directed, (v1 & ~s1).sum(-1), 0).astype(jnp.int32)
-                dc = dc + extra_rank_dc
-                pah = pah + extra_rank_dc * ppv
-            elif strat == "navix" and params.navix_heuristic == "onehop":
-                expand_branch = jnp.zeros_like(expand_branch)
-
-            n_exp = expand_branch.sum(-1).astype(jnp.int32)
-            pai = pai + n_exp                          # step ②: branch pages
-            if tracing:   # adjacency reads of the expanded branches
-                is_ = _stamp_batch(is_, nb1,
-                                   expand_branch & active[:, None], step)
-            nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
-            nb2 = jnp.where(v1[:, :, None], nb2, -1)
-            v2 = nb2 >= 0
-            pass2 = _probe_batch(bitmaps, nb2)
-            unv2 = v2 & ~_probe_batch(visited, nb2)
-            m2 = v2 & expand_branch[:, :, None]
-            n2 = m2.sum((-2, -1)).astype(jnp.int32)
-            fc = fc + n2                               # step ④: 2-hop checks
-            tm = tm + jnp.where(tm_on, n2, 0)
-            pai = pai + jnp.where(tm_on, 0, n2)
-            s2 = m2 & pass2 & unv2
-            n_s2 = s2.sum((-2, -1)).astype(jnp.int32)
-            dc = dc + n_s2                             # step ⑤
-            pah = pah + n_s2 * ppv
-
-            # 1-hop insertion + marking first (neighbor lists are
-            # duplicate-free, so every s1 candidate is a first occurrence
-            # of the legacy concat dedup); the pool pop rides along
-            ins1 = s1 & active[:, None]
-            in1_d = jnp.where(ins1, d1, INF)
-            in1_i = jnp.where(ins1, nb1, -1)
-            pool_d2, pool_id2 = _merge_smallest(pool_d, pool_id, in1_d,
-                                                in1_i, active)
-            w_d2, w_id2 = _merge_smallest(w_d, w_id, in1_d, in1_i)
-            visited2 = _mark_batch(visited, nb1, ins1)
-            # lazy 2-hop: survivors of the chunked visited-probe dedup are
-            # the exact survivors of the legacy `_dedup_first` (1-hop
-            # occurrences were just marked, earlier chunks mark as they go)
-            cid2 = jnp.where(s2, nb2, -1).reshape(qn, deg * deg)
-            (pool_d2, pool_id2, w_d2, w_id2, visited2,
-             _) = _score_insert_chunks(
-                queries, bitmaps, store, cid2, s2.reshape(qn, deg * deg)
-                & active[:, None], params.frontier_chunk2,
-                (pool_d2, pool_id2), (w_d2, w_id2), visited2, use_pallas,
-                dedup=True, quant=quant)
-
-        if tracing:   # this superstep's newly scored rows, in stamp order
-            hs = _stamp_newly_marked(hs, visited, visited2, step)
-        inc = lambda v: jnp.where(active, v, 0)
-        st2 = SearchStats(st.distance_comps + inc(dc),
-                          st.filter_checks + inc(fc),
-                          st.hops + inc(jnp.int32(1)),
-                          st.page_accesses_index + inc(pai),
-                          st.page_accesses_heap + inc(pah),
-                          st.tmap_lookups + inc(tm), st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2,
-                done | stop)
-
-    state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
-             jnp.zeros((qn,), bool))
-    pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, _ = \
-        jax.lax.while_loop(cond, body, state)
-    return w_d, w_id, stats, ((hs, is_) if tracing else None)
+    inc = lambda v: jnp.where(active, v, 0)
+    st2 = SearchStats(
+        st.distance_comps + inc(n_s),
+        st.filter_checks + fc_emit,
+        st.hops + inc(jnp.int32(1)),
+        st.page_accesses_index + inc(jnp.int32(1)) + pai_emit,
+        st.page_accesses_heap + inc(n_s * ppv),
+        st.tmap_lookups + tm_emit, st.reorder_rows)
+    return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2, eff2,
+            rnd2, checked2, done | (live & finish))
 
 
 def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
@@ -1141,93 +1283,20 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
     tracing = trace is not None
     hs, is_ = trace if tracing else \
         (jnp.zeros((queries.shape[0], 0), jnp.int32),) * 2
-    n = graph.n
     qn = queries.shape[0]
-    p = params.beam_width
-    quant = params.graph_quant
-    ppv = _ppv(store, quant)
-    nw = bitset_words(n)
-    efmax = params.batch_tuples * params.max_rounds
-    tm_on = params.translation_map
-
-    pool_d = jnp.full((qn, p), INF).at[:, 0].set(entry_d)
-    pool_id = jnp.full((qn, p), -1, jnp.int32).at[:, 0].set(entry)
-    visited = _mark_batch(jnp.zeros((qn, nw), jnp.uint32), entry[:, None],
-                          jnp.ones((qn, 1), bool))
-    w_d = jnp.full((qn, efmax), INF).at[:, 0].set(entry_d)
-    w_id = jnp.full((qn, efmax), -1, jnp.int32).at[:, 0].set(entry)
-
-    def cond(state):
-        return ~state[-1].all()
-
-    def body(state):
-        (pool_d, pool_id, w_d, w_id, visited, hs, is_, st, eff, rnd, checked,
-         done) = state
-        best_d, best_id = pool_d[:, 0], pool_id[:, 0]
-        w_worst = jnp.take_along_axis(
-            w_d, (jnp.minimum(eff, efmax) - 1)[:, None], axis=1)[:, 0]
-        over = _budget_over(st, params, store.dim)
-        batch_done = (best_d > w_worst) | jnp.isinf(best_d) | \
-            (st.hops >= params.max_hops)
-        if over is not None:
-            batch_done = batch_done | over
-        live = ~done
-        active = live & ~batch_done          # lanes that expand this step
-
-        # ---- resume/emit path: filter the batch, maybe extend the scan
-        in_batch = jnp.arange(efmax)[None, :] < eff[:, None]
-        n_pass = (_probe_batch(bitmaps, w_id) & in_batch &
-                  (w_id >= 0)).sum(-1)
-        newly = jnp.maximum(jnp.minimum(eff, efmax) - checked, 0)
-        fc_emit = jnp.where(live & batch_done, newly, 0)
-        tm_emit = jnp.where(tm_on, fc_emit, 0)
-        pai_emit = jnp.where(tm_on, 0, fc_emit)
-        enough = n_pass >= params.k
-        exhausted = jnp.isinf(best_d) | (st.hops >= params.max_hops) | \
-            (rnd + 1 >= params.max_rounds)
-        if over is not None:
-            exhausted = exhausted | over
-        finish = batch_done & (enough | exhausted)
-        extend = live & batch_done & ~finish
-        eff2 = jnp.where(extend, eff + params.batch_tuples, eff)
-        rnd2 = jnp.where(extend, rnd + 1, rnd)
-        checked2 = jnp.where(live & batch_done, jnp.minimum(eff, efmax),
-                             checked)
-
-        # ---- normal expansion path (gated to active lanes)
-        node = jnp.maximum(best_id, 0)
-        step = st.hops + 1
-        if tracing:
-            is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
-        nb1 = graph.neighbors[0, node]
-        score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
-        n_s = score_m.sum(-1).astype(jnp.int32)
-        (pool_d2, pool_id2, w_d2, w_id2, visited2,
-         _) = _score_insert_chunks(
-            queries, bitmaps, store, nb1, score_m & active[:, None],
-            params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
-            visited, use_pallas, drop_head=active, quant=quant)
-        if tracing:
-            hs = _stamp_newly_marked(hs, visited, visited2, step)
-
-        inc = lambda v: jnp.where(active, v, 0)
-        st2 = SearchStats(
-            st.distance_comps + inc(n_s),
-            st.filter_checks + fc_emit,
-            st.hops + inc(jnp.int32(1)),
-            st.page_accesses_index + inc(jnp.int32(1)) + pai_emit,
-            st.page_accesses_heap + inc(n_s * ppv),
-            st.tmap_lookups + tm_emit, st.reorder_rows)
-        return (pool_d2, pool_id2, w_d2, w_id2, visited2, hs, is_, st2, eff2,
-                rnd2, checked2, done | (live & finish))
-
+    pool_d, pool_id, w_d, w_id, visited = _iter_state_init(
+        graph, store, bitmaps, params, entry, entry_d)
+    body = partial(_iter_superstep, graph, store, queries, bitmaps, params,
+                   use_pallas, tracing, None)
     state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
              jnp.full((qn,), params.batch_tuples, jnp.int32),
              jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
              jnp.zeros((qn,), bool))
     (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, eff, rnd, checked,
-     _) = jax.lax.while_loop(cond, body, state)
+     _) = jax.lax.while_loop(lambda s: ~s[-1].all(), body, state)
     trace_out = (hs, is_) if tracing else None
+    quant = params.graph_quant
+    efmax = params.batch_tuples * params.max_rounds
 
     if quant == "sq8" and params.sq8_rerank:
         r = min(params.k * params.reorder_factor, efmax)
@@ -1300,3 +1369,264 @@ def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
     if quant == "sq8" and rerank_rows is not None:
         trace["rerank_rows"] = rerank_rows
     return dk, ids, stats, trace
+
+
+# ===========================================================================
+# Externally stepped frontier driver (DESIGN.md §11).
+#
+# `search_batch` runs the superstep loop to completion inside one
+# `lax.while_loop`.  Continuous batching needs the same loop *stepped from
+# the outside* in fixed-hop chunks so a scheduler can retire finished lanes
+# and admit waiting queries between chunks.  The contract that makes chunked
+# execution bit-identical to the one-shot loop: the superstep body is an
+# exact no-op on done lanes (pops suppressed via `drop_head=active`, all-INF
+# merges are identity, counter increments masked), and each lane's
+# trajectory depends only on its own row of the state — so the sequence of
+# *effective* body applications per lane is the same no matter how the hops
+# are chunked or which other lanes share the batch.
+#
+#   frontier_init       (Q, …) queries -> FrontierState (one compile per
+#                       (Q, knobs) shape; the scheduler always calls it
+#                       with Q=1 and writes the lane into the pool)
+#   step_supersteps     advance every non-done lane up to n_hops supersteps
+#   frontier_finalize   harvest ids/dists/stats/trace from the current state
+#   frontier_write_slot splice a 1-lane state into slot `slot` of a pool
+#   frontier_idle       an all-done pool to boot the scheduler from
+# ===========================================================================
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FrontierState:
+    """Full per-lane frontier engine state, one row per slot.
+
+    A pytree of (S, …) arrays: jitted steppers compile once per slot-count
+    S and knob set, never per occupancy pattern.  `hs`/`is_` are the
+    storage-trace stamp buffers ((S, n) int32 first-touch supersteps, or
+    (S, 0) when tracing is off — the width doubles as the tracing flag).
+    `deadline` is a per-lane anytime budget in modeled cycles (+inf = no
+    deadline); it is data, not a compile-time knob, which is what lets one
+    compiled stepper serve every deadline bucket.  `eff`/`rnd`/`checked`
+    are the iterative_scan resume cursors (zeros for the base engine).
+    `done` is the active-slot mask's complement: done lanes are frozen by
+    the superstep bodies and can be harvested/replaced at any chunk edge.
+    """
+    queries: Array
+    bitmaps: Array
+    pool_d: Array
+    pool_id: Array
+    w_d: Array
+    w_id: Array
+    visited: Array
+    hs: Array
+    is_: Array
+    stats: SearchStats
+    deadline: Array
+    eff: Array
+    rnd: Array
+    checked: Array
+    done: Array
+
+
+@partial(jax.jit, static_argnames=("params", "collect_trace"))
+def _frontier_init_jit(graph, store, queries, bitmaps, deadline,
+                       params: SearchParams, collect_trace: bool):
+    n = graph.n
+    qn = queries.shape[0]
+    quant = params.graph_quant
+
+    def zoom(q):
+        trace = ((jnp.full((n,), TRACE_UNTOUCHED, jnp.int32),) * 2
+                 if collect_trace else None)
+        return _zoom_in(graph, store, q, SearchStats.zeros(), trace=trace,
+                        quant=quant)
+
+    entry, entry_d, stats, zoom_trace = jax.vmap(zoom)(queries)
+    hs, is_ = zoom_trace if collect_trace else \
+        (jnp.zeros((qn, 0), jnp.int32),) * 2
+    if params.strategy == "iterative_scan":
+        pool_d, pool_id, w_d, w_id, visited = _iter_state_init(
+            graph, store, bitmaps, params, entry, entry_d)
+        eff = jnp.full((qn,), params.batch_tuples, jnp.int32)
+    else:
+        pool_d, pool_id, w_d, w_id, visited = _base_state_init(
+            graph, store, bitmaps, params, entry, entry_d, params.ef_search)
+        eff = jnp.zeros((qn,), jnp.int32)
+    return FrontierState(
+        queries=queries, bitmaps=bitmaps, pool_d=pool_d, pool_id=pool_id,
+        w_d=w_d, w_id=w_id, visited=visited, hs=hs, is_=is_, stats=stats,
+        deadline=deadline, eff=eff, rnd=jnp.zeros((qn,), jnp.int32),
+        checked=jnp.zeros((qn,), jnp.int32), done=jnp.zeros((qn,), bool))
+
+
+def frontier_init(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
+                  params: SearchParams, collect_trace: bool = False,
+                  deadlines=None) -> FrontierState:
+    """Zoom-in + state init for the stepped frontier driver.
+
+    Runs the same vmapped `_zoom_in` as `_frontier_search_batch` (upper
+    HNSW layers, stats seeded with the zoom-in counters, trace stamps when
+    `collect_trace`), then builds the engine state for `params.strategy`.
+    `deadlines` is an optional per-query modeled-cycle budget ((Q,) float,
+    +inf or None entries meaning "none"); it rides in the state as data so
+    the stepper compiles once across deadline buckets (DESIGN.md §11).
+    """
+    qn = queries.shape[0]
+    deadline = (jnp.full((qn,), jnp.inf, jnp.float32) if deadlines is None
+                else jnp.asarray(deadlines, jnp.float32))
+    return _frontier_init_jit(graph, store, queries, bitmaps, deadline,
+                              params, collect_trace)
+
+
+@partial(jax.jit,
+         static_argnames=("params", "n_hops", "use_pallas",
+                          "dynamic_deadline"))
+def step_supersteps(graph: HNSWGraph, store: VectorStore,
+                    state: FrontierState, params: SearchParams, n_hops: int,
+                    use_pallas: bool = False,
+                    dynamic_deadline: bool = False) -> FrontierState:
+    """Advance every non-done lane by up to `n_hops` supersteps.
+
+    The inner `lax.while_loop` exits early once every lane is done, so
+    chunked execution applies the body the exact same number of effective
+    times as the one-shot loop — chunk boundaries are unobservable in the
+    results (bit-identical ids/dists/stats; tests/test_continuous.py).
+    One jit cache entry per (slot-count, params, n_hops, flags) — the
+    scheduler keeps `n_hops` fixed so the pool compiles once.
+
+    `dynamic_deadline=True` additionally compares each lane's modeled
+    cycles against `state.deadline` inside `_budget_over` (identical f32
+    arithmetic to the static `params.deadline_cycles` path).  It is a
+    static flag so deadline-free pools keep the jaxpr-identity guarantee
+    of the budget-free loop.
+    """
+    tracing = state.hs.shape[1] > 0
+    deadline = state.deadline if dynamic_deadline else None
+    if params.strategy == "iterative_scan":
+        body = partial(_iter_superstep, graph, store, state.queries,
+                       state.bitmaps, params, use_pallas, tracing, deadline)
+        tup = (state.pool_d, state.pool_id, state.w_d, state.w_id,
+               state.visited, state.hs, state.is_, state.stats, state.eff,
+               state.rnd, state.checked, state.done)
+    else:
+        body = partial(_base_superstep, graph, store, state.queries,
+                       state.bitmaps, params, params.ef_search, use_pallas,
+                       tracing, deadline)
+        tup = (state.pool_d, state.pool_id, state.w_d, state.w_id,
+               state.visited, state.hs, state.is_, state.stats, state.done)
+
+    def cond(c):
+        return (c[0] < n_hops) & ~c[1][-1].all()
+
+    _, out = jax.lax.while_loop(cond, lambda c: (c[0] + 1, body(c[1])),
+                                (jnp.int32(0), tup))
+    if params.strategy == "iterative_scan":
+        (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, eff, rnd,
+         checked, done) = out
+        return dataclasses.replace(
+            state, pool_d=pool_d, pool_id=pool_id, w_d=w_d, w_id=w_id,
+            visited=visited, hs=hs, is_=is_, stats=stats, eff=eff, rnd=rnd,
+            checked=checked, done=done)
+    pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, done = out
+    return dataclasses.replace(
+        state, pool_d=pool_d, pool_id=pool_id, w_d=w_d, w_id=w_id,
+        visited=visited, hs=hs, is_=is_, stats=stats, done=done)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def frontier_finalize(graph: HNSWGraph, store: VectorStore,
+                      state: FrontierState, params: SearchParams):
+    """Harvest (dists, ids, stats, trace-or-None) from the current state.
+
+    Runs the identical post-loop emit as `_frontier_search_batch`: sq8
+    beams are exactly re-scored from the full-precision heap
+    (`_rerank_beam` / `_iter_emit_sq8`) and results are top-k'd with the
+    per-strategy filter check.  Pure function of the state — harvesting a
+    pool mid-flight does not disturb lanes still running; the scheduler
+    slices out the rows of lanes it is retiring.  The trace dict matches
+    `search_batch(collect_trace=True)`: first-touch superstep stamps plus
+    `rerank_rows` under sq8.
+    """
+    tracing = state.hs.shape[1] > 0
+    quant = params.graph_quant
+    stats = state.stats
+    rerank_rows = None
+    if params.strategy == "iterative_scan":
+        efmax = params.batch_tuples * params.max_rounds
+        if quant == "sq8" and params.sq8_rerank:
+            r = min(params.k * params.reorder_factor, efmax)
+            dk, out_ids, n_r, cand = jax.vmap(
+                lambda q, wd, wi, bm, e: _iter_emit_sq8(
+                    store, q, wd, wi, bm, e, params.k, r))(
+                state.queries, state.w_d, state.w_id, state.bitmaps,
+                state.eff)
+            ppv_full = heap_pages_per_vector(store.dim)
+            stats = SearchStats(
+                stats.distance_comps + n_r, stats.filter_checks, stats.hops,
+                stats.page_accesses_index,
+                stats.page_accesses_heap + n_r * ppv_full,
+                stats.tmap_lookups, stats.reorder_rows + n_r)
+            rerank_rows = cand
+        else:
+            def emit(d, ids, bm, eff_q):
+                in_batch = jnp.arange(efmax) < eff_q
+                dm = jnp.where(in_batch, d, INF)
+                im = jnp.where(in_batch, ids, -1)
+                dk, pos = topk_smallest(
+                    jnp.where(probe_bitmap(bm, im) & (im >= 0), dm, INF),
+                    params.k)
+                return dk, jnp.where(jnp.isinf(dk), -1, im[pos])
+
+            dk, out_ids = jax.vmap(emit)(state.w_d, state.w_id,
+                                         state.bitmaps, state.eff)
+    else:
+        w_d, w_id = state.w_d, state.w_id
+        if quant == "sq8" and params.sq8_rerank:
+            w_d, stats = jax.vmap(
+                lambda q, wi, st: _rerank_beam(store, q, wi, st))(
+                state.queries, w_id, stats)
+            rerank_rows = w_id
+        check = params.strategy in ("unfiltered",)
+        dk, out_ids = jax.vmap(
+            lambda wd, wi, bm: _finalize(wd, wi, bm, params.k,
+                                         check_filter=not check))(
+                                             w_d, w_id, state.bitmaps)
+    if not tracing:
+        return dk, out_ids, stats, None
+    trace = {"heap_steps": state.hs, "index_steps": state.is_}
+    if quant == "sq8" and rerank_rows is not None:
+        trace["rerank_rows"] = rerank_rows
+    return dk, out_ids, stats, trace
+
+
+@jax.jit
+def frontier_write_slot(state: FrontierState, lane: FrontierState,
+                        slot) -> FrontierState:
+    """Splice lane 0 of a width-1 state into row `slot` of a pool state.
+
+    `slot` is a traced scalar, so admitting into any slot reuses one
+    compiled entry.  Leaf-wise `dynamic_update_index_in_dim` over the
+    pytree — every per-lane array (including the SearchStats leaves and
+    the trace stamp rows) is replaced wholesale, so a freed slot carries
+    nothing over from its previous occupant.
+    """
+    return jax.tree_util.tree_map(
+        lambda dst, src: jax.lax.dynamic_update_index_in_dim(
+            dst, src[0], slot, axis=0), state, lane)
+
+
+def frontier_idle(graph: HNSWGraph, store: VectorStore,
+                  params: SearchParams, width: int,
+                  collect_trace: bool = False) -> FrontierState:
+    """An all-done width-`width` pool state to boot a scheduler from.
+
+    Built by running `frontier_init` on zero queries/empty bitmaps and
+    marking every lane done — so the pool's array shapes (and therefore
+    the stepper's compile key) are fixed before the first request arrives.
+    Idle lanes are never stepped (done) and never harvested.
+    """
+    queries = jnp.zeros((width, store.dim), jnp.float32)
+    bitmaps = jnp.zeros((width, bitset_words(store.n)), jnp.uint32)
+    state = frontier_init(graph, store, queries, bitmaps, params,
+                          collect_trace=collect_trace)
+    return dataclasses.replace(state, done=jnp.ones((width,), bool))

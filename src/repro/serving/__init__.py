@@ -1,8 +1,11 @@
 from repro.serving.engine import ServeEngine
+from repro.serving.continuous import (ContinuousServer, FairQueue, Request,
+                                      SlotPool, results_in_order)
 from repro.serving.rag import (LadderRung, RetrievalAugmentedServer,
                                admission_floor, bucket_deadline,
                                default_ladder, price_ladder)
 
 __all__ = ["ServeEngine", "RetrievalAugmentedServer", "LadderRung",
            "admission_floor", "bucket_deadline", "default_ladder",
-           "price_ladder"]
+           "price_ladder", "ContinuousServer", "FairQueue", "Request",
+           "SlotPool", "results_in_order"]

@@ -1,0 +1,506 @@
+"""Continuous-batching frontier serving engine (DESIGN.md §11).
+
+`serve_queue` (rag.py) is batch-synchronous: a dispatch batch enters the
+frontier engine together and leaves together, so one straggler (a
+sparse-filter query burning its full hop budget) holds every co-batched
+request hostage — the serving-layer head-of-line blocking the paper's
+closed-loop Table 7 cannot see.  The frontier superstep loop already
+carries per-query done/budget state; this module steps it *externally*
+(`GraphExecutor.step_frontier`, fixed-hop chunks) over a fixed-width
+`SlotPool` so finished lanes retire mid-flight and waiting requests are
+admitted into freed slots without waiting for anyone else — LLM-serving
+continuous batching applied to filtered vector search.
+
+Pieces:
+
+  Request             one arrival: query row, filter bitmap, tenant id,
+                      arrival tick, optional deadline (modeled cycles)
+  FairQueue           arrival queue with per-tenant weighted deficit
+                      round-robin (weights=None -> plain FIFO), optional
+                      centroid-affinity pop preference
+  SlotPool            the compile-once pool: admit / step / harvest over
+                      a FrontierState of fixed width, storage-trace
+                      accounting and per-request AnytimeInfo flags
+  ContinuousServer    the event loop in virtual time (1 tick = 1 hop
+                      chunk): open-loop arrivals, queue-aware admission,
+                      fairness, degradation-ladder walks for faulted /
+                      budget-exhausted retires, and a batch-synchronous
+                      comparator mode on the same pool
+
+Correctness bar (tests/test_continuous.py): with fairness off and all
+arrivals at t=0, harvested ids/dists are bit-identical to
+`serve_queue(policy="fifo")`, and per-request SearchStats are
+arrival-order-invariant — each lane's trajectory depends only on its own
+row of the pool state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.executor import GraphExecutor
+from repro.core.types import SearchParams, SearchStats
+from repro.serving.rag import (LadderRung, admission_floor, bucket_deadline,
+                               find_scann_index, nearest_centroid)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving arrival.  `deadline_cycles` <= 0 means no deadline;
+    positive deadlines are bucketed (`bucket_deadline`) at admission so
+    flag derivation matches the batch-synchronous path bit-for-bit."""
+    rid: int
+    query: np.ndarray           # (dim,) float32
+    bitmap: np.ndarray          # (words,) uint32 packed filter
+    tenant: int = 0
+    arrival: int = 0            # tick the request becomes visible
+    deadline_cycles: float = 0.0
+
+
+class FairQueue:
+    """Arrival queue with per-tenant weighted fair service.
+
+    Deficit round-robin over tenant ids: each visit to a tenant's queue
+    adds `weight * quantum` to its deficit counter; serving one request
+    costs 1.  A tenant with weight 2 therefore drains twice as fast as a
+    tenant with weight 1 under contention, and an idle tenant's deficit
+    is cleared (no banked credit — classic DRR).  `weights=None` is
+    plain FIFO across all tenants (the bit-identicality mode).
+
+    `pop(prefer_key)` optionally serves the first request *of the chosen
+    tenant* whose centroid key matches `prefer_key` (slot-affinity
+    composes with fairness: fairness picks WHO, affinity picks WHICH of
+    theirs).  Under FIFO the scan covers the whole queue in arrival
+    order, so affinity never reorders across what fairness would pick.
+    """
+
+    def __init__(self, weights: Optional[dict] = None,
+                 quantum: float = 1.0):
+        if weights is not None:
+            for t, w in weights.items():
+                if w <= 0:
+                    raise ValueError(
+                        f"tenant {t!r} weight must be > 0, got {w}")
+        self.weights = weights
+        self.quantum = quantum
+        self._fifo: deque[Request] = deque()
+        self._tenants: "OrderedDict[int, deque[Request]]" = OrderedDict()
+        self._deficit: dict[int, float] = {}
+
+    def __len__(self) -> int:
+        if self.weights is None:
+            return len(self._fifo)
+        return sum(len(d) for d in self._tenants.values())
+
+    def push(self, req: Request) -> None:
+        if self.weights is None:
+            self._fifo.append(req)
+            return
+        if req.tenant not in self._tenants:
+            self._tenants[req.tenant] = deque()
+            self._deficit[req.tenant] = 0.0
+        self._tenants[req.tenant].append(req)
+
+    @staticmethod
+    def _take(dq: deque, prefer_key, keys) -> Request:
+        if prefer_key is not None and keys is not None:
+            for i, r in enumerate(dq):
+                if keys.get(r.rid) == prefer_key:
+                    del dq[i]
+                    return r
+        return dq.popleft()
+
+    def pop(self, prefer_key=None, keys: Optional[dict] = None
+            ) -> Optional[Request]:
+        if self.weights is None:
+            if not self._fifo:
+                return None
+            return self._take(self._fifo, prefer_key, keys)
+        if not len(self):
+            return None
+        # DRR: cycle tenants in arrival order; the loop terminates
+        # because every full round adds >= min weight * quantum to some
+        # non-empty tenant's deficit
+        while True:
+            for t in list(self._tenants):
+                dq = self._tenants[t]
+                if not dq:
+                    self._deficit[t] = 0.0      # no banked credit
+                    continue
+                self._deficit[t] += \
+                    self.weights.get(t, 1.0) * self.quantum
+                if self._deficit[t] >= 1.0:
+                    self._deficit[t] -= 1.0
+                    req = self._take(dq, prefer_key, keys)
+                    # rotate so the next pop resumes AFTER this tenant
+                    self._tenants.move_to_end(t)
+                    return req
+
+
+class SlotPool:
+    """Fixed-width pool of frontier lanes, stepped in hop chunks.
+
+    The pool state is one `FrontierState` of width `width`; every jitted
+    entry point (idle init, per-request init, slot write, step, harvest)
+    compiles once per (width, resolved params, hop_chunk, flags) and is
+    reused for the whole run — `compiles` property reports the distinct
+    cache keys touched, asserted bounded in tests.  Storage-trace
+    collection follows the executor's storage attachment exactly like
+    `GraphExecutor.execute`; harvested lanes replay only their own trace
+    rows through the buffer pool.
+    """
+
+    def __init__(self, executor: GraphExecutor, params: SearchParams,
+                 width: int, hop_chunk: int = 8,
+                 dynamic_deadline: bool = False):
+        if width <= 0:
+            raise ValueError(f"slot pool width must be > 0, got {width}")
+        if hop_chunk <= 0:
+            raise ValueError(f"hop_chunk must be > 0, got {hop_chunk}")
+        self.executor = executor
+        self.params = executor.resolve_params(params)
+        self.width = width
+        self.hop_chunk = hop_chunk
+        self.dynamic_deadline = dynamic_deadline
+        self.state = executor.idle_frontier(self.params, width)
+        self.occupied = np.zeros(width, bool)
+        self.slot_rid = np.full(width, -1, np.int64)
+        self.slot_bucket = np.zeros(width, np.float64)
+        self.slot_key = np.full(width, -1, np.int64)   # centroid affinity
+        self._keys: set = {("idle", self.params, width)}
+
+    @property
+    def compiles(self) -> int:
+        return len(self._keys)
+
+    def free_slots(self) -> np.ndarray:
+        return np.flatnonzero(~self.occupied)
+
+    def done_slots(self) -> np.ndarray:
+        return np.flatnonzero(self.occupied
+                              & np.asarray(self.state.done))
+
+    def all_done(self) -> bool:
+        return bool((~self.occupied | np.asarray(self.state.done)).all())
+
+    def admit(self, req: Request, slot: int, key: int = -1) -> None:
+        """Write one request into a free slot (fresh lane state from
+        `frontier_init`; the previous occupant's rows are replaced
+        wholesale, trace stamps included)."""
+        if self.occupied[slot]:
+            raise ValueError(f"slot {slot} is occupied")
+        bucket = bucket_deadline(req.deadline_cycles) \
+            if req.deadline_cycles > 0 else 0.0
+        dl = np.asarray([bucket if bucket > 0 else np.inf], np.float32)
+        lane = self.executor.init_frontier(
+            jnp.asarray(req.query)[None], jnp.asarray(req.bitmap)[None],
+            self.params, deadlines=dl)
+        self._keys.add(("init", self.params, 1))
+        self.state = self.executor.write_frontier_slot(self.state, lane,
+                                                       slot)
+        self._keys.add(("write", self.width))
+        self.occupied[slot] = True
+        self.slot_rid[slot] = req.rid
+        self.slot_bucket[slot] = bucket
+        self.slot_key[slot] = key
+
+    def step(self) -> None:
+        self.state = self.executor.step_frontier(
+            self.state, self.params, self.hop_chunk,
+            dynamic_deadline=self.dynamic_deadline)
+        self._keys.add(("step", self.params, self.width, self.hop_chunk,
+                        self.dynamic_deadline))
+
+    def harvest(self, slots: np.ndarray) -> list[dict]:
+        """Finalize the pool and retire `slots`: returns one record per
+        slot with ids/dists/stats/AnytimeInfo (flags derived against the
+        request's own deadline bucket) and per-lane StorageStats when a
+        storage engine is attached.  Lanes not in `slots` keep running —
+        `frontier_finalize` is a pure function of the state."""
+        if not len(slots):
+            return []
+        d, ids, stats, trace = self.executor.finalize_frontier(
+            self.state, self.params)
+        self._keys.add(("final", self.params, self.width))
+        d = np.asarray(d)
+        ids = np.asarray(ids)
+        stats_np = {f: np.asarray(getattr(stats, f))
+                    for f in SearchStats.__dataclass_fields__}
+        out = []
+        for s in np.asarray(slots):
+            row = {f: stats_np[f][s:s + 1] for f in stats_np}
+            st_row = SearchStats(**row)
+            sstats = None
+            if trace is not None and self.executor.storage is not None:
+                rr = trace.get("rerank_rows")
+                sstats = self.executor.storage.account_graph(
+                    np.asarray(trace["heap_steps"])[s:s + 1],
+                    np.asarray(trace["index_steps"])[s:s + 1],
+                    rerank_rows=None if rr is None
+                    else np.asarray(rr)[s:s + 1],
+                    quant=self.executor.graph_quant == "sq8")
+            bucket = float(self.slot_bucket[s])
+            p = self.params if bucket <= 0 else dataclasses.replace(
+                self.params, deadline_cycles=bucket)
+            anytime = costmodel.evaluate_anytime(
+                st_row, p, self.executor.store.dim, ids[s],
+                hop_cap=p.max_hops)
+            out.append(dict(
+                rid=int(self.slot_rid[s]), slot=int(s),
+                ids=ids[s].copy(), dists=d[s].copy(), stats=st_row,
+                anytime=anytime, storage=sstats,
+                cycles=float(costmodel.linear_cycles(
+                    st_row, self.executor.store.dim)[0])))
+            self.occupied[s] = False
+            self.slot_rid[s] = -1
+            self.slot_bucket[s] = 0.0
+            self.slot_key[s] = -1
+        return out
+
+
+class ContinuousServer:
+    """Open-loop serving event loop over a `SlotPool`.
+
+    Virtual time advances one tick per stepped hop chunk (idle ticks when
+    the pool is empty and no arrival is due).  mode="continuous" admits
+    into any freed slot every tick; mode="batch" is the batch-synchronous
+    comparator — it admits only into an EMPTY pool and harvests only when
+    every occupied lane is done, so all co-batched requests share the
+    last finisher's retire tick (exactly `serve_queue`'s head-of-line
+    behavior, measured on the same engine).  Per-lane results are
+    identical in both modes; only the clock differs.
+
+    Admission composes three gates (DESIGN.md §11): the static
+    `admission_floor` (a deadline below the cheapest possible service is
+    rejected), the queue-aware floor (`costmodel.queue_aware_floor` —
+    the wait already visible in the queue, priced with a running mean of
+    completed requests' modeled cycles), and per-tenant weighted fairness
+    (`FairQueue`).  Faulted retires retry once on the primary executor;
+    still-faulted or budget-exhausted retires walk the degradation
+    `ladder` rung by rung as single-shot slot occupants (+1 tick per
+    rung — the slot is held one extra chunk per rung walked).
+    """
+
+    def __init__(self, executor: GraphExecutor, params: SearchParams,
+                 width: int = 8, hop_chunk: int = 8,
+                 fairness: Optional[dict] = None, assign: str = "fifo",
+                 ladder: Optional[list[LadderRung]] = None,
+                 admit: bool = True, slo_ticks: Optional[int] = None):
+        if assign not in ("fifo", "centroid"):
+            raise ValueError(f"unknown assign policy {assign!r}; "
+                             "expected 'fifo' or 'centroid'")
+        self.executor = executor
+        self.params = executor.resolve_params(params)
+        self.width = width
+        self.hop_chunk = hop_chunk
+        self.fairness = fairness
+        self.assign = assign
+        self.ladder = ladder
+        self.admit = admit
+        self.slo_ticks = slo_ticks
+
+    def _centroid_keys(self, requests: list[Request]) -> Optional[dict]:
+        if self.assign != "centroid":
+            return None
+        index = find_scann_index(self.executor)
+        if index is None:
+            return None
+        q = jnp.asarray(np.stack([r.query for r in requests]))
+        keys = np.asarray(nearest_centroid(index, q))
+        return {r.rid: int(k) for r, k in zip(requests, keys)}
+
+    def _prefer_key(self, pool: SlotPool) -> Optional[int]:
+        """Most common centroid key among active slots — admit requests
+        that will walk the neighborhoods the pool already has warm."""
+        act = pool.slot_key[pool.occupied & (pool.slot_key >= 0)]
+        if not len(act):
+            return None
+        vals, counts = np.unique(act, return_counts=True)
+        return int(vals[np.argmax(counts)])
+
+    def _ladder_walk(self, req: Request, rec: dict, bucket: float,
+                     pool: SlotPool) -> int:
+        """Retry-then-descend for a faulted/budget-exhausted retire.
+        Returns the extra ticks spent (1 per rung dispatch); mutates
+        `rec` in place with the serving rung's results/flags."""
+        p = self.params if bucket <= 0 else dataclasses.replace(
+            self.params, deadline_cycles=bucket)
+        q1 = jnp.asarray(req.query)[None]
+        b1 = jnp.asarray(req.bitmap)[None]
+        extra = 0
+        faulted = rec["storage"] is not None and \
+            bool(np.asarray(rec["storage"].faulted).any())
+        if faulted:
+            # transient faults: one retry on the primary before degrading
+            res = self.executor.search(q1, b1, p)
+            pool._keys.add(("rung", "primary", p, 1))
+            extra += 1
+            rec.update(ids=np.asarray(res.ids)[0],
+                       dists=np.asarray(res.dists)[0],
+                       anytime=res.anytime, storage=res.storage,
+                       retried=True)
+            faulted = res.storage is not None and \
+                bool(np.asarray(res.storage.faulted).any())
+        exhausted = rec["anytime"] is not None and \
+            bool(np.asarray(rec["anytime"].budget_exhausted).any())
+        if self.ladder is None or not (faulted or exhausted):
+            rec["rung"], rec["rung_level"] = "primary", 0
+            return extra
+        rec["rung"], rec["rung_level"] = "primary", 0
+        for level, rung in enumerate(self.ladder[1:], start=1):
+            rp = rung.resolve(p)
+            res = rung.executor.search(q1, b1, rp)
+            pool._keys.add(("rung", rung.name, rp, 1))
+            extra += 1
+            rec.update(ids=np.asarray(res.ids)[0],
+                       dists=np.asarray(res.dists)[0],
+                       anytime=res.anytime, storage=res.storage,
+                       rung=rung.name, rung_level=level)
+            faulted = res.storage is not None and \
+                bool(np.asarray(res.storage.faulted).any())
+            exhausted = res.anytime is not None and \
+                bool(np.asarray(res.anytime.budget_exhausted).any())
+            if not (faulted or exhausted):
+                break
+        return extra
+
+    def serve(self, requests: list[Request], mode: str = "continuous"
+              ) -> tuple[dict, dict]:
+        """Run the event loop over `requests` (any order; sorted by
+        arrival tick internally).  Returns (records, info): `records`
+        maps rid -> harvest record (ids, dists, stats, anytime, rung,
+        arrival/admit/retire ticks, latency_ticks); `info` carries the
+        run-level telemetry (compiles, ticks, slot utilization,
+        admission rejects, queue depth trace).
+        """
+        if mode not in ("continuous", "batch"):
+            raise ValueError(f"unknown mode {mode!r}; expected "
+                             "'continuous' or 'batch'")
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        n = len(pending)
+        any_deadline = any(r.deadline_cycles > 0 for r in pending)
+        pool = SlotPool(self.executor, self.params, self.width,
+                        self.hop_chunk, dynamic_deadline=any_deadline)
+        queue = FairQueue(self.fairness)
+        keys = self._centroid_keys(requests)
+        floor = admission_floor(self.executor.store, self.params) \
+            if (self.admit and any_deadline) else 0.0
+        records: dict[int, dict] = {}
+        rejected: list[int] = []
+        t = 0
+        ai = 0                       # arrival cursor into `pending`
+        step_ticks = 0
+        occupied_ticks = 0
+        queue_depth: list[int] = []
+        done_cycles: list[float] = []    # completed service, modeled cycles
+
+        def _enqueue_arrivals() -> None:
+            nonlocal ai
+            while ai < n and pending[ai].arrival <= t:
+                req = pending[ai]
+                ai += 1
+                if self.admit and req.deadline_cycles > 0:
+                    est = float(np.mean(done_cycles)) if done_cycles \
+                        else 0.0
+                    gate = costmodel.queue_aware_floor(
+                        floor, len(queue), self.width, est)
+                    if bucket_deadline(req.deadline_cycles) < gate:
+                        rejected.append(req.rid)
+                        records[req.rid] = dict(
+                            rid=req.rid, admitted=False, tenant=req.tenant,
+                            arrival_tick=req.arrival, retire_tick=-1,
+                            latency_ticks=-1,
+                            ids=np.full(self.params.k, -1, np.int32),
+                            dists=np.full(self.params.k, np.inf,
+                                          np.float32),
+                            stats=None, anytime=None, storage=None,
+                            rung="rejected", rung_level=-1, retried=False)
+                        continue
+                queue.push(req)
+
+        def _admit_free() -> None:
+            for s in pool.free_slots():
+                if not len(queue):
+                    break
+                prefer = self._prefer_key(pool) if keys is not None \
+                    else None
+                req = queue.pop(prefer_key=prefer, keys=keys)
+                key = keys.get(req.rid, -1) if keys is not None else -1
+                pool.admit(req, int(s), key=key)
+                by_rid[req.rid] = req
+                records[req.rid] = dict(
+                    rid=req.rid, admitted=True, tenant=req.tenant,
+                    arrival_tick=req.arrival, admit_tick=t,
+                    retried=False)
+
+        def _retire(slots: np.ndarray) -> None:
+            for rec in pool.harvest(slots):
+                req = by_rid[rec["rid"]]
+                bucket = bucket_deadline(req.deadline_cycles) \
+                    if req.deadline_cycles > 0 else 0.0
+                done_cycles.append(rec["cycles"])
+                extra = self._ladder_walk(req, rec, bucket, pool)
+                rec.setdefault("rung", "primary")
+                rec.setdefault("rung_level", 0)
+                rec.setdefault("retried", False)
+                rec["retire_tick"] = t + extra
+                records[req.rid].update(rec)
+                records[req.rid]["latency_ticks"] = \
+                    rec["retire_tick"] - req.arrival
+
+        by_rid: dict[int, Request] = {}
+        served = 0
+        while served < n - len(rejected) or ai < n:
+            _enqueue_arrivals()
+            if mode == "continuous":
+                _admit_free()
+            elif not pool.occupied.any():
+                _admit_free()        # batch: refill only an empty pool
+            queue_depth.append(len(queue))
+            if pool.occupied.any():
+                pool.step()
+                step_ticks += 1
+                occupied_ticks += int(pool.occupied.sum())
+                t += 1
+                if mode == "continuous":
+                    done = pool.done_slots()
+                elif pool.all_done():
+                    done = np.flatnonzero(pool.occupied)
+                else:
+                    done = np.empty(0, np.int64)
+                if len(done):
+                    _retire(done)
+                    served = sum(1 for r in records.values()
+                                 if r.get("retire_tick", -1) >= 0)
+            else:
+                t += 1               # idle tick: waiting on arrivals
+        info = dict(
+            mode=mode, ticks=t, step_ticks=step_ticks,
+            hop_chunk=self.hop_chunk, width=self.width,
+            compiles=pool.compiles,
+            slot_utilization=(occupied_ticks
+                              / max(step_ticks * self.width, 1)),
+            rejected=np.asarray(sorted(rejected), np.int64),
+            rejected_frac=len(rejected) / max(n, 1),
+            mean_queue_depth=float(np.mean(queue_depth))
+            if queue_depth else 0.0,
+            fairness="drr" if self.fairness is not None else "fifo",
+            assign=self.assign if keys is not None else "fifo")
+        return records, info
+
+
+def results_in_order(records: dict, nreq: int, k: int
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack harvested ids/dists back into arrival (rid) order — the
+    shape `serve_queue` returns, for bit-identicality checks."""
+    ids = np.full((nreq, k), -1, np.int32)
+    dists = np.full((nreq, k), np.inf, np.float32)
+    for rid, rec in records.items():
+        ids[rid] = rec["ids"]
+        dists[rid] = rec["dists"]
+    return ids, dists

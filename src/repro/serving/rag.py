@@ -26,6 +26,7 @@ hit-rate lift vs FIFO batching is directly measurable
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import warnings
 from typing import Callable, Optional
@@ -184,17 +185,27 @@ def bucket_deadline(deadline: float) -> float:
     return float(math.floor(deadline / scale + 1e-9) * scale)
 
 
+@functools.lru_cache(maxsize=256)
+def _admission_floor_cached(n: int, dim: int, k: int,
+                            constants) -> float:
+    w = costmodel.budget_cycle_weights(dim, constants)
+    ppv = heap_pages_per_vector(dim)
+    return (n * w["filter_checks"]
+            + k * (w["distance_comps"] + ppv * w["page_accesses_heap"]))
+
+
 def admission_floor(store, params: SearchParams,
                     constants=costmodel.SYSTEM) -> float:
     """Cheapest possible service in modeled cycles: the last rung's
     minimal partial scan (probe every filter bit, fetch+score k rows).
     A request whose deadline is below this cannot be served at ANY rung
-    and is rejected at admission rather than burning pool bandwidth."""
-    w = costmodel.budget_cycle_weights(store.dim, constants)
-    ppv = heap_pages_per_vector(store.dim)
-    return (store.n * w["filter_checks"]
-            + params.k * (w["distance_comps"]
-                          + ppv * w["page_accesses_heap"]))
+    and is rejected at admission rather than burning pool bandwidth.
+
+    Memoized on the values it actually depends on — (store.n, store.dim,
+    params.k, constants) — because continuous admission recomputes it per
+    arrival (CostConstants is frozen/hashable; `store` identity is
+    irrelevant beyond its shape)."""
+    return _admission_floor_cached(store.n, store.dim, params.k, constants)
 
 
 def price_ladder(rungs: list[LadderRung], params: SearchParams,
@@ -428,6 +439,10 @@ class RetrievalAugmentedServer:
         h0, m0 = (pool.counters.hits, pool.counters.misses) \
             if pool is not None else (0, 0)
         bm_np = np.asarray(bitmaps)
+        # distinct (rung, resolved-params, batch-width) jit cache keys
+        # this call would populate — the compile-cost telemetry the
+        # deadline bucketing exists to bound (DESIGN.md §10/§11)
+        compile_keys: set = set()
         order_adm = order[admitted[order]]
         for b in sorted(set(buckets[order_adm].tolist())):
             idxs = order_adm[buckets[order_adm] == b]
@@ -440,7 +455,8 @@ class RetrievalAugmentedServer:
                 strategies.append(self._ladder_dispatch(
                     q, bm_np, sel, params, ladder,
                     ids, dists, rung_names, rung_level,
-                    truncated, exhausted, faulted, retried))
+                    truncated, exhausted, faulted, retried,
+                    compile_keys))
         degraded = (rung_level > 0) | truncated | exhausted | faulted
         info = {"order": order, "strategies": strategies, "policy": policy,
                 "policy_effective": policy_effective,
@@ -449,7 +465,7 @@ class RetrievalAugmentedServer:
                 "admitted": admitted, "deadline_bucket": buckets,
                 "truncated": truncated, "budget_exhausted": exhausted,
                 "faulted": faulted, "retried": retried,
-                "degraded": degraded}
+                "degraded": degraded, "compiles": len(compile_keys)}
         if fallback_reason is not None:
             info["policy_fallback_reason"] = fallback_reason
         if pool is not None:
@@ -470,17 +486,23 @@ class RetrievalAugmentedServer:
 
     def _ladder_dispatch(self, q, bm_np, sel, params, ladder,
                          ids, dists, rung_names, rung_level,
-                         truncated, exhausted, faulted, retried) -> str:
+                         truncated, exhausted, faulted, retried,
+                         compile_keys: Optional[set] = None) -> str:
         """Serve one dispatch batch, walking the degradation ladder for
         requests that come back faulted or budget-exhausted.  Scatters
         results/flags into the queue-level output arrays; returns the
-        primary rung's strategy name (the batch's nominal strategy)."""
+        primary rung's strategy name (the batch's nominal strategy).
+        `compile_keys` accumulates the distinct (rung, resolved params,
+        batch width) combinations dispatched — each is one potential jit
+        cache entry (SearchParams and the batch shape are static args)."""
         pend = np.asarray(sel)
         batch_strategy = None
         for level, rung in enumerate(ladder):
             if not len(pend):
                 break
             rp = rung.resolve(params)
+            if compile_keys is not None:
+                compile_keys.add((rung.name, rp, len(pend)))
             res = self._run_rung(rung, q, bm_np, pend, rp)
             if level == 0:
                 batch_strategy = res.strategy
@@ -490,6 +512,8 @@ class RetrievalAugmentedServer:
                     # before any degradation (the injector's counter has
                     # advanced, so the retry draws a fresh schedule)
                     bad = pend[f]
+                    if compile_keys is not None:
+                        compile_keys.add((rung.name, rp, len(bad)))
                     res2 = self._run_rung(rung, q, bm_np, bad, rp)
                     self._scatter(res2, bad, level, rung.name, ids, dists,
                                   rung_names, rung_level, truncated,

@@ -1,0 +1,336 @@
+"""Continuous-batching serving engine (DESIGN.md §11).
+
+Covers the external-stepping contract and the scheduler built on it:
+
+  - chunked `step_supersteps` is bit-identical to the one-shot
+    `lax.while_loop` (ids, dists, all 7 SearchStats counters) across all
+    five graph strategies x both graph_quant modes, chunk boundaries
+    included, storage traces included
+  - dynamic per-lane deadlines (data) match static `deadline_cycles`
+    (compile-time) exactly — the compile-once-across-buckets win
+  - slot retire/admit: per-request results and stats are
+    arrival-order-invariant (hypothesis property + deterministic grid)
+  - with fairness off and all arrivals at t=0, `ContinuousServer` is
+    bit-identical to `serve_queue(policy="fifo")`
+  - per-tenant DRR fairness: a flooding heavy tenant cannot starve a
+    light tenant past what FIFO would do at sub-saturation load
+  - compile-count telemetry stays bounded regardless of how many
+    distinct deadline buckets a workload carries
+  - `admission_floor` memoization and the costmodel queueing-delay term
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep (requirements-dev.txt):
+    # property tests skip individually; plain tests in this module still run
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    class st:  # stub strategies so decorator arguments still evaluate
+        integers = floats = sampled_from = staticmethod(
+            lambda *a, **k: None)
+
+from repro.core import (SearchParams, WorkloadSpec, generate_bitmaps,
+                        quantize_store, search_batch)
+from repro.core import costmodel
+from repro.core.executor import GraphExecutor
+from repro.core.graph_search import (frontier_finalize, frontier_init,
+                                     step_supersteps)
+from repro.serving.continuous import (ContinuousServer, FairQueue, Request,
+                                      SlotPool, results_in_order)
+from repro.serving.rag import (RetrievalAugmentedServer,
+                               _admission_floor_cached, admission_floor)
+
+STRATS = ("unfiltered", "sweeping", "acorn", "navix", "iterative_scan")
+STAT_FIELDS = ("distance_comps", "filter_checks", "hops",
+               "page_accesses_index", "page_accesses_heap", "tmap_lookups",
+               "reorder_rows")
+
+
+def _params(strategy, quant="none", **kw):
+    base = dict(k=5, ef_search=32, beam_width=32, max_hops=150,
+                strategy=strategy, graph_exec_mode="frontier",
+                graph_quant=quant)
+    base.update(kw)
+    return SearchParams(**base)
+
+
+def _stepped(graph, store, q, bm, p, chunks, collect_trace=False,
+             deadlines=None, dynamic=False):
+    state = frontier_init(graph, store, q, bm, p,
+                          collect_trace=collect_trace, deadlines=deadlines)
+    ci = 0
+    while not bool(np.asarray(state.done).all()):
+        state = step_supersteps(graph, store, state, p,
+                                chunks[min(ci, len(chunks) - 1)],
+                                dynamic_deadline=dynamic)
+        ci += 1
+    return frontier_finalize(graph, store, state, p)
+
+
+def _assert_same(ref, got, ctx):
+    d0, i0, s0 = ref[:3]
+    d1, i1, s1 = got[:3]
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1),
+                                  err_msg=f"ids diverged: {ctx}")
+    assert np.array_equal(np.asarray(d0), np.asarray(d1),
+                          equal_nan=True), f"dists diverged: {ctx}"
+    for f in STAT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(s0, f)), np.asarray(getattr(s1, f)),
+            err_msg=f"counter {f} diverged: {ctx}")
+
+
+@pytest.mark.parametrize("quant", ("none", "sq8"))
+@pytest.mark.parametrize("strategy", STRATS)
+def test_stepped_equivalence(small_dataset, small_graph, strategy, quant):
+    """Chunked external stepping == one-shot while_loop, bitwise, for
+    every strategy x quant combination (the acceptance grid)."""
+    store, queries = small_dataset
+    store = quantize_store(store)
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"), seed=7)
+    p = _params(strategy, quant)
+    ref = search_batch(small_graph, store, queries, bm, p)
+    got = _stepped(small_graph, store, queries, bm, p, chunks=(16,))
+    _assert_same(ref, got, f"{strategy}/{quant}")
+
+
+@pytest.mark.parametrize("strategy", ("sweeping", "iterative_scan"))
+def test_stepped_chunk_boundaries(small_dataset, small_graph, strategy):
+    """Chunk boundaries are unobservable: ragged chunk sizes (1, 7, 64)
+    give the same bits as any other chunking, traces included."""
+    store, queries = small_dataset
+    store = quantize_store(store)
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.1, "high_pos"),
+                          seed=3)
+    p = _params(strategy, "sq8")
+    ref = search_batch(small_graph, store, queries, bm, p,
+                       collect_trace=True)
+    got = _stepped(small_graph, store, queries, bm, p, chunks=(1, 7, 64),
+                   collect_trace=True)
+    _assert_same(ref, got, strategy)
+    for key in ref[3]:
+        np.testing.assert_array_equal(
+            np.asarray(ref[3][key]), np.asarray(got[3][key]),
+            err_msg=f"trace {key} diverged: {strategy}")
+
+
+@pytest.mark.parametrize("strategy", ("sweeping", "iterative_scan"))
+def test_dynamic_deadline_matches_static(small_dataset, small_graph,
+                                         strategy):
+    """A per-lane deadline array (data) reproduces the static
+    `deadline_cycles` compile (knob) bit-for-bit — one compiled stepper
+    covers every deadline bucket."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.1, "none"), seed=5)
+    base = _params(strategy, max_hops=300)
+    for dl in (4e5, 2e6):
+        pstat = dataclasses.replace(base, deadline_cycles=dl)
+        ref = search_batch(small_graph, store, queries, bm, pstat)
+        got = _stepped(small_graph, store, queries, bm, base, chunks=(16,),
+                       deadlines=np.full(queries.shape[0], dl, np.float32),
+                       dynamic=True)
+        _assert_same(ref, got, f"{strategy}/deadline={dl}")
+
+
+def _requests(queries, bm, nreq, arrivals=None, tenants=None,
+              deadlines=None):
+    bm = np.asarray(bm)
+    q = np.asarray(queries)
+    nq = q.shape[0]
+    return [Request(rid=i, query=q[i % nq], bitmap=bm[i % nq],
+                    tenant=0 if tenants is None else tenants[i],
+                    arrival=0 if arrivals is None else int(arrivals[i]),
+                    deadline_cycles=0.0 if deadlines is None
+                    else float(deadlines[i]))
+            for i in range(nreq)]
+
+
+@pytest.fixture(scope="module")
+def serving_setup(small_dataset, small_graph):
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.3, "none"), seed=9)
+    p = _params("sweeping")
+    ex = GraphExecutor(small_graph, store, strategy="sweeping")
+    ref = search_batch(small_graph, store, queries, bm, p)
+    return store, queries, bm, p, ex, ref
+
+
+def test_continuous_matches_serve_queue(serving_setup):
+    """Fairness off + all arrivals at t=0: slot-retire ids/dists are
+    bit-identical to the batch-synchronous serve_queue path."""
+    store, queries, bm, p, ex, _ = serving_setup
+    n = queries.shape[0]
+    qt = jnp.asarray(queries)
+    srv = RetrievalAugmentedServer(
+        bundle=None, params=None, executor=ex, search_params=p,
+        doc_tokens=np.zeros((store.n, 4), np.int32), chunk_len=4,
+        embed_fn=lambda pr, tok: qt[tok[:, 0]])
+    res, info = srv.serve_queue(np.arange(n, dtype=np.int32)[:, None],
+                                bm, batch_size=4, policy="fifo")
+    assert info["compiles"] >= 1          # telemetry present
+    cs = ContinuousServer(ex, p, width=4, hop_chunk=8)
+    recs, cinfo = cs.serve(_requests(queries, bm, n), mode="continuous")
+    ids, dists = results_in_order(recs, n, p.k)
+    np.testing.assert_array_equal(np.asarray(res.ids), ids)
+    assert np.array_equal(np.asarray(res.dists), dists, equal_nan=True)
+    # batch comparator mode: same bits, different clock
+    recs_b, _ = cs.serve(_requests(queries, bm, n), mode="batch")
+    ids_b, _ = results_in_order(recs_b, n, p.k)
+    np.testing.assert_array_equal(ids, ids_b)
+
+
+def _order_invariance_check(serving_setup, perm, arrivals):
+    store, queries, bm, p, ex, ref = serving_setup
+    n = queries.shape[0]
+    d_ref, i_ref, s_ref = ref
+    reqs = _requests(queries, bm, n)
+    reqs = [reqs[j] for j in perm]
+    for pos, r in enumerate(reqs):
+        reqs[pos] = dataclasses.replace(r, arrival=int(arrivals[pos]))
+    cs = ContinuousServer(ex, p, width=3, hop_chunk=8)
+    recs, _ = cs.serve(reqs, mode="continuous")
+    ids, dists = results_in_order(recs, n, p.k)
+    np.testing.assert_array_equal(np.asarray(i_ref), ids)
+    assert np.array_equal(np.asarray(d_ref), dists, equal_nan=True)
+    for rid in range(n):
+        for f in STAT_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(s_ref, f))[rid:rid + 1],
+                np.asarray(getattr(recs[rid]["stats"], f)),
+                err_msg=f"stats {f} depend on arrival order (rid {rid})")
+
+
+def test_retire_admit_deterministic_orders(serving_setup):
+    """Per-request results/stats are invariant under two fixed arrival
+    permutations (runs even without hypothesis)."""
+    n = serving_setup[1].shape[0]
+    rng = np.random.RandomState(0)
+    for _ in range(2):
+        perm = rng.permutation(n)
+        arrivals = np.sort(rng.randint(0, 6, n))
+        _order_invariance_check(serving_setup, perm, arrivals)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_retire_admit_property(serving_setup, seed):
+    """Hypothesis: ANY arrival order / spacing harvests the same bits
+    per request — lanes are independent rows of the pool state."""
+    n = serving_setup[1].shape[0]
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    arrivals = np.sort(rng.randint(0, 10, n))
+    _order_invariance_check(serving_setup, perm, arrivals)
+
+
+def test_tenant_fairness_no_starvation(serving_setup):
+    """A heavy tenant flooding the queue at t=0 cannot starve a light
+    tenant under DRR: the light tenant's worst latency is strictly
+    better than under FIFO, where it drains dead last."""
+    store, queries, bm, p, ex, _ = serving_setup
+    n_heavy, n_light = 16, 4
+    n = n_heavy + n_light
+    tenants = [0] * n_heavy + [1] * n_light
+    reqs = _requests(queries, bm, n, tenants=tenants)
+    lat = {}
+    for name, fairness in (("fifo", None), ("drr", {0: 1.0, 1: 1.0})):
+        cs = ContinuousServer(ex, p, width=2, hop_chunk=8,
+                              fairness=fairness)
+        recs, _ = cs.serve(list(reqs), mode="continuous")
+        lat[name] = max(recs[r]["latency_ticks"]
+                        for r in range(n_heavy, n))
+        # fairness must not change any request's results
+        ids, _ = results_in_order(recs, n, p.k)
+        np.testing.assert_array_equal(
+            ids[n_heavy:],
+            np.asarray([recs[r]["ids"] for r in range(n_heavy, n)]))
+    assert lat["drr"] < lat["fifo"], (
+        f"DRR light-tenant worst latency {lat['drr']} not better than "
+        f"FIFO {lat['fifo']}")
+
+
+def test_compiles_bounded_across_deadline_buckets(serving_setup):
+    """Dynamic per-lane deadlines keep the jit cache bounded: 8 distinct
+    deadline buckets must NOT add 8 stepper compiles (the static-arg
+    path would).  Budget flags still derive per-request."""
+    store, queries, bm, p, ex, _ = serving_setup
+    n = queries.shape[0]
+    floor = admission_floor(store, p)
+    deadlines = [floor * (2.0 + i) for i in range(n)]   # n distinct buckets
+    reqs = _requests(queries, bm, n, deadlines=deadlines)
+    cs = ContinuousServer(ex, p, width=4, hop_chunk=8)
+    recs, info = cs.serve(reqs, mode="continuous")
+    assert len({bucketed for bucketed in deadlines}) == n
+    assert info["compiles"] <= 6, (
+        f"{info['compiles']} compiles for {n} deadline buckets — the "
+        "slot pool is supposed to compile once")
+    assert all(recs[r]["anytime"] is not None for r in range(n))
+
+
+def test_admission_rejects_subfloor_deadline(serving_setup):
+    store, queries, bm, p, ex, _ = serving_setup
+    floor = admission_floor(store, p)
+    reqs = _requests(queries, bm, 2, deadlines=[0.5 * floor, 10 * floor])
+    cs = ContinuousServer(ex, p, width=2, hop_chunk=8)
+    recs, info = cs.serve(reqs, mode="continuous")
+    assert not recs[0]["admitted"] and recs[0]["rung"] == "rejected"
+    assert (recs[0]["ids"] == -1).all()
+    assert recs[1]["admitted"] and recs[1]["retire_tick"] >= 0
+    assert info["rejected_frac"] == 0.5
+
+
+def test_fair_queue_validation_and_fifo():
+    with pytest.raises(ValueError, match="weight must be > 0"):
+        FairQueue({0: 0.0})
+    q = FairQueue(None)
+    for i in range(3):
+        q.push(Request(rid=i, query=np.zeros(2), bitmap=np.zeros(1)))
+    assert [q.pop().rid for _ in range(3)] == [0, 1, 2]
+    assert q.pop() is None
+
+
+def test_slot_pool_validation(serving_setup):
+    store, queries, bm, p, ex, _ = serving_setup
+    with pytest.raises(ValueError, match="width"):
+        SlotPool(ex, p, width=0)
+    pool = SlotPool(ex, p, width=2)
+    req = Request(rid=0, query=np.asarray(queries[0]),
+                  bitmap=np.asarray(bm)[0])
+    pool.admit(req, 0)
+    with pytest.raises(ValueError, match="occupied"):
+        pool.admit(req, 0)
+
+
+def test_admission_floor_memoized(serving_setup):
+    store, _, _, p, _, _ = serving_setup
+    _admission_floor_cached.cache_clear()
+    a = admission_floor(store, p)
+    h0 = _admission_floor_cached.cache_info().hits
+    b = admission_floor(store, p)
+    assert a == b
+    assert _admission_floor_cached.cache_info().hits == h0 + 1
+    # different k -> different cache entry, not a stale hit
+    c = admission_floor(store, dataclasses.replace(p, k=p.k * 2))
+    assert c > a
+
+
+def test_queueing_delay_properties():
+    s, c = 1000.0, 4
+    assert costmodel.queueing_delay_cycles(0.0, s, c) == 0.0
+    loads = [0.5 * c / s, 0.8 * c / s, 0.95 * c / s]
+    waits = [costmodel.queueing_delay_cycles(lam, s, c) for lam in loads]
+    assert waits[0] < waits[1] < waits[2], "wait not monotone in load"
+    assert np.isinf(costmodel.queueing_delay_cycles(1.2 * c / s, s, c))
+    # queue-aware floor: identity on an empty queue, additive otherwise
+    assert costmodel.queue_aware_floor(5.0, 0, c, s) == 5.0
+    assert costmodel.queue_aware_floor(5.0, 8, 4, s) == 5.0 + 2 * s

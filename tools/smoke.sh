@@ -38,5 +38,6 @@ python benchmarks/fig_planner.py --tiny || exit 1
 python benchmarks/bench_storage.py --tiny || exit 1
 python benchmarks/bench_graph_quant.py --tiny || exit 1
 python benchmarks/bench_robustness.py --tiny || exit 1
+python benchmarks/bench_serving.py --tiny || exit 1
 
 exit "$tier1"
