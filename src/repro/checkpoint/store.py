@@ -36,7 +36,14 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    extra: Optional[dict] = None) -> str:
+                    extra: Optional[dict] = None,
+                    fsync: bool = False) -> str:
+    """Write one checkpoint.  `fsync=True` is the crash-consistency mode
+    (DESIGN.md §12): every leaf file, the manifest, and the parent
+    directory entry are fsynced BEFORE the atomic rename publishes the
+    step — a checkpoint a WAL compaction marker points at must actually
+    be on storage, or recovery could land on a marker whose checkpoint
+    evaporated with the page cache."""
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -46,16 +53,39 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     manifest = {"step": step, "leaves": {}, "extra": extra or {}}
     for name, leaf in _leaf_paths(tree):
         arr = np.asarray(leaf)
-        np.save(os.path.join(tmp, name + ".npy"), arr)
+        path = os.path.join(tmp, name + ".npy")
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            if fsync:
+                f.flush()
+                os.fsync(f.fileno())
         manifest["leaves"][name] = {
             "shape": list(arr.shape), "dtype": str(arr.dtype),
             "bytes": int(arr.nbytes)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic publish
+    if fsync:
+        dfd = os.open(directory, os.O_RDONLY)
+        try:
+            os.fsync(dfd)          # durably order the rename itself
+        finally:
+            os.close(dfd)
     return final
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The step's manifest (step, leaves index, extra) without restoring
+    any arrays — recovery reads `extra` first to learn the shapes the
+    `tree_like` for restore_checkpoint must have."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -6,7 +6,7 @@ from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, AnytimeInfo,
                               pack_bitmap, pack_bool_bitmap, probe_bitmap,
                               quant_heap_pages_per_vector, quantize_store,
                               recall_at_k, sq8_quantize, topk_smallest,
-                              unpack_bitmap)
+                              unpack_bitmap, bitmap_andnot, merge_topk)
 from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
                                  WorkloadSpec, generate_bitmaps,
                                  generate_grid, generate_passing_rows)
@@ -24,9 +24,12 @@ from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
                                   modeled_qps, predict_counters,
                                   predict_cycles, stats_table_row)
 from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
-                                 Executor, GraphExecutor, ScannExecutor,
-                                 SearchPlan, index_shape, make_executor,
-                                 GRAPH_SQ8_METHODS, REGISTERED_METHODS)
+                                 DeltaExecutor, Executor, GraphExecutor,
+                                 ScannExecutor, SearchPlan, index_shape,
+                                 make_executor, GRAPH_SQ8_METHODS,
+                                 REGISTERED_METHODS)
+from repro.core.mutable import (MergedResult, MutableIndex,
+                                rebuild_oracle_store)
 
 __all__ = [
     "METRIC_COS", "METRIC_IP", "METRIC_L2", "AnytimeInfo",
@@ -49,4 +52,6 @@ __all__ = [
     "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
     "ScannExecutor", "SearchPlan", "index_shape", "make_executor",
     "GRAPH_SQ8_METHODS", "REGISTERED_METHODS",
+    "bitmap_andnot", "merge_topk", "DeltaExecutor",
+    "MergedResult", "MutableIndex", "rebuild_oracle_store",
 ]

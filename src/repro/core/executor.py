@@ -45,7 +45,7 @@ from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
                               scann_search_batch,
                               scann_search_batch_vmapped)
 from repro.core.types import (SearchParams, SearchResult, SearchStats,
-                              VectorStore, heap_pages_per_vector,
+                              VectorStore, distance, heap_pages_per_vector,
                               probe_bitmap, quantize_store, topk_smallest)
 from repro.storage.engine import StorageEngine
 
@@ -417,6 +417,96 @@ class BruteForceExecutor(BaseExecutor):
                             anytime=costmodel.evaluate_anytime(
                                 None, plan.params, self.store.dim, ids,
                                 extra_budget=truncated))
+
+
+# ---------------------------------------------------------------------------
+# The mutable delta tier's executor (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "metric", "base_n"))
+def _delta_scan(vectors, norms_sq, count, queries, bitmaps, k: int,
+                metric: str, base_n: int):
+    """Exact filtered scan of the capacity-padded delta buffer.
+
+    The buffer has STATIC shape (capacity, dim) and only `count` (a
+    traced scalar) changes as the tier fills — one compile per capacity,
+    never per mutation.  Rows >= count and rows failing the bitmap (probed
+    at their GLOBAL ids, so the caller's tombstone-composed filter bitmap
+    applies unchanged) score +inf.  The distance expression is the same
+    elementwise-plus-last-axis-sum `distance()` the bruteforce oracle
+    evaluates, so merged results are bit-identical to a from-scratch
+    rebuild, not approximately equal."""
+    cap = vectors.shape[0]
+    local = jnp.arange(cap)
+    gids = base_n + local
+    live = local < count
+    passing = jax.vmap(lambda bm: probe_bitmap(bm, gids))(bitmaps) \
+        & live[None, :]
+    d = distance(metric, queries[:, None, :], vectors[None, :, :],
+                 norms_sq[None, :])
+    d = jnp.where(passing, d, jnp.inf)
+    dists, idx = topk_smallest(d, min(k, cap))
+    ids = jnp.where(jnp.isinf(dists), -1, base_n + idx)
+    if k > cap:                       # static pad: tier smaller than k
+        dists = jnp.pad(dists, ((0, 0), (0, k - cap)),
+                        constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - cap)), constant_values=-1)
+    return dists, ids, passing.sum(1).astype(jnp.int32)
+
+
+class DeltaExecutor(BaseExecutor):
+    """Exact scan over the LSM delta tier (storage.delta.DeltaTier) —
+    the unindexed mutable tail every base strategy's top-k merges with
+    (`core.mutable.MutableIndex` / `types.merge_topk`).
+
+    Seqscan counter semantics scaled to the tier: every live delta row is
+    filter-checked, passing rows are fetched full-width and scored
+    (`costmodel.delta_scan_counters`).  With a `storage` engine attached
+    (built with delta_capacity=) the per-query scan replays through the
+    pool's "delta" segment."""
+
+    name = "delta"
+
+    def __init__(self, tier, metric: str,
+                 storage: Optional[StorageEngine] = None):
+        self.tier = tier
+        self.metric = metric
+        self.storage = storage
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        if params.strategy != "delta":
+            params = dataclasses.replace(params, strategy="delta")
+        # snapshot the mutable tier at plan time: a consistent
+        # (count, base_n, rows) view even if mutations land mid-request
+        notes = {"count": int(self.tier.count),
+                 "base_n": int(self.tier.base_n),
+                 "vectors": np.array(self.tier.vectors, np.float32)}
+        return SearchPlan("delta", params, queries, bitmaps, notes=notes)
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        notes = plan.notes
+        vecs = jnp.asarray(notes["vectors"])
+        # eager per-row norms, the exact expression VectorStore.build uses
+        nsq = jnp.sum(vecs * vecs, axis=-1)
+        count = notes["count"]
+        d, ids, npass = _delta_scan(vecs, nsq, jnp.int32(count),
+                                    plan.queries, plan.bitmaps,
+                                    plan.params.k, self.metric,
+                                    notes["base_n"])
+        q = plan.queries.shape[0]
+        z = jnp.zeros((q,), jnp.int32)
+        ppv = heap_pages_per_vector(vecs.shape[1])
+        stats = SearchStats(
+            distance_comps=npass, filter_checks=z + count, hops=z,
+            page_accesses_index=z, page_accesses_heap=npass * ppv,
+            tmap_lookups=z, reorder_rows=z)
+        sstats = None
+        if self.storage is not None:
+            sstats = self.storage.account_delta_scan(count, q)
+        return SearchResult(dists=d, ids=ids, stats=stats,
+                            strategy="delta", plan=plan, storage=sstats,
+                            anytime=costmodel.evaluate_anytime(
+                                None, plan.params, vecs.shape[1], ids))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,463 @@
+"""Crash-consistent live ingestion over the immutable index tiers
+(DESIGN.md §12).
+
+`MutableIndex` is the streaming-mutability subsystem the ROADMAP's
+north star needs: the build-time artifacts (HNSW graph, ScaNN leaves,
+SQ8 shadows) stay immutable, and live mutation flows through three
+coupled mechanisms —
+
+  insert  -> WAL record, fsync, then append to the LSM delta tier
+             (storage/delta.py) — an unindexed capacity-padded segment
+             scanned exactly by core.executor.DeltaExecutor;
+  delete  -> WAL record, fsync, then a tombstone bit — composed into
+             every query's filter bitmap (types.bitmap_andnot), so the
+             row vanishes from all strategies without touching an index;
+  search  -> any base executor's top-k over [0, base_n) merged with the
+             delta scan's top-k via types.merge_topk — bit-identical to
+             a from-scratch oracle over the union (`MergedResult`);
+  compact -> fold the delta into a rebuilt base (new ScaNN leaves, new
+             graph, re-calibrated SQ8 quantizer for drift), save a FULL
+             checkpoint, then log a COMPACT marker.
+
+Durability protocol (WAL rules): a mutation is applied to memory only
+after its record is durably fsynced; `recover()` = restore the latest
+checkpoint, then replay WAL records with lsn > the checkpoint's
+applied_lsn.  The deterministic crash harness (tests/test_wal_recovery)
+kills this pipeline at every record byte boundary and asserts recovered
+search results are bit-identical to a reference that saw the same
+durable prefix.
+
+Id space is append-only and stable: base rows keep ids [0, base_n),
+delta rows get base_n + local, compaction grows the base underneath the
+same ids, and deletes never reclaim ids (the tombstone is forever —
+dead rows ride through compaction masked, and are pruned from rebuilt
+ScaNN leaf postings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (latest_step, read_manifest,
+                                    restore_checkpoint, save_checkpoint)
+from repro.core.executor import DeltaExecutor, make_executor
+from repro.core.hnsw import build_graph
+from repro.core.scann import build_scann
+from repro.core.types import (SearchParams, SearchResult, VectorStore,
+                              bitset_words, merge_topk, quantize_store)
+from repro.storage import wal as W
+from repro.storage.delta import DeltaTier, Tombstones
+from repro.storage.engine import StorageEngine, make_storage_engine
+from repro.storage.faults import FaultInjector, FaultPlan
+
+
+@dataclasses.dataclass
+class MergedResult:
+    """A base executor's answer fused with the delta tier's exact scan.
+
+    dists/ids are the merged (Q, k) top-k; `stats` sums both legs'
+    SearchStats (the delta leg's seqscan counters ride on top of the base
+    strategy's); `base`/`delta` keep the full per-leg SearchResults for
+    storage/anytime introspection."""
+
+    dists: Any
+    ids: Any
+    stats: Any
+    strategy: str
+    base: SearchResult
+    delta: SearchResult
+
+
+def _clip_bitmap(words: np.ndarray, n: int) -> np.ndarray:
+    """Zero every bit >= n (and return a copy) — the base executors' view
+    of a capacity-wide bitmap must not count delta-row bits."""
+    out = np.array(words, np.uint32, copy=True)
+    nw = bitset_words(n)
+    out[..., nw:] = 0
+    rem = n & 31
+    if rem:
+        out[..., nw - 1] &= np.uint32((1 << rem) - 1)
+    return out
+
+
+class MutableIndex:
+    """WAL-backed mutable vector index: immutable base tiers + LSM delta
+    tier + tombstones, with checkpointed compaction and crash recovery.
+
+    `capacity` bounds the TOTAL id space ever allocated (base + all
+    inserts across all compactions) — filter bitmaps are sized to it once
+    and stay jit-shape-stable for the index's whole life.  Mutations are
+    applied only after their WAL record is fsynced; write-path faults
+    (FaultPlan.wal_torn_prob / fsync_fail_prob) surface as
+    WalTornWrite/WalSyncError with the in-memory state deterministically
+    NOT advanced (the failed batch was simply never written).
+    """
+
+    def __init__(self, base_vectors: np.ndarray, wal_path: str,
+                 ckpt_dir: str, *, metric: str = "l2",
+                 capacity: Optional[int] = None,
+                 delta_capacity: int = 256,
+                 num_leaves: int = 16, graph_m: int = 12,
+                 ef_construction: int = 48, seed: int = 0,
+                 with_graph: bool = True, with_scann: bool = True,
+                 with_storage: bool = False,
+                 storage_capacity_frac: float = 0.5,
+                 wal_pages: int = 64,
+                 faults: Optional[FaultPlan] = None,
+                 _defer_build: bool = False):
+        base_vectors = np.asarray(base_vectors, np.float32)
+        self.metric = metric
+        self.delta_capacity = int(delta_capacity)
+        self.capacity = int(capacity if capacity is not None
+                            else base_vectors.shape[0]
+                            + 4 * self.delta_capacity)
+        self.num_leaves = num_leaves
+        self.graph_m = graph_m
+        self.ef_construction = ef_construction
+        self.seed = seed
+        self.with_graph = with_graph
+        self.with_scann = with_scann
+        self.with_storage = with_storage
+        self.storage_capacity_frac = storage_capacity_frac
+        self.wal_pages_budget = wal_pages
+        self.faults = faults
+        self.wal_path = wal_path
+        self.ckpt_dir = ckpt_dir
+
+        self._injector = (FaultInjector(faults)
+                          if faults is not None and faults.active else None)
+        self.applied_lsn = 0
+        self._ckpt_step = 0
+        self.compactions = 0
+        # cumulative logical bytes the USER asked to write (the
+        # write-amplification denominator)
+        self.user_bytes = 0
+
+        if not _defer_build:
+            self._build_base(base_vectors)
+            self.delta = DeltaTier(base_n=self.base_n,
+                                   capacity=self.delta_capacity,
+                                   dim=base_vectors.shape[1])
+            self.tombstones = Tombstones(self.capacity)
+            self._open_wal()
+
+    # -- construction internals ---------------------------------------------
+    def _build_base(self, vectors: np.ndarray) -> None:
+        """(Re)build every base tier from `vectors` — used at init, after
+        compaction, and during recovery.  Deterministic given (vectors,
+        seed): recovery rebuilds the exact artifacts the crashed process
+        had."""
+        self.store = quantize_store(VectorStore.build(vectors, self.metric))
+        self.scann = (build_scann(self.store, self.num_leaves,
+                                  seed=self.seed)
+                      if self.with_scann else None)
+        self.graph = (build_graph(self.store, m=self.graph_m,
+                                  ef_construction=self.ef_construction,
+                                  seed=self.seed)
+                      if self.with_graph else None)
+        self._executors: dict[str, Any] = {}
+        self.engine: Optional[StorageEngine] = None
+        if self.with_storage:
+            self.engine = make_storage_engine(
+                self.store, self.scann, self.graph,
+                capacity_frac=self.storage_capacity_frac,
+                delta_capacity=self.delta_capacity,
+                wal_pages=self.wal_pages_budget)
+            if self._injector is not None:
+                self.engine.pool.faults = self._injector
+
+    def _open_wal(self) -> None:
+        hook = None
+        if self.engine is not None:
+            def hook(offset, nbytes, kind):
+                if kind == "append":
+                    self.engine.account_wal_append(offset, nbytes)
+                else:
+                    self.engine.account_wal_sync()
+        self.wal = W.WriteAheadLog(self.wal_path, faults=self._injector,
+                                   page_hook=hook)
+
+    @property
+    def base_n(self) -> int:
+        return int(self.store.n)
+
+    @property
+    def live_count(self) -> int:
+        return self.base_n + self.delta.count - self.tombstones.count
+
+    def words(self) -> int:
+        """Filter-bitmap word count callers must size to (fixed for
+        life)."""
+        return bitset_words(self.capacity)
+
+    # -- the durability choke point -----------------------------------------
+    def _log(self, kind: int, payload: bytes) -> W.WalRecord:
+        """Append + fsync one record; memory is mutated only after this
+        returns.  Injected write faults leave the log in a deterministic
+        clean state (torn fragment discarded / un-synced tail rolled
+        back) and re-raise — the mutation never happened."""
+        try:
+            rec = self.wal.append(kind, payload)
+        except W.WalTornWrite:
+            self.wal.discard_torn()
+            raise
+        try:
+            self.wal.sync()
+        except W.WalSyncError:
+            self.wal.rollback_to_durable()
+            raise
+        return rec
+
+    # -- mutation API -------------------------------------------------------
+    def insert(self, rows: np.ndarray) -> np.ndarray:
+        """Durably insert a batch; returns the new global ids.  Auto-
+        compacts first when the delta tier cannot hold the batch."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != self.store.dim:
+            raise ValueError(f"expected (m, {self.store.dim}) rows, got "
+                             f"{rows.shape}")
+        m = rows.shape[0]
+        if m > self.delta_capacity:
+            raise ValueError(f"batch of {m} exceeds delta capacity "
+                             f"{self.delta_capacity}")
+        if self.delta.count + m > self.delta_capacity:
+            self.compact()
+        start = self.base_n + self.delta.count
+        if start + m > self.capacity:
+            raise ValueError(f"id space exhausted: {start}+{m} > capacity "
+                             f"{self.capacity}")
+        rec = self._log(W.REC_INSERT, W.encode_insert(start, rows))
+        local_lo = self.delta.count
+        ids = self.delta.append(rows)
+        self.applied_lsn = rec.lsn
+        self.user_bytes += int(rows.nbytes)
+        if self.engine is not None:
+            self.engine.account_delta_write(
+                np.arange(local_lo, local_lo + m))
+        return ids
+
+    def delete(self, ids: np.ndarray) -> int:
+        """Durably tombstone ids; returns how many were newly dead.
+        Deleting an id that was never allocated is an error; deleting a
+        dead id is an idempotent no-op (still logged — replay is
+        idempotent too)."""
+        ids = np.unique(np.asarray(ids, np.int64))
+        if ids.size and (ids.min() < 0
+                         or ids.max() >= self.base_n + self.delta.count):
+            raise ValueError("delete of unallocated id")
+        rec = self._log(W.REC_DELETE, W.encode_delete(ids))
+        newly = self.tombstones.mark(ids)
+        self.applied_lsn = rec.lsn
+        self.user_bytes += int(ids.nbytes)
+        if self.engine is not None and ids.size:
+            self.engine.account_tombstone_write(ids)
+        return newly
+
+    # -- search -------------------------------------------------------------
+    def _executor(self, method: str):
+        if method not in self._executors:
+            self._executors[method] = make_executor(
+                method, self.store, graph=self.graph, index=self.scann,
+                storage=self.engine)
+        return self._executors[method]
+
+    def _delta_executor(self) -> DeltaExecutor:
+        if "delta" not in self._executors:
+            self._executors["delta"] = DeltaExecutor(
+                self.delta, self.metric, storage=self.engine)
+        return self._executors["delta"]
+
+    def search(self, queries, bitmaps, params: SearchParams,
+               method: str = "bruteforce") -> MergedResult:
+        """Filtered top-k over base + delta − tombstones.
+
+        `bitmaps` (Q, words(capacity)) packed filter bitmaps over GLOBAL
+        ids (narrower bitmaps are zero-padded: rows the filter predates
+        don't pass).  The tombstone bitmap is AND-NOT-composed first, so
+        every strategy sees deletes identically; the base executor runs
+        on the bits < base_n, the delta scan on the full live bitmap, and
+        the two top-k sets merge bit-identically to a from-scratch
+        oracle (base-first concat == id-ascending tie order)."""
+        bm = np.asarray(bitmaps, np.uint32)
+        w = self.words()
+        if bm.shape[-1] < w:
+            bm = np.concatenate(
+                [bm, np.zeros(bm.shape[:-1] + (w - bm.shape[-1],),
+                              np.uint32)], -1)
+        live = self.tombstones.live_mask(bm)
+        base_bm = jnp.asarray(
+            _clip_bitmap(live, self.base_n)[..., :bitset_words(self.base_n)])
+        base_res = self._executor(method).search(
+            jnp.asarray(queries), base_bm, params)
+        delta_res = self._delta_executor().search(
+            jnp.asarray(queries), jnp.asarray(live), params)
+        dists, ids = merge_topk(base_res.dists, base_res.ids,
+                                delta_res.dists, delta_res.ids, params.k)
+        return MergedResult(dists=dists, ids=ids,
+                            stats=base_res.stats + delta_res.stats,
+                            strategy=method, base=base_res,
+                            delta=delta_res)
+
+    # -- checkpoint / compaction --------------------------------------------
+    def _state_tree(self) -> dict:
+        return {"base": np.asarray(self.store.vectors),
+                "delta": self.delta.vectors.copy(),
+                "tomb": self.tombstones.words.copy()}
+
+    def _state_extra(self, kind: str) -> dict:
+        return {"kind": kind, "base_n": self.base_n,
+                "count": int(self.delta.count),
+                "applied_lsn": int(self.applied_lsn),
+                "capacity": self.capacity,
+                "delta_capacity": self.delta_capacity,
+                "compactions": self.compactions}
+
+    def checkpoint(self) -> int:
+        """Durably snapshot (base, delta, tombstones) + applied_lsn;
+        recovery replays only WAL records past it.  Returns the step."""
+        self._ckpt_step += 1
+        save_checkpoint(self.ckpt_dir, self._ckpt_step, self._state_tree(),
+                        extra=self._state_extra("delta"), fsync=True)
+        self._log(W.REC_CHECKPOINT,
+                  W.encode_meta({"step": self._ckpt_step,
+                                 "applied_lsn": int(self.applied_lsn)}))
+        if self.engine is not None:
+            self.engine.account_checkpoint(self.delta.count)
+        return self._ckpt_step
+
+    def compact(self) -> None:
+        """Fold the delta tier into a rebuilt base: new base array (ids
+        stable, tombstoned rows ride along dead), fresh ScaNN leaves with
+        dead rows pruned from the postings, fresh graph, and an SQ8
+        quantizer re-calibrated on the post-drift distribution.  Ordering
+        is the crash-safety core: the FULL checkpoint of the folded state
+        is durably saved BEFORE the COMPACT marker enters the WAL, so
+        every crash point recovers deterministically (before the
+        checkpoint -> replay rebuilds the pre-compaction state; after it
+        -> the checkpoint IS the folded state and the marker is a
+        no-op)."""
+        count = self.delta.count
+        if self.engine is not None:
+            self.engine.account_compaction_read(count)
+        new_base = np.concatenate(
+            [np.asarray(self.store.vectors),
+             self.delta.vectors[:count]], axis=0)
+        self._build_base(new_base)           # scann/graph/SQ8 recalibrated
+        if self.scann is not None:
+            dead = self.tombstones.is_dead(
+                np.maximum(np.asarray(self.scann.leaf_rowids), 0))
+            pruned = np.where(dead & (np.asarray(self.scann.leaf_rowids)
+                                      >= 0),
+                              -1, np.asarray(self.scann.leaf_rowids))
+            self.scann = dataclasses.replace(
+                self.scann, leaf_rowids=jnp.asarray(pruned))
+            self._executors.clear()          # executors captured old scann
+        self.delta.reset(self.base_n)
+        self.compactions += 1
+        self._ckpt_step += 1
+        save_checkpoint(self.ckpt_dir, self._ckpt_step, self._state_tree(),
+                        extra=self._state_extra("full"), fsync=True)
+        self._log(W.REC_COMPACT,
+                  W.encode_meta({"step": self._ckpt_step,
+                                 "base_n": self.base_n,
+                                 "applied_lsn": int(self.applied_lsn)}))
+        if self.engine is not None:
+            self.engine.account_compaction_write()
+
+    # -- recovery -----------------------------------------------------------
+    @classmethod
+    def recover(cls, base_vectors: np.ndarray, wal_path: str,
+                ckpt_dir: str, **kwargs) -> "MutableIndex":
+        """Reconstruct the index a crashed process left behind: restore
+        the latest durable checkpoint (or the pristine base), reopen the
+        WAL (truncating any torn tail via CRC), and replay records with
+        lsn > the checkpoint's applied_lsn.  Deterministic: the same
+        (base_vectors, seed, durable WAL prefix) always yields an index
+        whose search results are bit-identical to a reference that
+        executed the same durable prefix uncrashed."""
+        base_vectors = np.asarray(base_vectors, np.float32)
+        self = cls(base_vectors, wal_path, ckpt_dir, _defer_build=True,
+                   **kwargs)
+        step = latest_step(ckpt_dir)
+        if step is not None:
+            extra = read_manifest(ckpt_dir, step)["extra"]
+            dim = base_vectors.shape[1]
+            like = {"base": np.zeros((extra["base_n"], dim), np.float32),
+                    "delta": np.zeros((extra["delta_capacity"], dim),
+                                      np.float32),
+                    "tomb": np.zeros(bitset_words(extra["capacity"]),
+                                     np.uint32)}
+            tree, _ = restore_checkpoint(ckpt_dir, step, like)
+            self.capacity = int(extra["capacity"])
+            self.delta_capacity = int(extra["delta_capacity"])
+            self._build_base(np.asarray(tree["base"]))
+            self.delta = DeltaTier(
+                base_n=self.base_n, capacity=self.delta_capacity,
+                dim=dim, count=int(extra["count"]),
+                vectors=np.array(tree["delta"], np.float32))
+            self.tombstones = Tombstones(self.capacity,
+                                         words=np.asarray(tree["tomb"]))
+            self.applied_lsn = int(extra["applied_lsn"])
+            self._ckpt_step = step
+            self.compactions = int(extra.get("compactions", 0))
+        else:
+            self._build_base(base_vectors)
+            self.delta = DeltaTier(base_n=self.base_n,
+                                   capacity=self.delta_capacity,
+                                   dim=base_vectors.shape[1])
+            self.tombstones = Tombstones(self.capacity)
+        self._open_wal()
+        for rec in self.wal.replay(from_lsn=self.applied_lsn):
+            if rec.kind == W.REC_INSERT:
+                start, vecs = W.decode_insert(rec.payload)
+                expect = self.base_n + self.delta.count
+                if start != expect:
+                    raise W.WalCorruption(
+                        f"insert record lsn {rec.lsn} starts at id "
+                        f"{start}, expected {expect}")
+                local_lo = self.delta.count
+                self.delta.append(vecs)
+                if self.engine is not None:
+                    self.engine.account_delta_write(
+                        np.arange(local_lo, local_lo + vecs.shape[0]))
+                self.user_bytes += int(vecs.nbytes)
+            elif rec.kind == W.REC_DELETE:
+                ids = W.decode_delete(rec.payload)
+                self.tombstones.mark(ids)
+                if self.engine is not None and ids.size:
+                    self.engine.account_tombstone_write(ids)
+                self.user_bytes += int(ids.nbytes)
+            # REC_CHECKPOINT / REC_COMPACT are markers: the state they
+            # describe was restored from the checkpoint store already
+            # (compaction durably checkpoints BEFORE logging its marker)
+            self.applied_lsn = rec.lsn
+        return self
+
+    def close(self) -> None:
+        self.wal.close()
+
+
+def rebuild_oracle_store(index: MutableIndex) -> tuple[VectorStore,
+                                                       np.ndarray]:
+    """The from-scratch oracle the merge must be bit-identical to: a
+    capacity-padded store holding base rows then delta rows (garbage
+    zeros beyond), plus the packed LIVE mask (allocated ∧ ¬tombstoned) to
+    AND into any filter bitmap before `bruteforce.filtered_knn` over the
+    whole thing.  Padding rows never score — their mask bit is 0."""
+    cap, dim = index.capacity, index.store.dim
+    full = np.zeros((cap, dim), np.float32)
+    full[:index.base_n] = np.asarray(index.store.vectors)
+    n_alloc = index.base_n + index.delta.count
+    full[index.base_n:n_alloc] = index.delta.vectors[:index.delta.count]
+    alloc = np.zeros(cap, bool)
+    alloc[:n_alloc] = True
+    alloc[index.tombstones.dead_ids()] = False
+    store = VectorStore.build(full, index.metric)
+    bits = np.packbits(alloc, bitorder="little")
+    pad = (-bits.shape[0]) % 4
+    words = np.pad(bits, (0, pad)).view(np.uint32)
+    return store, words

@@ -163,6 +163,20 @@ def unpack_bitmap(bitmap: np.ndarray | Array, n: int) -> np.ndarray:
     return bits.reshape(words.shape[:-1] + (-1,))[..., :n].astype(bool)
 
 
+def bitmap_andnot(bitmap: Array, minus: Array) -> Array:
+    """bitmap ∧ ¬minus over packed uint32 words — the tombstone
+    composition (DESIGN.md §12): `minus` is the delete bitmap, and the
+    result is the live filter every executor actually probes, so deleted
+    rows vanish from all strategies without touching their indexes.
+    `minus` may be shorter (or longer) than the filter's word count —
+    words past either end pass through unchanged (a missing word deletes
+    nothing)."""
+    bm = jnp.asarray(bitmap)
+    mi = jnp.asarray(minus, jnp.uint32)
+    w = min(bm.shape[-1], mi.shape[-1])
+    return bm.at[..., :w].set(bm[..., :w] & ~mi[..., :w])
+
+
 # ---------------------------------------------------------------------------
 # Packed bitsets over row ids.  The filter bitmaps above are the read-only
 # instance; the frontier graph engine also keeps its per-query *visited* set
@@ -348,6 +362,27 @@ def topk_smallest(values: Array, k: int) -> tuple[Array, Array]:
     """(values, indices) of the k smallest entries. jnp.top_k on negated vals."""
     neg, idx = jax.lax.top_k(-values, k)
     return -neg, idx
+
+
+@partial(jax.jit, static_argnames=("k",))
+def merge_topk(dists_a: Array, ids_a: Array, dists_b: Array, ids_b: Array,
+               k: int) -> tuple[Array, Array]:
+    """K-way merge of two top-k result sets into one (Q, k) top-k — the
+    `MergedResult` primitive fusing a base executor's answer with the
+    delta tier's exact scan (DESIGN.md §12).
+
+    Inputs are (Q, ka)/(Q, kb) dists with -1-padded ids; padded slots must
+    carry +inf dists (every executor's contract).  Concat order is
+    (a then b): `lax.top_k` breaks exact ties by position, and since base
+    ids are always < delta ids, passing the base result as `a` reproduces
+    the id-ascending tie order of a from-scratch rebuild oracle —
+    bit-identical merges, not approximately-equal ones.  Slots beyond the
+    number of finite candidates come back as (+inf, -1)."""
+    dists = jnp.concatenate([dists_a, dists_b], axis=-1)
+    ids = jnp.concatenate([ids_a, ids_b], axis=-1)
+    best, pos = topk_smallest(dists, k)
+    out_ids = jnp.take_along_axis(ids, pos, axis=-1)
+    return best, jnp.where(jnp.isinf(best), -1, out_ids)
 
 
 @partial(jax.jit, static_argnames=("k",))

@@ -44,7 +44,8 @@ import numpy as np
 
 from repro.core import costmodel
 from repro.core.executor import GraphExecutor
-from repro.core.types import SearchParams, SearchStats
+from repro.core.types import (SearchParams, SearchStats, bitset_words,
+                              merge_topk)
 from repro.serving.rag import (LadderRung, admission_floor, bucket_deadline,
                                find_scann_index, nearest_centroid)
 
@@ -60,6 +61,26 @@ class Request:
     tenant: int = 0
     arrival: int = 0            # tick the request becomes visible
     deadline_cycles: float = 0.0
+
+
+@dataclasses.dataclass
+class IngestEvent:
+    """One live mutation interleaved with serving (DESIGN.md §12): at the
+    first loop iteration with virtual time >= `tick`, the event is applied
+    durably (WAL first) to the server's `MutableIndex`.  kind="insert"
+    appends `rows` to the delta tier; kind="delete" tombstones `ids`.
+
+    Consistency contract: every request sees the index state as of its
+    ADMIT tick — the tombstone-composed live bitmap and the delta tier's
+    (count, rows) are snapshotted at admission (DeltaExecutor.plan), and
+    the delta top-k is merged into the lane's base-graph answer at retire
+    (`types.merge_topk`).  Mutations landing while a request is in flight
+    are invisible to it, exactly as if it had run to completion at its
+    admit instant — snapshot isolation per request."""
+    tick: int
+    kind: str                              # "insert" | "delete"
+    rows: Optional[np.ndarray] = None      # insert: (m, dim) float32
+    ids: Optional[np.ndarray] = None       # delete: (m,) int64 global ids
 
 
 class FairQueue:
@@ -290,7 +311,8 @@ class ContinuousServer:
                  width: int = 8, hop_chunk: int = 8,
                  fairness: Optional[dict] = None, assign: str = "fifo",
                  ladder: Optional[list[LadderRung]] = None,
-                 admit: bool = True, slo_ticks: Optional[int] = None):
+                 admit: bool = True, slo_ticks: Optional[int] = None,
+                 index=None, ingest: Optional[list[IngestEvent]] = None):
         if assign not in ("fifo", "centroid"):
             raise ValueError(f"unknown assign policy {assign!r}; "
                              "expected 'fifo' or 'centroid'")
@@ -303,6 +325,38 @@ class ContinuousServer:
         self.ladder = ladder
         self.admit = admit
         self.slo_ticks = slo_ticks
+        # live-ingestion mode (DESIGN.md §12): `index` is a
+        # core.mutable.MutableIndex whose base tiers `executor` was built
+        # over; `ingest` is the mutation stream applied at tick
+        # boundaries.  Request bitmaps must then be sized to
+        # index.words() (global capacity id space).  Compaction is
+        # DEFERRED while serving — the pool's compiled lanes capture the
+        # base graph, so an insert that would overflow the delta tier is
+        # an error (size delta_capacity for the serve window, compact
+        # between windows).
+        self.index = index
+        self.ingest = list(ingest) if ingest else []
+        if self.ingest and index is None:
+            raise ValueError("ingest events require a MutableIndex")
+
+    def _live_base_bitmap(self, bitmap: np.ndarray
+                          ) -> tuple[np.ndarray, np.ndarray]:
+        """Tombstone-compose the request's global-id bitmap; returns
+        (live, base): the full capacity-wide live bitmap for the delta
+        snapshot, and its clip to the base id space [0, base_n) — the
+        lane's view of the filter."""
+        bm = np.asarray(bitmap, np.uint32)
+        w = self.index.words()
+        if bm.shape[-1] < w:
+            bm = np.concatenate(
+                [bm, np.zeros(w - bm.shape[-1], np.uint32)])
+        live = self.index.tombstones.live_mask(bm[None])[0]
+        base_n = self.index.base_n
+        base = np.array(live[:bitset_words(base_n)], np.uint32, copy=True)
+        rem = base_n & 31
+        if rem:
+            base[-1] &= np.uint32((1 << rem) - 1)
+        return live, base
 
     def _centroid_keys(self, requests: list[Request]) -> Optional[dict]:
         if self.assign != "centroid":
@@ -398,6 +452,35 @@ class ContinuousServer:
         occupied_ticks = 0
         queue_depth: list[int] = []
         done_cycles: list[float] = []    # completed service, modeled cycles
+        ing = sorted(self.ingest, key=lambda e: e.tick)
+        gi = 0                           # ingest cursor
+        delta_plans: dict[int, object] = {}   # rid -> admit-time snapshot
+        ingested = dict(inserts=0, deletes=0, rows=0)
+
+        def _apply_ingest(force: bool = False) -> None:
+            """Durably apply every ingest event due at the current tick
+            (WAL-first through MutableIndex; `force` drains the stream at
+            loop exit so events past the last tick still land)."""
+            nonlocal gi
+            while gi < len(ing) and (force or ing[gi].tick <= t):
+                ev = ing[gi]
+                gi += 1
+                if ev.kind == "insert":
+                    rows = np.asarray(ev.rows, np.float32)
+                    if self.index.delta.count + rows.shape[0] \
+                            > self.index.delta_capacity:
+                        raise RuntimeError(
+                            "delta tier full mid-serve: compaction is "
+                            "deferred while lanes hold the base graph — "
+                            "size delta_capacity for the serve window")
+                    self.index.insert(rows)
+                    ingested["inserts"] += 1
+                    ingested["rows"] += int(rows.shape[0])
+                elif ev.kind == "delete":
+                    self.index.delete(np.asarray(ev.ids, np.int64))
+                    ingested["deletes"] += 1
+                else:
+                    raise ValueError(f"unknown ingest kind {ev.kind!r}")
 
         def _enqueue_arrivals() -> None:
             nonlocal ai
@@ -431,6 +514,17 @@ class ContinuousServer:
                     else None
                 req = queue.pop(prefer_key=prefer, keys=keys)
                 key = keys.get(req.rid, -1) if keys is not None else -1
+                if self.index is not None:
+                    # snapshot isolation: compose tombstones and freeze
+                    # the delta tier's (count, rows) AS OF THIS TICK —
+                    # DeltaExecutor.plan copies the buffer, so mutations
+                    # landing mid-flight cannot leak into this request
+                    live, base_bm = self._live_base_bitmap(req.bitmap)
+                    delta_plans[req.rid] = \
+                        self.index._delta_executor().plan(
+                            jnp.asarray(req.query)[None],
+                            jnp.asarray(live)[None], self.params)
+                    req = dataclasses.replace(req, bitmap=base_bm)
                 pool.admit(req, int(s), key=key)
                 by_rid[req.rid] = req
                 records[req.rid] = dict(
@@ -448,6 +542,21 @@ class ContinuousServer:
                 rec.setdefault("rung", "primary")
                 rec.setdefault("rung_level", 0)
                 rec.setdefault("retried", False)
+                if self.index is not None:
+                    # merge-at-retire: the admit-time delta snapshot's
+                    # exact top-k fuses with whichever rung served the
+                    # base walk (ladder-degraded retires merge too)
+                    dplan = delta_plans.pop(req.rid)
+                    dres = self.index._delta_executor().execute(dplan)
+                    md, mi = merge_topk(
+                        jnp.asarray(rec["dists"])[None],
+                        jnp.asarray(rec["ids"])[None],
+                        dres.dists, dres.ids, self.params.k)
+                    rec["dists"] = np.asarray(md)[0]
+                    rec["ids"] = np.asarray(mi)[0]
+                    if rec.get("stats") is not None:
+                        rec["stats"] = rec["stats"] + dres.stats
+                    rec["delta_count"] = int(dplan.notes["count"])
                 rec["retire_tick"] = t + extra
                 records[req.rid].update(rec)
                 records[req.rid]["latency_ticks"] = \
@@ -456,6 +565,8 @@ class ContinuousServer:
         by_rid: dict[int, Request] = {}
         served = 0
         while served < n - len(rejected) or ai < n:
+            if self.index is not None:
+                _apply_ingest()
             _enqueue_arrivals()
             if mode == "continuous":
                 _admit_free()
@@ -479,6 +590,8 @@ class ContinuousServer:
                                  if r.get("retire_tick", -1) >= 0)
             else:
                 t += 1               # idle tick: waiting on arrivals
+        if self.index is not None:
+            _apply_ingest(force=True)   # drain events past the last tick
         info = dict(
             mode=mode, ticks=t, step_ticks=step_ticks,
             hop_chunk=self.hop_chunk, width=self.width,
@@ -490,7 +603,10 @@ class ContinuousServer:
             mean_queue_depth=float(np.mean(queue_depth))
             if queue_depth else 0.0,
             fairness="drr" if self.fairness is not None else "fifo",
-            assign=self.assign if keys is not None else "fifo")
+            assign=self.assign if keys is not None else "fifo",
+            ingest_inserts=ingested["inserts"],
+            ingest_deletes=ingested["deletes"],
+            ingest_rows=ingested["rows"])
         return records, info
 
 

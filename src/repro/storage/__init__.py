@@ -15,6 +15,11 @@ from repro.storage.bufferpool import (POLICIES, BufferPool, BufferPoolState,
 from repro.storage.faults import FaultInjector, FaultPlan
 from repro.storage.engine import (SEGMENTS, TRACE_UNTOUCHED, StorageEngine,
                                   StorageStats, make_storage_engine)
+from repro.storage.delta import DeltaFull, DeltaTier, Tombstones
+from repro.storage.wal import (REC_CHECKPOINT, REC_COMPACT, REC_DELETE,
+                               REC_INSERT, WalCorruption, WalRecord,
+                               WalSyncError, WalTornWrite, WriteAheadLog,
+                               crc32c, iter_records)
 
 __all__ = [
     "PAGE_BYTES", "HEAP_PAGE_BYTES", "GraphAdjacencyLayout", "HeapLayout",
@@ -24,4 +29,8 @@ __all__ = [
     "FaultInjector", "FaultPlan",
     "SEGMENTS", "TRACE_UNTOUCHED", "StorageEngine", "StorageStats",
     "make_storage_engine",
+    "DeltaFull", "DeltaTier", "Tombstones",
+    "REC_CHECKPOINT", "REC_COMPACT", "REC_DELETE", "REC_INSERT",
+    "WalCorruption", "WalRecord", "WalSyncError", "WalTornWrite",
+    "WriteAheadLog", "crc32c", "iter_records",
 ]

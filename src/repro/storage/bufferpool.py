@@ -43,6 +43,10 @@ class PoolCounters:
     retries: int = 0       # transient read failures that were retried
     failed_reads: int = 0  # reads whose every attempt failed
     spikes: int = 0        # slow (latency-spiked) physical reads
+    # write-path telemetry (DESIGN.md §12; zero on a read-only workload):
+    dirtied: int = 0       # clean->dirty page transitions
+    page_writes: int = 0   # physical write-backs (dirty eviction or flush)
+    invalidated: int = 0   # pages dropped WITHOUT write-back (compaction)
 
     @property
     def hit_rate(self) -> float:
@@ -52,7 +56,10 @@ class PoolCounters:
         return dict(logical=self.logical, hits=self.hits,
                     misses=self.misses, evictions=self.evictions,
                     retries=self.retries, failed_reads=self.failed_reads,
-                    spikes=self.spikes, hit_rate=round(self.hit_rate, 4))
+                    spikes=self.spikes, dirtied=self.dirtied,
+                    page_writes=self.page_writes,
+                    invalidated=self.invalidated,
+                    hit_rate=round(self.hit_rate, 4))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +72,12 @@ class BufferPoolState:
     capacity: int
     used: int
     residency: Mapping[str, float]     # segment name -> resident fraction
+    # dirty-page exposure (DESIGN.md §12): pages resident-and-modified,
+    # i.e. write-back debt a checkpoint/flush would have to pay.  Zero on
+    # read-only workloads, so read-side callers can ignore these.
+    dirty: int = 0
+    dirty_by_segment: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def miss_fraction(self, segment: str) -> float:
         return 1.0 - self.residency.get(segment, 0.0)
@@ -93,11 +106,16 @@ class BufferPool:
         # page id -> clock reference bit (ignored under LRU; OrderedDict
         # order IS the recency/insertion order for lru/clock respectively)
         self._pages: OrderedDict[int, bool] = OrderedDict()
+        # resident pages that have been modified since they were read —
+        # write-back debt: a dirty page costs one physical write when it
+        # leaves the pool via eviction or flush() (never via invalidate())
+        self._dirty: set[int] = set()
         self.counters = PoolCounters()
         self._segments = dict(segments) if segments else {}
         self._seg_los = sorted((lo, hi, name)
                                for name, (lo, hi) in self._segments.items())
         self._seg_count = dict.fromkeys(self._segments, 0)
+        self._seg_dirty = dict.fromkeys(self._segments, 0)
 
     def _segment_of(self, page: int) -> Optional[str]:
         import bisect
@@ -114,6 +132,27 @@ class BufferPool:
             if seg is not None:
                 self._seg_count[seg] += delta
 
+    def _mark_dirty(self, page: int, counters: "PoolCounters") -> None:
+        if page in self._dirty:
+            return
+        self._dirty.add(page)
+        counters.dirtied += 1
+        if self._segments:
+            seg = self._segment_of(page)
+            if seg is not None:
+                self._seg_dirty[seg] += 1
+
+    def _clear_dirty(self, page: int) -> bool:
+        """Drop `page`'s dirty bit; True iff it was dirty."""
+        if page not in self._dirty:
+            return False
+        self._dirty.discard(page)
+        if self._segments:
+            seg = self._segment_of(page)
+            if seg is not None:
+                self._seg_dirty[seg] -= 1
+        return True
+
     # -- introspection ------------------------------------------------------
     def __len__(self) -> int:
         return len(self._pages)
@@ -127,21 +166,64 @@ class BufferPool:
 
     # -- modes --------------------------------------------------------------
     def reset(self) -> None:
-        """Cold mode: drop every resident page (telemetry survives)."""
+        """Cold mode: drop every resident page (telemetry survives).
+
+        Explicit semantics for the write path (DESIGN.md §12): reset()
+        models a cold RESTART, not an orderly shutdown — dirty pages are
+        dropped WITHOUT write-back and without touching `page_writes`
+        (their contents are presumed lost; durability comes from the WAL,
+        never from the pool).  Callers that need the write-back accounted
+        must `flush()` first; callers retiring compaction-rebuilt segments
+        must use `invalidate(lo, hi)` so stale residency/dirty counters
+        for the dead page range cannot leak into planner snapshots."""
         self._pages.clear()
+        self._dirty.clear()
         self._seg_count = dict.fromkeys(self._segments, 0)
+        self._seg_dirty = dict.fromkeys(self._segments, 0)
+
+    def flush(self, lo: int = 0, hi: Optional[int] = None) -> int:
+        """Write back every dirty page with lo <= id < hi (default: all).
+        Pages stay resident, now clean; returns (and counts as
+        `page_writes`) how many physical writes that took — the
+        checkpoint / fsync-point cost."""
+        if hi is None:
+            victims = list(self._dirty)
+        else:
+            victims = [p for p in self._dirty if lo <= p < hi]
+        for p in victims:
+            self._clear_dirty(p)
+        self.counters.page_writes += len(victims)
+        return len(victims)
+
+    def invalidate(self, lo: int, hi: int) -> int:
+        """Drop every resident page with lo <= id < hi WITHOUT write-back
+        — the page range's backing objects no longer exist (compaction
+        rebuilt the segment), so residency would be stale and a write-back
+        would be I/O for garbage.  Counted as `invalidated`, never as
+        evictions or page_writes.  Returns the number of pages dropped."""
+        victims = [p for p in self._pages if lo <= p < hi]
+        for p in victims:
+            del self._pages[p]
+            self._count(p, -1)
+            self._clear_dirty(p)
+        self.counters.invalidated += len(victims)
+        return len(victims)
 
     def reset_counters(self) -> None:
         self.counters = PoolCounters()
 
     # -- the access path ----------------------------------------------------
-    def access(self, pages: np.ndarray, dedup: bool = False) -> PoolCounters:
+    def access(self, pages: np.ndarray, dedup: bool = False,
+               dirty: bool = False) -> PoolCounters:
         """Run a page-access trace through the pool, in order.
 
         `dedup=True` is the batch semantics (DESIGN.md §5/§8): duplicate
         pages within THIS call are charged once — first occurrence decides
         hit/miss, repeats are neither logical accesses nor touches
         (idempotent: access(p, dedup=True) twice in one call == once).
+        `dirty=True` is the write path (DESIGN.md §12): each touched page
+        is marked modified (clean->dirty transitions count as `dirtied`)
+        and will cost a physical write when evicted or flushed.
         Returns the per-call delta counters (cumulative ones accrue on
         `self.counters`).
         """
@@ -162,6 +244,8 @@ class BufferPool:
                     self._pages.move_to_end(p)
                 else:
                     self._pages[p] = True        # clock reference bit
+                if dirty:
+                    self._mark_dirty(p, delta)
                 continue
             delta.misses += 1
             if inj is not None:
@@ -178,25 +262,32 @@ class BufferPool:
                 cap = max(1, int(cap * inj.capacity_frac()))
             if cap > 0:
                 while len(self._pages) >= cap:   # pressure may shrink cap
-                    self._evict()                # below current residency
+                    self._evict(delta)           # below current residency
                     delta.evictions += 1
             self._pages[p] = False
             self._count(p, +1)
+            if dirty:
+                self._mark_dirty(p, delta)
         self._merge(delta)
         return delta
 
     def _merge(self, delta: "PoolCounters") -> None:
         c, d = self.counters, delta
         (c.logical, c.hits, c.misses, c.evictions, c.retries,
-         c.failed_reads, c.spikes) = (
+         c.failed_reads, c.spikes, c.dirtied, c.page_writes,
+         c.invalidated) = (
             c.logical + d.logical, c.hits + d.hits, c.misses + d.misses,
             c.evictions + d.evictions, c.retries + d.retries,
-            c.failed_reads + d.failed_reads, c.spikes + d.spikes)
+            c.failed_reads + d.failed_reads, c.spikes + d.spikes,
+            c.dirtied + d.dirtied, c.page_writes + d.page_writes,
+            c.invalidated + d.invalidated)
 
-    def _evict(self) -> None:
+    def _evict(self, delta: Optional["PoolCounters"] = None) -> None:
         if self.policy == "lru":
             page, _ = self._pages.popitem(last=False)   # least recently used
             self._count(page, -1)
+            if self._clear_dirty(page) and delta is not None:
+                delta.page_writes += 1          # dirty eviction writes back
             return
         # clock / second-chance as a FIFO ring: sweep from the oldest
         # entry, rotating referenced pages to the back with their bit
@@ -209,6 +300,8 @@ class BufferPool:
             else:
                 del self._pages[k]
                 self._count(k, -1)
+                if self._clear_dirty(k) and delta is not None:
+                    delta.page_writes += 1
                 return
 
     # -- planner snapshot ---------------------------------------------------
@@ -230,5 +323,8 @@ class BufferPool:
             else:
                 n_res = self.resident_in(lo, hi)
             res[name] = min(1.0, n_res / size)
+        dirty_by_seg = {name: self._seg_dirty.get(name, 0)
+                        for name in (segments or self._segments)}
         return BufferPoolState(capacity=self.capacity, used=len(self._pages),
-                               residency=res)
+                               residency=res, dirty=len(self._dirty),
+                               dirty_by_segment=dirty_by_seg)

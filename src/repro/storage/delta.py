@@ -1,0 +1,167 @@
+"""LSM-style mutable delta tier: append-only rows + tombstone bitmaps
+(DESIGN.md §12).
+
+Every build-time index in the repo (graph, ScaNN, SQ8 shadows) is an
+immutable artifact; live mutation lands here instead:
+
+  * inserts append rows to a CAPACITY-padded, unindexed segment — scanned
+    exactly by `core.executor.DeltaExecutor` and merged into every base
+    executor's top-k (core/mutable.py);
+  * deletes set bits in a tombstone bitmap over the GLOBAL id space
+    [0, capacity) — the same packed uint32 word layout as the filter
+    bitmaps, so composing "live" into any query is one AND-NOT over
+    words and deleted rows vanish from all strategies without touching
+    their indexes.
+
+The capacity padding is what keeps the hot path compile-stable: the delta
+arrays have fixed shape (capacity_delta, dim) and only the live `count`
+changes per mutation, so the jitted delta scan never recompiles as the
+tier fills.
+
+Pure numpy (no repro.core imports — core/types.py imports from this
+package); the jitted scan view lives with DeltaExecutor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def _words(n: int) -> int:
+    return (n + 31) // 32
+
+
+@dataclasses.dataclass
+class DeltaTier:
+    """Append-only mutable segment over global ids
+    [base_n, base_n + count).
+
+    vectors/norms beyond `count` are zero (never scored: the scan masks
+    rows >= count).  `version` increments on every mutation — consistent
+    snapshots (serving mid-flight lanes, DESIGN.md §12) pin
+    (count, version) at admission.
+    """
+
+    base_n: int
+    capacity: int                 # max delta rows before compaction MUST run
+    dim: int
+    count: int = 0
+    version: int = 0
+    vectors: np.ndarray = None    # (capacity, dim) f32
+    inserted_bytes: int = 0       # cumulative logical payload (write-amp)
+
+    def __post_init__(self):
+        if self.capacity <= 0:
+            raise ValueError(f"delta capacity must be > 0, got "
+                             f"{self.capacity}")
+        if self.vectors is None:
+            self.vectors = np.zeros((self.capacity, self.dim), np.float32)
+        if self.vectors.shape != (self.capacity, self.dim):
+            raise ValueError(
+                f"delta vectors shape {self.vectors.shape} != "
+                f"{(self.capacity, self.dim)}")
+
+    @property
+    def fill(self) -> float:
+        return self.count / self.capacity
+
+    def append(self, rows: np.ndarray) -> np.ndarray:
+        """Append rows; returns their GLOBAL ids.  Raises when the tier
+        is full — the caller must compact first (`MutableIndex.insert`
+        auto-compacts)."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != self.dim:
+            raise ValueError(f"expected (m, {self.dim}) rows, got "
+                             f"{rows.shape}")
+        m = rows.shape[0]
+        if self.count + m > self.capacity:
+            raise DeltaFull(
+                f"delta tier full: {self.count}+{m} > {self.capacity}")
+        self.vectors[self.count: self.count + m] = rows
+        ids = self.base_n + self.count + np.arange(m, dtype=np.int64)
+        self.count += m
+        self.version += 1
+        self.inserted_bytes += int(rows.nbytes)
+        return ids
+
+    def local_of(self, global_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(global_ids, np.int64) - self.base_n
+
+    def reset(self, base_n: int) -> None:
+        """Empty the tier after compaction folded it into the base at
+        the new `base_n` (rows keep their global ids — the base grew
+        underneath them)."""
+        self.base_n = base_n
+        self.count = 0
+        self.version += 1
+        self.vectors[:] = 0.0
+
+
+class DeltaFull(RuntimeError):
+    """The delta tier hit capacity; compaction must fold it first."""
+
+
+class Tombstones:
+    """Packed delete bitmap over the global id space [0, capacity).
+
+    Same uint32-word layout as the filter bitmaps (core.types), so
+    `live_mask(filter_words)` — filter AND NOT tombstone — is the whole
+    delete story for every executor: a deleted row's filter bit is
+    cleared before any index ever probes it.
+    """
+
+    def __init__(self, capacity: int,
+                 words: np.ndarray | None = None):
+        self.capacity = capacity
+        if words is None:
+            self.words = np.zeros(_words(capacity), np.uint32)
+        else:
+            words = np.asarray(words, np.uint32)
+            if words.shape != (_words(capacity),):
+                raise ValueError(
+                    f"tombstone words shape {words.shape} != "
+                    f"({_words(capacity)},)")
+            self.words = words.copy()
+        self.version = 0
+
+    @property
+    def count(self) -> int:
+        return int(np.unpackbits(
+            self.words.view(np.uint8), bitorder="little").sum())
+
+    def mark(self, ids: np.ndarray) -> int:
+        """Tombstone `ids`; returns how many were newly dead (repeat
+        deletes are idempotent)."""
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return 0
+        if (ids < 0).any() or (ids >= self.capacity).any():
+            raise ValueError(f"delete ids out of range [0, "
+                             f"{self.capacity})")
+        before = self.count
+        w = ids >> 5
+        b = (np.uint32(1) << (ids & 31).astype(np.uint32))
+        np.bitwise_or.at(self.words, w, b)
+        self.version += 1
+        return self.count - before
+
+    def is_dead(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        return ((self.words[ids >> 5] >> (ids & 31).astype(np.uint32))
+                & np.uint32(1)).astype(bool)
+
+    def live_mask(self, filter_words: np.ndarray) -> np.ndarray:
+        """Compose deletes into packed filter bitmaps: filter ∧ ¬dead.
+        `filter_words` (..., W') may be narrower than the tombstone span
+        (e.g. sized for the base store only) — only the overlapping words
+        are masked, and the input is never mutated."""
+        fw = np.asarray(filter_words, np.uint32)
+        w = min(fw.shape[-1], self.words.shape[0])
+        out = fw.copy()
+        out[..., :w] &= ~self.words[:w]
+        return out
+
+    def dead_ids(self) -> np.ndarray:
+        bits = np.unpackbits(self.words.view(np.uint8), bitorder="little")
+        return np.nonzero(bits[: self.capacity])[0].astype(np.int64)

@@ -57,10 +57,10 @@ import numpy as np
 
 from repro.storage.bufferpool import BufferPool, BufferPoolState
 from repro.storage.faults import FaultInjector, FaultPlan
-from repro.storage.pages import (GraphAdjacencyLayout, HeapLayout,
-                                 ScannLeafLayout)
+from repro.storage.pages import (PAGE_BYTES, GraphAdjacencyLayout,
+                                 HeapLayout, ScannLeafLayout)
 
-SEGMENTS = ("heap", "scann", "graph", "qheap")
+SEGMENTS = ("heap", "scann", "graph", "qheap", "delta", "wal")
 
 # First-touch stamp sentinel for untouched objects — numerically pinned to
 # int32 max, the same value core.graph_search.TRACE_UNTOUCHED stamps with
@@ -150,23 +150,41 @@ class StorageEngine:
                  capacity_pages: Optional[int] = None,
                  capacity_frac: float = 0.5, policy: str = "lru",
                  qheap: Optional[HeapLayout] = None,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 delta: Optional[HeapLayout] = None,
+                 wal_pages: int = 0):
         self.heap = heap
         self.scann = scann
         self.graph = graph
         self.qheap = qheap
-        # global page-id space: [heap | scann | graph | qheap]
-        self._base = {"heap": 0}
-        off = heap.num_pages
+        # mutable delta tier (DESIGN.md §12): `delta` lays out the
+        # capacity-padded append-only rows; the tombstone bitmap over the
+        # WHOLE id space (base + delta) rides in the same segment, after
+        # the row pages.  `wal_pages` reserves a ring of WAL pages —
+        # append offsets wrap, modelling log recycling past checkpoints.
+        self.delta = delta
+        self.wal_pages = int(wal_pages)
+        self._tomb_pages = 0
+        if delta is not None:
+            tomb_bytes = 4 * ((heap.n + delta.n + 31) // 32)
+            self._tomb_pages = -(-tomb_bytes // PAGE_BYTES)
+        # global page-id space: [heap | scann | graph | qheap | delta | wal]
+        self._sizes = {"heap": heap.num_pages}
         if scann is not None:
-            self._base["scann"] = off
-            off += scann.num_pages
+            self._sizes["scann"] = scann.num_pages
         if graph is not None:
-            self._base["graph"] = off
-            off += graph.num_pages
+            self._sizes["graph"] = graph.num_pages
         if qheap is not None:
-            self._base["qheap"] = off
-            off += qheap.num_pages
+            self._sizes["qheap"] = qheap.num_pages
+        if delta is not None:
+            self._sizes["delta"] = delta.num_pages + self._tomb_pages
+        if self.wal_pages > 0:
+            self._sizes["wal"] = self.wal_pages
+        self._base = {}
+        off = 0
+        for name, size in self._sizes.items():
+            self._base[name] = off
+            off += size
         self.total_pages = off
         if capacity_pages is None:
             capacity_pages = max(1, int(round(capacity_frac * off)))
@@ -179,9 +197,7 @@ class StorageEngine:
 
     # -- segment helpers ----------------------------------------------------
     def segment_ranges(self) -> dict[str, tuple[int, int]]:
-        layouts = {"heap": self.heap, "scann": self.scann,
-                   "graph": self.graph, "qheap": self.qheap}
-        return {name: (lo, lo + layouts[name].num_pages)
+        return {name: (lo, lo + self._sizes[name])
                 for name, lo in self._base.items()}
 
     def state(self) -> BufferPoolState:
@@ -220,7 +236,7 @@ class StorageEngine:
                 spk += d.spikes
                 if d.failed_reads:
                     faulted[i] = True
-                if seg in ("heap", "qheap"):
+                if seg in ("heap", "qheap", "delta"):
                     heap_pages[i] += d.logical
                 else:
                     idx_pages[i] += d.logical
@@ -317,18 +333,140 @@ class StorageEngine:
         ] for i in range(bm.shape[0])]
         return self._replay(streams)
 
+    # -- write path (DESIGN.md §12) -----------------------------------------
+    # The mutation side of the paper's system-cost lens: inserts, deletes,
+    # WAL appends, checkpoints, and compaction all flow through the SAME
+    # pool as the searches, so dirty-page debt and write-back I/O show up
+    # in StorageStats/BufferPoolState right next to read misses.
+
+    def _require(self, seg: str):
+        if seg not in self._base:
+            raise ValueError(f"engine built without a {seg!r} segment "
+                             f"(pass delta=/wal_pages= at construction)")
+
+    def account_delta_scan(self, count: int,
+                           num_queries: int) -> StorageStats:
+        """The DeltaExecutor's storage story: every query seq-scans the
+        first `count` live delta rows exactly (the unindexed LSM tail),
+        charged per query like any heap seqscan."""
+        self._require("delta")
+        rows = np.arange(int(count), dtype=np.int64)
+        pages = self.delta.pages_for_rows(rows)
+        streams = [[("delta", pages)] for _ in range(int(num_queries))]
+        return self._replay(streams)
+
+    def account_delta_write(self, local_rows: np.ndarray):
+        """Insert batch applied to the delta tier: the touched delta row
+        pages are dirtied.  `local_rows` are delta-local row ids."""
+        self._require("delta")
+        pages = self.delta.pages_for_rows(np.asarray(local_rows,
+                                                     np.int64))
+        return self.pool.access(self._base["delta"] + pages, dedup=True,
+                                dirty=True)
+
+    def account_tombstone_write(self, global_ids: np.ndarray):
+        """Delete batch: the tombstone-bitmap pages holding the marked
+        ids' words are dirtied (the bitmap lives after the delta rows)."""
+        self._require("delta")
+        ids = np.asarray(global_ids, np.int64)
+        words = ids >> 5
+        tomb_lo = self._base["delta"] + self.delta.num_pages
+        pages = np.unique(tomb_lo + (words * 4) // PAGE_BYTES)
+        return self.pool.access(pages, dedup=True, dirty=True)
+
+    def _wal_range(self, offset: int, nbytes: int) -> np.ndarray:
+        first = offset // PAGE_BYTES
+        last = (offset + max(1, nbytes) - 1) // PAGE_BYTES
+        ring = np.arange(first, last + 1) % self.wal_pages
+        return self._base["wal"] + np.unique(ring)
+
+    def account_wal_append(self, offset: int, nbytes: int):
+        """One WAL record hits the log: its byte range's pages (a ring of
+        `wal_pages` — the log recycles past checkpoints) are dirtied."""
+        self._require("wal")
+        return self.pool.access(self._wal_range(offset, nbytes),
+                                dedup=True, dirty=True)
+
+    def account_wal_sync(self) -> int:
+        """fsync point: every dirty WAL page is forced to storage
+        (ranged flush; returns pages written)."""
+        self._require("wal")
+        lo, hi = self.segment_ranges()["wal"]
+        return self.pool.flush(lo, hi)
+
+    def account_checkpoint(self, count: int) -> dict:
+        """Checkpoint = read the live delta state (first `count` rows +
+        the whole tombstone bitmap) and force the delta segment's dirty
+        pages to storage.  Returns the logical reads and page writes."""
+        self._require("delta")
+        lo, hi = self.segment_ranges()["delta"]
+        rows = np.arange(int(count), dtype=np.int64)
+        d = self.pool.access(lo + self.delta.pages_for_rows(rows),
+                             dedup=True)
+        t = self.pool.access(np.arange(lo + self.delta.num_pages, hi),
+                             dedup=True)
+        written = self.pool.flush(lo, hi)
+        return dict(logical=d.logical + t.logical, page_writes=written)
+
+    def account_compaction_read(self, count: int) -> dict:
+        """Compaction's read half, charged to THIS (pre-compaction)
+        engine: fold-in reads every base heap row and every live delta
+        row, then the rebuilt segments (scann/graph/qheap/delta) are
+        invalidated — dropped without write-back, so no stale residency
+        survives into the successor engine's planner snapshots."""
+        self._require("delta")
+        heap_rows = np.arange(self.heap.n, dtype=np.int64)
+        d = self.pool.access(self._base["heap"]
+                             + self.heap.pages_for_rows(heap_rows),
+                             dedup=True)
+        rows = np.arange(int(count), dtype=np.int64)
+        d2 = self.pool.access(self._base["delta"]
+                              + self.delta.pages_for_rows(rows), dedup=True)
+        inv = 0
+        ranges = self.segment_ranges()
+        for seg in ("scann", "graph", "qheap", "delta"):
+            if seg in ranges:
+                inv += self.pool.invalidate(*ranges[seg])
+        return dict(logical=d.logical + d2.logical, invalidated=inv)
+
+    def account_compaction_write(self) -> dict:
+        """Compaction's write half, charged to the SUCCESSOR engine: the
+        rebuilt heap/scann/graph/qheap segments are written page by page
+        (dirty first-touch), then flushed — `page_writes` here plus the
+        WAL/checkpoint writes is the denominator-facing write-amplification
+        I/O (costmodel.write_amplification)."""
+        writes = dirtied = 0
+        ranges = self.segment_ranges()
+        for seg in ("heap", "scann", "graph", "qheap"):
+            if seg in ranges:
+                lo, hi = ranges[seg]
+                d = self.pool.access(np.arange(lo, hi), dedup=True,
+                                     dirty=True)
+                writes += d.page_writes       # dirty evictions mid-write
+                dirtied += d.dirtied
+        writes += self.pool.flush()
+        return dict(page_writes=writes, dirtied=dirtied)
+
 
 def make_storage_engine(store, index=None, graph=None,
                         capacity_pages: Optional[int] = None,
                         capacity_frac: float = 0.5,
                         policy: str = "lru",
-                        faults: Optional[FaultPlan] = None) -> StorageEngine:
+                        faults: Optional[FaultPlan] = None,
+                        delta_capacity: int = 0,
+                        wal_pages: int = 0) -> StorageEngine:
     """Build an engine from live components: a core VectorStore, optional
     ScannIndex, optional HNSWGraph (duck-typed on shapes — no core import).
     The dense "qheap" SQ8-shadow segment is always laid out (it is pure
     geometry — n rows at 1 B/dim), so quantized traversal replays through
     shadow pages whether or not the store object in hand carries the
-    shadow arrays (DESIGN.md §9)."""
+    shadow arrays (DESIGN.md §9).
+
+    `delta_capacity > 0` additionally lays out the mutable delta tier —
+    that many capacity-padded delta rows plus the tombstone bitmap — and
+    `wal_pages > 0` a WAL page ring, enabling the write-path accounting
+    (DESIGN.md §12); both default off, keeping read-only engines
+    byte-identical to before."""
     heap = HeapLayout(n=int(store.vectors.shape[0]),
                       dim=int(store.vectors.shape[1]))
     qheap = HeapLayout(n=int(store.vectors.shape[0]),
@@ -341,6 +479,11 @@ def make_storage_engine(store, index=None, graph=None,
     if graph is not None:
         gl = GraphAdjacencyLayout(n=int(graph.neighbors.shape[1]),
                                   degree=int(graph.neighbors.shape[2]))
+    delta = None
+    if delta_capacity > 0:
+        delta = HeapLayout(n=int(delta_capacity),
+                           dim=int(store.vectors.shape[1]))
     return StorageEngine(heap, scann, gl, capacity_pages=capacity_pages,
                          capacity_frac=capacity_frac, policy=policy,
-                         qheap=qheap, faults=faults)
+                         qheap=qheap, faults=faults, delta=delta,
+                         wal_pages=wal_pages)

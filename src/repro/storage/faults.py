@@ -64,35 +64,59 @@ class FaultPlan:
     pressure_prob: float = 0.0
     pressure_len: int = 256
     pressure_frac: float = 0.5
+    # -- write-path faults (DESIGN.md §12) --------------------------------
+    # torn WAL append: per append, chance the "process dies" mid-write,
+    # leaving a deterministic prefix of the record on disk (the prefix
+    # fraction is itself a counter-keyed draw, never 0 or all bytes) —
+    # storage/wal.py raises WalTornWrite and the recovery harness must
+    # truncate the torn tail via the record CRC
+    wal_torn_prob: float = 0.0
+    # failed fsync: per sync, chance the flush never reaches storage —
+    # wal.durable_offset does not advance and WalSyncError is raised
+    fsync_fail_prob: float = 0.0
 
     @property
     def active(self) -> bool:
         return (self.read_fail_prob > 0 or self.latency_spike_prob > 0
-                or self.pressure_prob > 0)
+                or self.pressure_prob > 0 or self.write_active)
+
+    @property
+    def write_active(self) -> bool:
+        return self.wal_torn_prob > 0 or self.fsync_fail_prob > 0
 
 
 # draw salts (namespacing the counter-keyed hash per decision kind)
 _SALT_FAIL = 1
 _SALT_SPIKE = 2
 _SALT_PRESSURE = 3
+_SALT_WAL_TORN = 4
+_SALT_WAL_FRAC = 5
+_SALT_FSYNC = 6
 
 
 class FaultInjector:
     """Stateful executor of one FaultPlan over one pool's access stream.
 
-    State is two integers — the monotone logical-access counter and the
-    end of the current pressure window — so `reset()` (or constructing a
-    fresh injector) replays the identical schedule.
+    State is a handful of integers — the monotone logical-access counter,
+    the end of the current pressure window, and the write-path counters
+    (WAL appends / fsyncs seen) — so `reset()` (or constructing a fresh
+    injector) replays the identical schedule.  Read-path and write-path
+    draws are keyed on DISJOINT counters: interleaving searches with
+    ingestion does not perturb either schedule.
     """
 
     def __init__(self, plan: FaultPlan):
         self.plan = plan
         self.counter = 0
         self._pressure_until = 0
+        self.wal_appends = 0
+        self.wal_syncs = 0
 
     def reset(self) -> None:
         self.counter = 0
         self._pressure_until = 0
+        self.wal_appends = 0
+        self.wal_syncs = 0
 
     # -- per-access hooks (called by BufferPool.access) ---------------------
     def tick(self) -> None:
@@ -137,3 +161,30 @@ class FaultInjector:
             spike = _uniform(p.seed, self.counter, _SALT_SPIKE) \
                 < p.latency_spike_prob
         return retries, failed, spike
+
+    # -- write-path hooks (called by storage/wal.py) ------------------------
+    def on_wal_append(self, record_bytes: int):
+        """Torn-append decision for one WAL append of `record_bytes`
+        bytes.  Returns None (clean write) or the number of bytes that
+        reach the file before the simulated crash — always at least 1 and
+        strictly less than the record, so the tail is genuinely torn (the
+        CRC must catch it).  Counter-keyed on the append counter."""
+        self.wal_appends += 1
+        p = self.plan
+        if p.wal_torn_prob <= 0:
+            return None
+        if _uniform(p.seed, self.wal_appends, _SALT_WAL_TORN) \
+                >= p.wal_torn_prob:
+            return None
+        frac = _uniform(p.seed, self.wal_appends, _SALT_WAL_FRAC)
+        return max(1, min(record_bytes - 1, int(frac * record_bytes)))
+
+    def on_fsync(self) -> bool:
+        """True when this fsync fails (counter-keyed on the sync
+        counter): the flushed bytes may never reach storage."""
+        self.wal_syncs += 1
+        p = self.plan
+        if p.fsync_fail_prob <= 0:
+            return False
+        return _uniform(p.seed, self.wal_syncs, _SALT_FSYNC) \
+            < p.fsync_fail_prob

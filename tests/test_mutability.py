@@ -1,0 +1,499 @@
+"""Crash-consistent live ingestion (DESIGN.md §12) — functional layer.
+
+The correctness bar for the streaming-mutability subsystem is
+BIT-IDENTICALITY, not approximate agreement: a `MutableIndex` search
+(base executor top-k merged with the delta tier's exact scan, tombstones
+AND-NOT-composed into the filter) must equal `bruteforce.filtered_knn`
+over a from-scratch rebuild of the union at every step of every
+insert/delete/search interleaving — including immediately after
+compaction.  Covers:
+
+  - `merge_topk` / `bitmap_andnot` primitives (types.py)
+  - DeltaTier / Tombstones mechanics (storage/delta.py)
+  - scripted + randomized (hypothesis when available) interleavings vs
+    the rebuild oracle, selective bitmaps and tombstone composition
+    included
+  - compaction: recall within 0.02 of a cold rebuild, dead rows pruned
+    from ScaNN postings, post-compaction searches still oracle-identical
+  - buffer-pool dirty-page tracking, flush/invalidate/reset semantics
+  - costmodel delta-scan and write-amplification terms
+  - continuous serving with live ingest: snapshot-at-admit isolation
+"""
+import dataclasses
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional dev dep: property test skips,
+    HAVE_HYPOTHESIS = False  # the deterministic grid below still runs
+
+from repro.core import SearchParams
+from repro.core.bruteforce import filtered_knn
+from repro.core.executor import GraphExecutor
+from repro.core.mutable import MutableIndex, rebuild_oracle_store
+from repro.core.types import (bitmap_andnot, bitset_words, merge_topk,
+                              topk_smallest)
+from repro.core import costmodel
+from repro.serving.continuous import (ContinuousServer, IngestEvent,
+                                      Request, results_in_order)
+from repro.storage.bufferpool import BufferPool
+from repro.storage.delta import DeltaFull, DeltaTier, Tombstones
+
+K = 5
+DIM = 16
+
+
+def _params(**kw):
+    base = dict(k=K, strategy="bruteforce")
+    base.update(kw)
+    return SearchParams(**base)
+
+
+def _mk_index(tmp_path, base, tag="a", **kw):
+    kw.setdefault("with_graph", False)
+    kw.setdefault("with_scann", False)
+    kw.setdefault("delta_capacity", 32)
+    return MutableIndex(base, str(tmp_path / f"wal_{tag}"),
+                        str(tmp_path / f"ck_{tag}"), **kw)
+
+
+def _oracle(index, bitmaps, queries, k=K):
+    """filtered_knn over the capacity-padded rebuild — the ground truth
+    every merged search must equal bit-for-bit."""
+    store, live = rebuild_oracle_store(index)
+    bm = np.asarray(bitmaps, np.uint32)
+    w = live.shape[0]
+    if bm.shape[-1] < w:
+        bm = np.concatenate([bm, np.zeros(
+            bm.shape[:-1] + (w - bm.shape[-1],), np.uint32)], -1)
+    return filtered_knn(store, jnp.asarray(queries),
+                        jnp.asarray(bm & live[None]), k)
+
+
+def _assert_matches_oracle(index, queries, bitmaps, ctx=""):
+    res = index.search(jnp.asarray(queries), jnp.asarray(bitmaps),
+                       _params())
+    od, oi = _oracle(index, bitmaps, queries)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(res.ids),
+                                  err_msg=f"ids diverged from oracle {ctx}")
+    assert np.array_equal(np.asarray(od), np.asarray(res.dists),
+                          equal_nan=True), f"dists diverged {ctx}"
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_merge_topk_equals_joint_topk():
+    rng = np.random.RandomState(0)
+    da = rng.rand(3, 7).astype(np.float32)
+    db = rng.rand(3, 4).astype(np.float32)
+    ia = rng.permutation(7)[None].repeat(3, 0).astype(np.int32)
+    ib = (100 + rng.permutation(4))[None].repeat(3, 0).astype(np.int32)
+    md, mi = merge_topk(jnp.asarray(da), jnp.asarray(ia),
+                        jnp.asarray(db), jnp.asarray(ib), 5)
+    jd, pos = topk_smallest(jnp.concatenate([da, db], -1), 5)
+    ji = np.take_along_axis(np.concatenate([ia, ib], -1),
+                            np.asarray(pos), -1)
+    np.testing.assert_array_equal(np.asarray(mi), ji)
+    np.testing.assert_array_equal(np.asarray(md), np.asarray(jd))
+
+
+def test_merge_topk_inf_padding_yields_minus_one():
+    da = jnp.asarray([[0.5, jnp.inf]])
+    ia = jnp.asarray([[3, 9]], dtype=jnp.int32)
+    db = jnp.full((1, 2), jnp.inf)
+    ib = jnp.asarray([[7, 8]], dtype=jnp.int32)
+    md, mi = merge_topk(da, ia, db, ib, 3)
+    np.testing.assert_array_equal(np.asarray(mi)[0], [3, -1, -1])
+    assert np.isinf(np.asarray(md)[0, 1:]).all()
+
+
+def test_bitmap_andnot_composition():
+    bm = jnp.asarray([[0xFFFFFFFF, 0xFFFFFFFF, 0x0000FFFF]],
+                     dtype=jnp.uint32)
+    minus = jnp.asarray([0x1, 0x80000000], dtype=jnp.uint32)
+    out = np.asarray(bitmap_andnot(bm, minus))
+    assert out[0, 0] == 0xFFFFFFFE
+    assert out[0, 1] == 0x7FFFFFFF
+    assert out[0, 2] == 0x0000FFFF      # beyond minus: untouched
+    # input not mutated
+    assert np.asarray(bm)[0, 0] == 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# delta tier / tombstones mechanics
+# ---------------------------------------------------------------------------
+
+def test_delta_tier_append_ids_and_full():
+    tier = DeltaTier(base_n=100, capacity=8, dim=4)
+    rng = np.random.RandomState(1)
+    ids = tier.append(rng.randn(3, 4).astype(np.float32))
+    np.testing.assert_array_equal(ids, [100, 101, 102])
+    assert tier.count == 3 and 0.0 < tier.fill < 1.0
+    tier.append(rng.randn(5, 4).astype(np.float32))
+    assert tier.fill == 1.0
+    with pytest.raises(DeltaFull):
+        tier.append(rng.randn(1, 4).astype(np.float32))
+    v = tier.version
+    tier.reset(base_n=108)
+    assert tier.count == 0 and tier.base_n == 108 and tier.version == v + 1
+    assert not tier.vectors.any()
+
+
+def test_tombstones_mark_and_live_mask():
+    tomb = Tombstones(70)
+    assert tomb.mark(np.array([3, 33, 64])) == 3
+    assert tomb.count == 3
+    assert tomb.mark(np.array([3])) == 0          # idempotent
+    np.testing.assert_array_equal(
+        tomb.is_dead(np.array([3, 4, 64])), [True, False, True])
+    bm = np.full((1, 3), 0xFFFFFFFF, np.uint32)
+    before = bm.copy()
+    live = tomb.live_mask(bm)
+    np.testing.assert_array_equal(bm, before)      # input untouched
+    assert not (live[0, 0] & (1 << 3))
+    assert not (live[0, 1] & (1 << 1))
+    assert not (live[0, 2] & 1)
+    assert live[0, 0] & (1 << 4)
+    with pytest.raises(ValueError):
+        tomb.mark(np.array([70]))
+
+
+# ---------------------------------------------------------------------------
+# oracle equivalence
+# ---------------------------------------------------------------------------
+
+def _run_ops(index, ops, queries, rng, sel=0.6):
+    """Apply (kind, payload) ops; after each, assert oracle equality under
+    both an all-pass and a random selective bitmap."""
+    w = index.words()
+    for step, (kind, payload) in enumerate(ops):
+        if kind == "insert":
+            index.insert(payload)
+        else:
+            index.delete(payload)
+        full = np.full((queries.shape[0], w), 0xFFFFFFFF, np.uint32)
+        bits = (rng.rand(queries.shape[0], w * 32) < sel)
+        selw = np.packbits(bits, axis=-1,
+                           bitorder="little").view(np.uint32)
+        _assert_matches_oracle(index, queries, full, f"step {step} full")
+        _assert_matches_oracle(index, queries, selw,
+                               f"step {step} selective")
+
+
+def test_scripted_interleaving_matches_oracle(tmp_path):
+    rng = np.random.RandomState(3)
+    base = rng.randn(120, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base)
+    queries = rng.randn(4, DIM).astype(np.float32)
+    ops = [
+        ("insert", rng.randn(6, DIM).astype(np.float32)),
+        ("delete", np.array([0, 5, 121], np.int64)),    # base + delta ids
+        ("insert", rng.randn(10, DIM).astype(np.float32)),
+        ("delete", np.array([121, 130], np.int64)),     # re-delete + delta
+        ("insert", rng.randn(1, DIM).astype(np.float32)),
+        ("delete", np.arange(20, 40, dtype=np.int64)),  # dense base kill
+    ]
+    _run_ops(idx, ops, queries, rng)
+    assert idx.live_count == 120 + 17 - 24   # 121 deleted twice
+    idx.close()
+
+
+def test_random_interleaving_grid_matches_oracle(tmp_path):
+    """Deterministic randomized interleavings — always runs (the
+    hypothesis property below strengthens it when the dep exists)."""
+    for seed in (0, 1, 2):
+        rng = np.random.RandomState(seed)
+        base = rng.randn(80, DIM).astype(np.float32)
+        idx = _mk_index(tmp_path, base, tag=f"g{seed}", delta_capacity=64)
+        queries = rng.randn(3, DIM).astype(np.float32)
+        ops = []
+        for _ in range(8):
+            if rng.rand() < 0.6 or idx is None:
+                ops.append(("insert",
+                            rng.randn(rng.randint(1, 6),
+                                      DIM).astype(np.float32)))
+            else:
+                hi = 80 + sum(o[1].shape[0] for o in ops
+                              if o[0] == "insert")
+                ops.append(("delete",
+                            rng.randint(0, hi, size=3).astype(np.int64)))
+        _run_ops(idx, ops, queries, rng, sel=0.5)
+        idx.close()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_interleaving_property_matches_oracle(tmp_path):
+    """Property form: ANY insert/delete/search interleaving is oracle-
+    identical at every step (tombstone ∧ filter-bitmap composition
+    included)."""
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), nops=st.integers(1, 10),
+           sel=st.floats(0.1, 1.0))
+    def prop(seed, nops, sel):
+        rng = np.random.RandomState(seed)
+        base = rng.randn(60, DIM).astype(np.float32)
+        idx = _mk_index(tmp_path, base, tag=f"h{seed}_{nops}",
+                        delta_capacity=64)
+        queries = rng.randn(2, DIM).astype(np.float32)
+        ops = []
+        for _ in range(nops):
+            if rng.rand() < 0.55:
+                ops.append(("insert", rng.randn(
+                    rng.randint(1, 5), DIM).astype(np.float32)))
+            else:
+                hi = 60 + sum(o[1].shape[0] for o in ops
+                              if o[0] == "insert")
+                ops.append(("delete", rng.randint(
+                    0, hi, size=rng.randint(1, 4)).astype(np.int64)))
+        _run_ops(idx, ops, queries, rng, sel=sel)
+        idx.close()
+
+    prop()
+
+
+def test_delta_rows_surface_and_tombstones_kill_everywhere(tmp_path):
+    """A planted delta row must rank first; tombstoning it removes it
+    from the merged answer under every base method."""
+    rng = np.random.RandomState(5)
+    base = rng.randn(150, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, with_graph=True, with_scann=True,
+                    num_leaves=8, graph_m=8, ef_construction=32)
+    row = rng.randn(1, DIM).astype(np.float32)
+    (rid,) = idx.insert(row)
+    assert rid == 150
+    q = row + 0.001 * rng.randn(1, DIM).astype(np.float32)
+    bm = np.full((1, idx.words()), 0xFFFFFFFF, np.uint32)
+    p = _params(ef_search=48, beam_width=48, max_hops=200, num_leaves_to_search=8)
+    for method in ("bruteforce", "scann", "sweeping"):
+        res = idx.search(jnp.asarray(q), jnp.asarray(bm),
+                         dataclasses.replace(p, strategy=method),
+                         method=method)
+        assert int(np.asarray(res.ids)[0, 0]) == rid, method
+    idx.delete(np.array([rid], np.int64))
+    for method in ("bruteforce", "scann", "sweeping"):
+        res = idx.search(jnp.asarray(q), jnp.asarray(bm),
+                         dataclasses.replace(p, strategy=method),
+                         method=method)
+        assert rid not in np.asarray(res.ids), method
+    idx.close()
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_folds_delta_and_stays_oracle_identical(tmp_path):
+    rng = np.random.RandomState(7)
+    base = rng.randn(100, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, delta_capacity=16)
+    queries = rng.randn(4, DIM).astype(np.float32)
+    idx.insert(rng.randn(12, DIM).astype(np.float32))
+    idx.delete(np.array([2, 104], np.int64))
+    idx.compact()
+    assert idx.base_n == 112 and idx.delta.count == 0
+    assert idx.compactions == 1
+    w = idx.words()
+    full = np.full((4, w), 0xFFFFFFFF, np.uint32)
+    _assert_matches_oracle(idx, queries, full, "post-compaction")
+    # deleted rows stay dead across the fold; inserts still work after
+    res = idx.search(jnp.asarray(queries), jnp.asarray(full), _params())
+    assert 2 not in np.asarray(res.ids) and 104 not in np.asarray(res.ids)
+    idx.insert(rng.randn(3, DIM).astype(np.float32))
+    _assert_matches_oracle(idx, queries, full, "insert after compaction")
+    idx.close()
+
+
+def test_compaction_auto_triggers_and_prunes_scann_postings(tmp_path):
+    rng = np.random.RandomState(9)
+    base = rng.randn(90, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, delta_capacity=8, with_scann=True,
+                    num_leaves=4)
+    idx.insert(rng.randn(6, DIM).astype(np.float32))
+    idx.delete(np.array([10, 92], np.int64))
+    idx.insert(rng.randn(6, DIM).astype(np.float32))   # overflow -> compact
+    assert idx.compactions == 1 and idx.base_n == 96
+    rowids = np.asarray(idx.scann.leaf_rowids)
+    assert 10 not in rowids and 92 not in rowids       # postings pruned
+    assert idx.tombstones.is_dead(np.array([10, 92])).all()
+    idx.close()
+
+
+def test_compaction_recall_within_cold_rebuild(tmp_path):
+    """Compacted index vs a cold index built directly over the same
+    union: recall@10 against brute-force ground truth within 0.02."""
+    rng = np.random.RandomState(11)
+    base = rng.randn(400, DIM).astype(np.float32)
+    extra = rng.randn(48, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, tag="rc", delta_capacity=48,
+                    with_graph=True, with_scann=True, num_leaves=8,
+                    graph_m=8, ef_construction=32)
+    idx.insert(extra)
+    idx.compact()
+    cold = _mk_index(tmp_path, np.concatenate([base, extra]), tag="cold",
+                     delta_capacity=48, with_graph=True, with_scann=True,
+                     num_leaves=8, graph_m=8, ef_construction=32)
+    queries = rng.randn(8, DIM).astype(np.float32)
+    w = idx.words()
+    bm = np.full((8, w), 0xFFFFFFFF, np.uint32)
+    p = _params(k=10, strategy="scann", num_leaves_to_search=4)
+    gt = _oracle(idx, bm, queries, k=10)[1]
+    recalls = {}
+    for name, ix in (("compacted", idx), ("cold", cold)):
+        got = np.asarray(ix.search(jnp.asarray(queries), jnp.asarray(bm),
+                                   p, method="scann").ids)
+        hits = sum(len(set(np.asarray(gt)[i]) & set(got[i]))
+                   for i in range(8))
+        recalls[name] = hits / (8 * 10)
+    assert recalls["compacted"] >= recalls["cold"] - 0.02, recalls
+    idx.close(); cold.close()
+
+
+# ---------------------------------------------------------------------------
+# buffer pool: dirty pages / invalidate / reset
+# ---------------------------------------------------------------------------
+
+def test_bufferpool_dirty_tracking_and_flush():
+    pool = BufferPool(4, segments={"delta": (0, 10)})
+    pool.access(np.array([0, 1]), dirty=True)
+    st_ = pool.state()
+    assert st_.dirty == 2 and st_.dirty_by_segment["delta"] == 2
+    assert pool.counters.dirtied == 2
+    # flush: pages stay resident, dirty drains, write-back counted
+    assert pool.flush() == 2
+    st_ = pool.state()
+    assert st_.dirty == 0 and pool.counters.page_writes == 2
+    assert st_.used == 2
+
+
+def test_bufferpool_dirty_eviction_writes_back():
+    pool = BufferPool(2, segments={"delta": (0, 100)})
+    pool.access(np.array([0, 1]), dirty=True)
+    base_writes = pool.counters.page_writes
+    pool.access(np.array([2, 3]))          # evicts both dirty victims
+    assert pool.counters.page_writes == base_writes + 2
+    assert pool.state().dirty == 0
+
+
+def test_bufferpool_invalidate_drops_without_writeback():
+    pool = BufferPool(8, segments={"scann": (0, 4),
+                                            "delta": (4, 8)})
+    pool.access(np.array([0, 1, 5]), dirty=True)
+    writes = pool.counters.page_writes
+    dropped = pool.invalidate(0, 4)        # compaction kills scann pages
+    assert dropped == 2
+    assert pool.counters.page_writes == writes        # NO write-back
+    assert pool.counters.invalidated == 2
+    st_ = pool.state()
+    assert st_.dirty == 1 and st_.dirty_by_segment.get("scann", 0) == 0
+    # reset() is the cold-restart: dirty dropped silently (durability is
+    # the WAL's job, not the pool's)
+    pool.reset()
+    assert pool.state().dirty == 0 and pool.state().used == 0
+
+
+# ---------------------------------------------------------------------------
+# costmodel: delta scan + write amplification
+# ---------------------------------------------------------------------------
+
+def test_costmodel_delta_scan_terms():
+    c0 = costmodel.delta_scan_counters(0, DIM, 0.5)
+    assert c0["filter_checks"] == 0 and c0["distance_comps"] == 0
+    c = costmodel.delta_scan_counters(256, DIM, 0.5)
+    assert c["filter_checks"] == 256
+    assert 0 < c["distance_comps"] <= 256
+    lo = costmodel.delta_scan_cycles(64, DIM, 0.5)
+    hi = costmodel.delta_scan_cycles(1024, DIM, 0.5)
+    assert 0 < lo < hi
+
+
+def test_costmodel_write_amplification():
+    assert costmodel.write_amplification(0, 0) == 1.0          # idle
+    assert costmodel.write_amplification(0, 3) == np.inf
+    wa = costmodel.write_amplification(1024, 2, wal_bytes=2048)
+    assert wa == (2048 + 2 * costmodel.PAGE_BYTES_WA) / 1024
+
+
+def test_costmodel_should_compact_policy():
+    # fill pressure alone triggers
+    assert costmodel.should_compact(96, 100, 10_000, DIM, 0.5)
+    # near-empty small delta over a huge base: keep accumulating
+    assert not costmodel.should_compact(4, 1024, 1_000_000, DIM, 0.5)
+    # scan tax grows with query volume until folding pays
+    heavy = costmodel.should_compact(512, 10_000, 2_000, DIM, 1.0,
+                                     queries_per_epoch=1e9)
+    assert heavy
+
+
+# ---------------------------------------------------------------------------
+# continuous serving with live ingest
+# ---------------------------------------------------------------------------
+
+def _graph_params():
+    return SearchParams(k=K, ef_search=32, beam_width=32, max_hops=150,
+                        strategy="sweeping", graph_exec_mode="frontier")
+
+
+def test_serving_ingest_visible_after_tick(tmp_path):
+    """Mutations applied at tick 0; every later-arriving request's merged
+    answer equals MutableIndex.search on the post-mutation state."""
+    rng = np.random.RandomState(13)
+    base = rng.randn(250, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, tag="srv", delta_capacity=64,
+                    with_graph=True, num_leaves=8, graph_m=8,
+                    ef_construction=32)
+    p = _graph_params()
+    ex = GraphExecutor(idx.graph, idx.store, strategy="sweeping")
+    nq = 4
+    queries = rng.randn(nq, DIM).astype(np.float32)
+    ins = rng.randn(8, DIM).astype(np.float32)
+    queries[0] = ins[0] + 0.01 * rng.randn(DIM).astype(np.float32)
+    bms = np.full((nq, idx.words()), 0xFFFFFFFF, np.uint32)
+    events = [IngestEvent(tick=0, kind="insert", rows=ins),
+              IngestEvent(tick=0, kind="delete",
+                          ids=np.array([7, 251], np.int64))]
+    reqs = [Request(rid=i, query=queries[i], bitmap=bms[i], arrival=1)
+            for i in range(nq)]
+    srv = ContinuousServer(ex, p, width=2, hop_chunk=8, index=idx,
+                           ingest=events)
+    recs, info = srv.serve(reqs, mode="continuous")
+    assert info["ingest_inserts"] == 1 and info["ingest_deletes"] == 1
+    ids, dists = results_in_order(recs, nq, p.k)
+    ref = idx.search(jnp.asarray(queries), jnp.asarray(bms), p,
+                     method="sweeping")
+    np.testing.assert_array_equal(np.asarray(ref.ids), ids)
+    assert np.array_equal(np.asarray(ref.dists), dists, equal_nan=True)
+    assert int(ids[0, 0]) == 250          # planted delta row ranks first
+    assert 251 not in ids                 # tombstoned delta row gone
+    idx.close()
+
+
+def test_serving_snapshot_isolation_mid_flight(tmp_path):
+    """A request in flight when an insert lands must NOT see it; a
+    request admitted afterwards must."""
+    rng = np.random.RandomState(17)
+    base = rng.randn(250, DIM).astype(np.float32)
+    idx = _mk_index(tmp_path, base, tag="iso", delta_capacity=64,
+                    with_graph=True, num_leaves=8, graph_m=8,
+                    ef_construction=32)
+    p = _graph_params()
+    ex = GraphExecutor(idx.graph, idx.store, strategy="sweeping")
+    q = rng.randn(2, DIM).astype(np.float32)
+    ins = rng.randn(4, DIM).astype(np.float32)
+    bms = np.full((2, idx.words()), 0xFFFFFFFF, np.uint32)
+    reqs = [Request(rid=0, query=q[0], bitmap=bms[0], arrival=0),
+            Request(rid=1, query=q[1], bitmap=bms[1], arrival=60)]
+    srv = ContinuousServer(ex, p, width=1, hop_chunk=8, index=idx,
+                           ingest=[IngestEvent(tick=2, kind="insert",
+                                               rows=ins)])
+    recs, _ = srv.serve(reqs, mode="continuous")
+    assert recs[0]["delta_count"] == 0     # admitted before the insert
+    assert recs[1]["delta_count"] == 4     # admitted after
+    idx.close()

@@ -1,0 +1,358 @@
+"""WAL durability + deterministic crash recovery (DESIGN.md §12).
+
+The crash-consistency contract, tested mechanically: kill the ingestion
+pipeline at EVERY WAL record boundary (and mid-record, the torn-tail
+case) and assert the recovered index's search results are bit-identical
+— ids, dists — to a reference that executed the same durable prefix
+uncrashed, across bruteforce, graph, and ScaNN executors.  Plus the WAL
+unit layer (CRC32C, torn-tail truncation vs true corruption, reopen,
+rollback-to-durable) and write-path fault injection survival
+(torn appends + failed fsyncs leave deterministic never-happened state).
+"""
+import os
+import shutil
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SearchParams
+from repro.core.mutable import MutableIndex
+from repro.storage import wal as W
+from repro.storage.faults import FaultPlan
+
+DIM = 12
+METHODS = ("bruteforce", "sweeping", "scann")
+
+
+def _params(method):
+    return SearchParams(k=5, strategy=method, ef_search=32, beam_width=32,
+                        max_hops=150, num_leaves_to_search=4)
+
+
+def _snap(idx, queries, bitmaps):
+    """Search results for every executor — the per-LSN reference the
+    crash matrix compares recovered indexes against."""
+    out = {}
+    for m in METHODS:
+        res = idx.search(jnp.asarray(queries), jnp.asarray(bitmaps),
+                         _params(m), method=m)
+        out[m] = (np.asarray(res.ids).copy(),
+                  np.asarray(res.dists).copy())
+    return out
+
+
+def _assert_snap_equal(ref, got, ctx):
+    for m in METHODS:
+        np.testing.assert_array_equal(
+            ref[m][0], got[m][0], err_msg=f"{m} ids diverged: {ctx}")
+        assert np.array_equal(ref[m][1], got[m][1], equal_nan=True), \
+            f"{m} dists diverged: {ctx}"
+
+
+def _index_kwargs():
+    return dict(delta_capacity=32, with_graph=True, with_scann=True,
+                num_leaves=4, graph_m=8, ef_construction=32, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# WAL unit layer
+# ---------------------------------------------------------------------------
+
+def test_crc32c_known_vector():
+    # RFC 3720 / iSCSI check value for "123456789"
+    assert W.crc32c(b"123456789") == 0xE3069283
+    assert W.crc32c(b"") == 0
+
+
+def test_record_roundtrip(tmp_path):
+    path = str(tmp_path / "wal")
+    w = W.WriteAheadLog(path)
+    rng = np.random.RandomState(0)
+    vecs = rng.randn(3, DIM).astype(np.float32)
+    ids = np.array([4, 9], np.int64)
+    w.append(W.REC_INSERT, W.encode_insert(100, vecs))
+    w.append(W.REC_DELETE, W.encode_delete(ids))
+    w.append(W.REC_CHECKPOINT, W.encode_meta({"step": 1}))
+    w.sync()
+    recs = w.replay()
+    assert [r.lsn for r in recs] == [1, 2, 3]
+    start, got = W.decode_insert(recs[0].payload)
+    assert start == 100
+    np.testing.assert_array_equal(got, vecs)
+    np.testing.assert_array_equal(W.decode_delete(recs[1].payload), ids)
+    assert W.decode_meta(recs[2].payload) == {"step": 1}
+    w.close()
+
+
+def test_torn_tail_truncates_at_every_cut(tmp_path):
+    """For every byte cut inside the last record, iteration yields
+    exactly the intact prefix and never raises — a crash can only lose
+    the tail, not poison the log."""
+    path = str(tmp_path / "wal")
+    w = W.WriteAheadLog(path)
+    for i in range(3):
+        w.append(W.REC_DELETE,
+                 W.encode_delete(np.arange(i + 1, dtype=np.int64)))
+    w.sync()
+    recs = w.replay()
+    w.close()
+    full = open(path, "rb").read()
+    bounds = [0] + [r.end for r in recs]
+    for cut in range(len(full) + 1):
+        t = str(tmp_path / "cut")
+        with open(t, "wb") as f:
+            f.write(full[:cut])
+        got = list(W.iter_records(t))
+        expect = sum(1 for b in bounds[1:] if b <= cut)
+        assert len(got) == expect, f"cut at {cut}"
+        assert [r.lsn for r in got] == list(range(1, expect + 1))
+
+
+def test_mid_log_damage_raises_corruption(tmp_path):
+    path = str(tmp_path / "wal")
+    w = W.WriteAheadLog(path)
+    for i in range(3):
+        w.append(W.REC_DELETE,
+                 W.encode_delete(np.array([i], np.int64)))
+    w.sync()
+    w.close()
+    data = bytearray(open(path, "rb").read())
+    data[W.HEADER_BYTES + 2] ^= 0xFF          # payload bit-flip, record 1
+    bad = str(tmp_path / "bad")
+    open(bad, "wb").write(bytes(data))
+    with pytest.raises(W.WalCorruption):
+        list(W.iter_records(bad))
+    # the SAME damage at the tail (later records cut away) is torn, not
+    # corrupt: silently truncated
+    first_end = next(iter(W.iter_records(path))).end
+    open(bad, "wb").write(bytes(data[:first_end]))
+    assert list(W.iter_records(bad)) == []
+
+
+def test_reopen_truncates_torn_tail_and_continues(tmp_path):
+    path = str(tmp_path / "wal")
+    w = W.WriteAheadLog(path)
+    w.append(W.REC_DELETE, W.encode_delete(np.array([1], np.int64)))
+    rec2 = w.append(W.REC_DELETE,
+                    W.encode_delete(np.array([2], np.int64)))
+    w.sync()
+    w.close()
+    # tear the second record's tail off on disk
+    with open(path, "r+b") as f:
+        f.truncate(rec2.end - 3)
+    w2 = W.WriteAheadLog(path)
+    assert w2.next_lsn == 2                   # lsn 2 was torn away
+    assert w2.offset == rec2.offset
+    w2.append(W.REC_DELETE, W.encode_delete(np.array([3], np.int64)))
+    w2.sync()
+    recs = w2.replay()
+    assert [r.lsn for r in recs] == [1, 2]
+    np.testing.assert_array_equal(W.decode_delete(recs[1].payload), [3])
+    w2.close()
+
+
+def test_rollback_to_durable(tmp_path):
+    path = str(tmp_path / "wal")
+    w = W.WriteAheadLog(path)
+    w.append(W.REC_DELETE, W.encode_delete(np.array([1], np.int64)))
+    w.sync()
+    w.append(W.REC_DELETE, W.encode_delete(np.array([2], np.int64)))
+    # fsync "failed": the un-synced tail must be dropped wholesale
+    w.rollback_to_durable()
+    assert w.offset == w.durable_offset and w.next_lsn == 2
+    w.append(W.REC_DELETE, W.encode_delete(np.array([3], np.int64)))
+    w.sync()
+    recs = w.replay()
+    assert [r.lsn for r in recs] == [1, 2]
+    np.testing.assert_array_equal(W.decode_delete(recs[1].payload), [3])
+    w.close()
+
+
+# ---------------------------------------------------------------------------
+# the crash matrix
+# ---------------------------------------------------------------------------
+
+def _ops(rng):
+    return [
+        ("insert", rng.randn(4, DIM).astype(np.float32)),
+        ("delete", np.array([3, 151], np.int64)),
+        ("insert", rng.randn(2, DIM).astype(np.float32)),
+        ("insert", rng.randn(5, DIM).astype(np.float32)),
+        ("delete", np.array([155, 40], np.int64)),
+        ("insert", rng.randn(1, DIM).astype(np.float32)),
+    ]
+
+
+def _apply(idx, op):
+    if op[0] == "insert":
+        idx.insert(op[1])
+    else:
+        idx.delete(op[1])
+
+
+@pytest.mark.crash
+def test_crash_matrix_every_record_boundary(tmp_path):
+    """Kill ingestion at every WAL record boundary AND mid-record; the
+    recovered index's searches must be bit-identical to the uncrashed
+    reference at that durable prefix, for all three executor families."""
+    rng = np.random.RandomState(2)
+    base = rng.randn(150, DIM).astype(np.float32)
+    queries = rng.randn(3, DIM).astype(np.float32)
+    wal_path = str(tmp_path / "wal")
+    ck = str(tmp_path / "ck")
+    idx = MutableIndex(base, wal_path, ck, **_index_kwargs())
+    bm = np.full((3, idx.words()), 0xFFFFFFFF, np.uint32)
+
+    # reference run: snapshot every executor's results after each op,
+    # keyed by the op's (durable) LSN
+    snaps = {0: _snap(idx, queries, bm)}
+    for op in _ops(rng):
+        _apply(idx, op)
+        snaps[idx.applied_lsn] = _snap(idx, queries, bm)
+    recs = idx.wal.replay()
+
+    # crash points: byte 0, every record end, and a cut inside every
+    # record's payload (the torn tail)
+    points = [(0, 0)]
+    prev_lsn = 0
+    for r in recs:
+        points.append((r.offset + r.length // 2,
+                       prev_lsn))                      # mid-record tear
+        points.append((r.end, r.lsn))
+        prev_lsn = r.lsn
+    for i, (cut, durable_lsn) in enumerate(points):
+        crashed = str(tmp_path / f"crash_{i}")
+        idx.wal.crash_copy(crashed, at_bytes=cut)
+        rec_ck = str(tmp_path / f"ck_{i}")             # no checkpoints yet
+        r_idx = MutableIndex.recover(base, crashed, rec_ck,
+                                     **_index_kwargs())
+        assert r_idx.applied_lsn == durable_lsn, f"point {i} (cut {cut})"
+        _assert_snap_equal(snaps[durable_lsn], _snap(r_idx, queries, bm),
+                           f"crash point {i} (cut {cut}, "
+                           f"lsn {durable_lsn})")
+        r_idx.close()
+    idx.close()
+
+
+@pytest.mark.crash
+def test_checkpoint_bounds_replay(tmp_path):
+    """Recovery restores the latest checkpoint and replays ONLY records
+    past its applied_lsn — and the result is still bit-identical."""
+    rng = np.random.RandomState(4)
+    base = rng.randn(150, DIM).astype(np.float32)
+    queries = rng.randn(3, DIM).astype(np.float32)
+    wal_path = str(tmp_path / "wal")
+    ck = str(tmp_path / "ck")
+    idx = MutableIndex(base, wal_path, ck, **_index_kwargs())
+    bm = np.full((3, idx.words()), 0xFFFFFFFF, np.uint32)
+    ops = _ops(rng)
+    for op in ops[:3]:
+        _apply(idx, op)
+    step = idx.checkpoint()
+    ckpt_lsn = idx.applied_lsn
+    for op in ops[3:]:
+        _apply(idx, op)
+    ref = _snap(idx, queries, bm)
+    r_idx = MutableIndex.recover(base, wal_path, ck, **_index_kwargs())
+    assert r_idx._ckpt_step == step
+    assert r_idx.applied_lsn == idx.applied_lsn > ckpt_lsn
+    _assert_snap_equal(ref, _snap(r_idx, queries, bm), "post-checkpoint")
+    idx.close(); r_idx.close()
+
+
+@pytest.mark.crash
+def test_compaction_crash_recovery(tmp_path):
+    """The compaction ordering invariant: the FULL checkpoint is durable
+    BEFORE the COMPACT marker.  Crashing (a) before compaction started,
+    (b) after the checkpoint but before the marker, and (c) after the
+    marker all recover to bit-identical states."""
+    rng = np.random.RandomState(6)
+    base = rng.randn(120, DIM).astype(np.float32)
+    queries = rng.randn(3, DIM).astype(np.float32)
+    wal_path = str(tmp_path / "wal")
+    ck = str(tmp_path / "ck")
+    idx = MutableIndex(base, wal_path, ck, **_index_kwargs())
+    bm = np.full((3, idx.words()), 0xFFFFFFFF, np.uint32)
+    idx.insert(rng.randn(10, DIM).astype(np.float32))
+    idx.delete(np.array([5, 125], np.int64))
+    pre_snap = _snap(idx, queries, bm)
+    pre_lsn = idx.applied_lsn
+    pre_offset = idx.wal.offset
+    # (a)'s disk state must predate the compaction checkpoint too
+    ck_pre = str(tmp_path / "ck_pre")
+    shutil.copytree(ck, ck_pre) if os.path.isdir(ck) \
+        else os.makedirs(ck_pre)
+    idx.compact()
+    post_snap = _snap(idx, queries, bm)
+    marker = idx.wal.replay()[-1]
+    assert marker.kind == W.REC_COMPACT
+
+    # (a) crash before compaction began: empty ckpt dir + old WAL prefix
+    wal_a = idx.wal.crash_copy(str(tmp_path / "wal_a"),
+                               at_bytes=pre_offset)
+    r_a = MutableIndex.recover(base, wal_a, ck_pre, **_index_kwargs())
+    assert r_a.applied_lsn == pre_lsn and r_a.compactions == 0
+    _assert_snap_equal(pre_snap, _snap(r_a, queries, bm), "pre-compaction")
+
+    # (b) checkpoint durable, marker torn away with the crash
+    wal_b = idx.wal.crash_copy(str(tmp_path / "wal_b"),
+                               at_bytes=marker.offset)
+    r_b = MutableIndex.recover(base, wal_b, ck, **_index_kwargs())
+    assert r_b.compactions == 1 and r_b.base_n == idx.base_n
+    _assert_snap_equal(post_snap, _snap(r_b, queries, bm),
+                       "checkpoint-before-marker")
+
+    # (c) clean: marker present, replay past the checkpoint is a no-op
+    wal_c = idx.wal.crash_copy(str(tmp_path / "wal_c"))
+    r_c = MutableIndex.recover(base, wal_c, ck, **_index_kwargs())
+    _assert_snap_equal(post_snap, _snap(r_c, queries, bm), "post-marker")
+    for ix in (idx, r_a, r_b, r_c):
+        ix.close()
+
+
+@pytest.mark.crash
+def test_write_fault_survival(tmp_path):
+    """Injected torn appends + failed fsyncs: every faulted mutation is
+    deterministically 'never happened'; the index matches a clean shadow
+    that executed only the successful ops, before AND after recovery."""
+    plan = FaultPlan(seed=3, wal_torn_prob=0.35, fsync_fail_prob=0.25)
+    rng = np.random.RandomState(8)
+    base = rng.randn(100, DIM).astype(np.float32)
+    queries = rng.randn(3, DIM).astype(np.float32)
+    kwargs = dict(delta_capacity=64, with_graph=False, with_scann=False)
+    idx = MutableIndex(base, str(tmp_path / "wal"), str(tmp_path / "ck"),
+                       faults=plan, **kwargs)
+    shadow = MutableIndex(base, str(tmp_path / "wal_s"),
+                          str(tmp_path / "ck_s"), **kwargs)
+    faulted = 0
+    for i in range(20):
+        if rng.rand() < 0.7:
+            op = ("insert", rng.randn(rng.randint(1, 4),
+                                      DIM).astype(np.float32))
+        else:
+            hi = 100 + idx.delta.count
+            op = ("delete", rng.randint(0, hi, size=2).astype(np.int64))
+        try:
+            _apply(idx, op)
+        except (W.WalTornWrite, W.WalSyncError):
+            faulted += 1
+            continue                       # op never happened
+        _apply(shadow, op)
+    assert 0 < faulted < 20                # the plan actually fired
+    bm = np.full((3, idx.words()), 0xFFFFFFFF, np.uint32)
+    p = SearchParams(k=5, strategy="bruteforce")
+    live = idx.search(jnp.asarray(queries), jnp.asarray(bm), p)
+    want = shadow.search(jnp.asarray(queries), jnp.asarray(bm), p)
+    np.testing.assert_array_equal(np.asarray(want.ids),
+                                  np.asarray(live.ids))
+    idx.close()
+    # recovery from the faulted files reproduces the same state exactly
+    r_idx = MutableIndex.recover(base, str(tmp_path / "wal"),
+                                 str(tmp_path / "ck"), **kwargs)
+    rec = r_idx.search(jnp.asarray(queries), jnp.asarray(bm), p)
+    np.testing.assert_array_equal(np.asarray(want.ids),
+                                  np.asarray(rec.ids))
+    assert np.array_equal(np.asarray(want.dists), np.asarray(rec.dists),
+                          equal_nan=True)
+    shadow.close(); r_idx.close()
