@@ -173,6 +173,52 @@ def get_executor(name: str, method: str, use_pallas: bool = False,
 _DISTRIBUTED_EXECUTORS: dict = {}
 
 
+def get_sharded_executor(name: str, num_shards: int,
+                         strategy: str = "sweeping", quant: str = "none",
+                         storage=None):
+    """Mesh-sharded graph executor over a benchmark dataset (DESIGN.md
+    §13), cached per (dataset, shard count, strategy, quant) like
+    `_DISTRIBUTED_EXECUTORS`: re-blocking the adjacency/heap/shadow tiers
+    at every grid point would redo the host-side shard packing, and a
+    fresh instance per point would thrash nothing (the collective jit
+    cache is module-level) but waste the packing.
+
+    `storage` attaches a ShardedStorageAccountant (build one with
+    `get_sharded_storage`); storage-attached executors are NOT cached —
+    the accountant carries mutable pool state owned by the caller — and
+    at container bench scale the repacking they redo is trivial."""
+    from repro.core.distributed import ShardedGraphExecutor
+    key = (name, int(num_shards), strategy, quant)
+    ex = _SHARDED_EXECUTORS.get(key)
+    if ex is None:
+        ex = _SHARDED_EXECUTORS[key] = ShardedGraphExecutor(
+            get_graph(name, quant), get_dataset(name, quant)[0],
+            num_shards, strategy=strategy, graph_quant=quant)
+    if storage is None:
+        return ex
+    return ShardedGraphExecutor(ex.graph, ex.store, num_shards,
+                                strategy=strategy, graph_quant=quant,
+                                storage=storage)
+
+
+def get_sharded_storage(name: str, num_shards: int, quant: str = "none",
+                        capacity_frac: float = 1.0, policy: str = "lru"):
+    """Per-shard StorageEngines (each holding capacity_frac / num_shards
+    of the dataset's page space — the aggregate pool budget stays fixed
+    as the shard count sweeps) wrapped in the accounting facade."""
+    from repro.core.distributed import make_sharded_storage
+    from repro.storage import make_storage_engine
+    store, _ = get_dataset(name, quant)
+    graph = get_graph(name, quant)
+    engines = [make_storage_engine(
+        store, graph=graph, capacity_frac=capacity_frac / num_shards,
+        policy=policy) for _ in range(num_shards)]
+    return make_sharded_storage(engines, store.n)
+
+
+_SHARDED_EXECUTORS: dict = {}
+
+
 def run_storage_measured(name: str, method: str, sel: float, params):
     """One cold-pool measured run at `params` (capacity = full page
     space): the shared protocol behind table6's measured-page columns and

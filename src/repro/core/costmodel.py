@@ -55,6 +55,12 @@ class CostConstants:
     # page_access * page_miss_extra (read into shared buffers from the
     # OS cache / storage).  1.0 = flat memory, no pool.
     page_miss_extra: float = 1.0
+    # Mesh-sharded traversal (DESIGN.md §13): cycles per byte moved by
+    # the beam-exchange collectives.  ICI roofline is ~6 B/cycle
+    # (~0.17 cy/B); padded for launch latency + the small-message regime
+    # the per-hop reductions live in.  Single-device predictions never
+    # read it (the collective volume is 0 at num_shards == 1).
+    collective_per_byte: float = 0.5
 
 
 # Calibrated to reproduce Fig. 10 / Table 2 shapes (see module docstring).
@@ -265,6 +271,69 @@ def stats_table_row(stats: SearchStats) -> dict[str, float]:
 
 
 # ---------------------------------------------------------------------------
+# Mesh-sharded traversal terms (DESIGN.md §13).
+#
+# The sharded frontier engine's extra cost over 1/S of the single-device
+# cycles is pure collective volume, in two regimes:
+#
+#   lockstep (E=1):  every superstep all-reduces the candidate block's
+#       owner-masked distances (pmin, f32) and adjacency entries (pmax,
+#       int32) — 8 B per scored candidate, moved ~2·(S-1)/S times by a
+#       ring all-reduce.  distance_comps counts exactly those candidates.
+#   drift (E>1):     every E supersteps each shard all-gathers the other
+#       shards' (dist, id) beams — ef_search · 8 B · (S-1) received per
+#       exchange, ceil(hops/E) exchanges.
+# ---------------------------------------------------------------------------
+
+def beam_exchange_bytes(counters: Mapping[str, float], params: SearchParams,
+                        num_shards: int) -> float:
+    """Per-query collective bytes of the sharded frontier engine."""
+    S = int(num_shards)
+    if S <= 1:
+        return 0.0
+    E = max(1, int(params.beam_exchange_interval))
+    if E == 1:
+        return 8.0 * counters["distance_comps"] * 2.0 * (S - 1) / S
+    exchanges = -(-counters["hops"] // E)
+    return 8.0 * params.ef_search * exchanges * (S - 1)
+
+
+def sharded_cycle_summary(stats: SearchStats, params: SearchParams,
+                          dim: int, num_shards: int,
+                          constants: CostConstants = SYSTEM,
+                          graph_quant: str = "none",
+                          per_shard_storage=None, batch_q: int = 1,
+                          clock_hz: float = 3.0e9, threads: int = 16
+                          ) -> dict[str, float]:
+    """Aggregate modeled cost of one sharded batch (bench_sharding.py).
+
+    The single-device cycle total parallelizes across shards (each shard
+    scores/fetches only its owned rows); on top ride the beam-exchange
+    collective term and — when the per-shard StorageStats from a
+    `ShardedStorageAccountant` replay are given — a straggler term: the
+    batch finishes with the SLOWEST shard's measured miss penalty, not
+    the mean (`max - mean` of the per-shard penalties).  Returns the
+    per-point record the sharding bench emits: cycles/query, collective
+    bytes + cycles, straggler extra, and aggregated modeled QPS."""
+    row = stats_table_row(stats)
+    base = component_cycles(row, dim, constants,
+                            graph_quant=graph_quant)["total"]
+    cbytes = beam_exchange_bytes(row, params, num_shards)
+    ccycles = cbytes * constants.collective_per_byte
+    straggler = 0.0
+    if per_shard_storage:
+        pens = [measured_miss_penalty(p, batch_q, constants)
+                for p in per_shard_storage]
+        straggler = max(pens) - float(np.mean(pens))
+    cycles = base / max(int(num_shards), 1) + ccycles + straggler
+    amp = 1.0 if threads <= 1 else 1.5
+    qps = threads / (cycles * amp / clock_hz)
+    return {"cycles_per_query": cycles, "base_cycles": base,
+            "collective_bytes": cbytes, "collective_cycles": ccycles,
+            "straggler_cycles": straggler, "modeled_qps": qps}
+
+
+# ---------------------------------------------------------------------------
 # Predictive mode (DESIGN.md §6).
 #
 # Closed-form EXPECTED Table 6 counters per strategy, as a function of the
@@ -428,7 +497,8 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
                    selectivity: float, correlation: float = 1.0,
                    constants: CostConstants = SYSTEM,
                    batch_q: int = 1, pool_state=None,
-                   measured_unique_frac: Optional[float] = None) -> float:
+                   measured_unique_frac: Optional[float] = None,
+                   num_shards: int = 1) -> float:
     """Expected per-query modeled cycles (the planner's ranking metric).
 
     `batch_q` is the size of the query batch the plan will execute with:
@@ -458,9 +528,17 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
         counters, shape.dim, constants,
         engine_scale(strategy, params, batch_q, measured_unique_frac),
         graph_quant=gq)["total"]
-    return base + cache_miss_penalty(counters, strategy, pool_state,
-                                     constants, graph_quant=gq,
-                                     dim=shape.dim)
+    total = base + cache_miss_penalty(counters, strategy, pool_state,
+                                      constants, graph_quant=gq,
+                                      dim=shape.dim)
+    if num_shards > 1 and strategy in GRAPH_STRATEGIES:
+        # Mesh-sharded frontier (DESIGN.md §13): scoring, fetches, and
+        # the per-shard page streams all parallelize by row ownership;
+        # the beam-exchange collective volume is the serial residue.
+        total = total / num_shards \
+            + beam_exchange_bytes(counters, params, num_shards) \
+            * constants.collective_per_byte
+    return total
 
 
 # ---------------------------------------------------------------------------

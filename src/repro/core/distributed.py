@@ -303,3 +303,485 @@ class DistributedScannExecutor:
             self.sharded, params,
             use_pallas=self.use_pallas if use_pallas is None else use_pallas,
             heap_layout=heap_layout or self.heap_layout)
+
+
+# ===========================================================================
+# Mesh-sharded graph + storage tiers (DESIGN.md §13)
+# ===========================================================================
+# The ScaNN tier above shards *leaves*; the tier below shards the graph's
+# row-indexed state — base/upper adjacency, the f32 heap, the SQ8 shadow
+# heap, and (host-side) one BufferPool per shard.  Traversal runs as
+# per-shard frontier supersteps over the `ShardGraph`/`ShardStore` views
+# (core/shardtypes.py), whose gather helpers inside core/graph_search.py
+# resolve every global-row read by ownership + a pmin/pmax collective:
+#
+#   * beam_exchange_interval == 1 (lockstep): per-query lane state is
+#     replicated on every shard and only the storage reads shard.  The
+#     owner-masked reductions SELECT the owner's untouched payload, so the
+#     final ids/dists/counters are bit-identical to the single-device
+#     frontier engine for ANY shard count — by construction, not by luck.
+#   * beam_exchange_interval == E > 1 (drift): each shard traverses its
+#     own induced subgraph (remote adjacency masked -1, remote distances
+#     +inf) for E supersteps, then an all-gather top-k beam exchange
+#     re-seeds every shard's beam from the global top-ef.  Cheaper
+#     collectives (ef ids+dists every E hops instead of every candidate
+#     every hop), approximate results.
+#
+# The same shard body runs under jax.vmap(..., axis_name=...) — the
+# single-device emulation this CPU container uses — and under shard_map on
+# a real mesh (`sharded_graph_search_fn`); `ShardStore.offset` is derived
+# from lax.axis_index at trace time so both bind identically.
+
+from repro.core import costmodel
+from repro.core import graph_search as gs
+from repro.core.hnsw import HNSWGraph
+from repro.core.shardtypes import SHARD_AXIS, ShardGraph, ShardStore
+from repro.storage.bufferpool import BufferPoolState
+from repro.storage.engine import StorageStats, merge_storage_stats
+
+
+def shard_graph_tiers(graph: HNSWGraph, store: VectorStore,
+                      num_shards: int, axis: str = SHARD_AXIS,
+                      f32: bool = True):
+    """Partition the adjacency + heap tiers by contiguous row range.
+
+    Returns (ShardGraph, ShardStore) view pytrees whose data leaves carry
+    a leading (num_shards,) stack axis — shard s owns global rows
+    [s*rps, (s+1)*rps) with rps = ceil(n / num_shards), the last block
+    zero/-1 padded.  Adjacency values stay GLOBAL row ids.  `f32=False`
+    drops the full-precision tier from the views (SQ8-only giant-scale
+    mode; the executor validates quant/rerank compatibility).
+    """
+    n = graph.n
+    if store.n != n:
+        raise ValueError(f"graph ({n} rows) and store ({store.n} rows) "
+                         "disagree")
+    S = int(num_shards)
+    if S < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    rps = -(-n // S)
+
+    def block(a, fill):
+        a = np.asarray(a)
+        pad = S * rps - a.shape[0]
+        if pad:
+            a = np.concatenate(
+                [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+        return jnp.asarray(a.reshape(S, rps, *a.shape[1:]))
+
+    nb = np.asarray(graph.neighbors)                    # (L, n, deg)
+    L, _, deg = nb.shape
+    pad = S * rps - n
+    if pad:
+        nb = np.concatenate([nb, np.full((L, pad, deg), -1, nb.dtype)],
+                            axis=1)
+    nb = np.ascontiguousarray(
+        nb.reshape(L, S, rps, deg).transpose(1, 0, 2, 3))
+
+    # Per-shard drift entry: the shard's own highest-level node (global
+    # id), -1 on an all-padding shard.  For S=1 this IS the global entry.
+    levels = np.asarray(graph.node_level)
+    local_entry = np.full((S,), -1, np.int32)
+    for s in range(S):
+        lo, hi = s * rps, min((s + 1) * rps, n)
+        if lo < hi:
+            local_entry[s] = lo + int(np.argmax(levels[lo:hi]))
+
+    gviews = ShardGraph(
+        neighbors=jnp.asarray(nb),
+        entry_point=jnp.full((S,), int(graph.entry_point), jnp.int32),
+        local_entry=jnp.asarray(local_entry),
+        m=graph.m, axis=axis, n_total=n, collective=True)
+
+    has_f32 = f32 and store.vectors is not None
+    has_q = store.q_vectors is not None
+    sviews = ShardStore(
+        vectors=block(store.vectors, 0) if has_f32 else None,
+        norms_sq=block(store.norms_sq, 0) if has_f32 else None,
+        metric=store.metric, axis=axis, n_total=n, collective=True,
+        q_vectors=block(store.q_vectors, 0) if has_q else None,
+        q_scale=(jnp.broadcast_to(jnp.asarray(store.q_scale),
+                                  (S,) + np.shape(store.q_scale))
+                 if has_q else None),
+        q_mean=(jnp.broadcast_to(jnp.asarray(store.q_mean),
+                                 (S,) + np.shape(store.q_mean))
+                if has_q else None),
+        q_norms_sq=block(store.q_norms_sq, 0) if has_q else None)
+    return gviews, sviews
+
+
+def _graph_shard_body(gv: ShardGraph, sv: ShardStore, queries, bitmaps,
+                      params: SearchParams, use_pallas: bool,
+                      collect_trace: bool):
+    """One shard's program — bound under vmap-with-axis-name or shard_map."""
+    E = params.beam_exchange_interval
+    if E <= 1:
+        # Lockstep: the full frontier engine over collective views.  Lane
+        # state (beams, pools, visited bitsets, counters) is replicated,
+        # so the carried stats are already the single-device counters —
+        # no psum (it would multiply the replicated counts by S).
+        return gs._frontier_search_batch(gv, sv, queries, bitmaps, params,
+                                         use_pallas, collect_trace)
+    # Drift: induced-subgraph traversal between beam exchanges.  Each
+    # shard zooms in from its own local_entry, runs E supersteps on
+    # masked (non-collective) views, then the all-gather top-ef exchange
+    # re-seeds W.  The outer cond all-gathers `done` so every shard runs
+    # the same trip count and the in-body collectives stay aligned.
+    lg = dataclasses.replace(gv, collective=False,
+                             entry_point=gv.local_entry)
+    ls = dataclasses.replace(sv, collective=False)
+    st = gs.frontier_init(lg, ls, queries, bitmaps, params)
+    rounds = -(-params.max_hops // E)
+
+    def cond(c):
+        t, s = c
+        return (t < rounds) & ~jnp.all(jax.lax.all_gather(s.done, gv.axis))
+
+    def body(c):
+        t, s = c
+        s = gs.step_supersteps(lg, ls, s, params, E, use_pallas=use_pallas)
+        s = gs.beam_exchange(ls, s, params, gv.axis)
+        return t + 1, s
+
+    _, st = jax.lax.while_loop(cond, body,
+                               (jnp.asarray(0, jnp.int32), st))
+    # Finalize on COLLECTIVE views: the beam now holds remote rows, and
+    # the exact sq8 rerank / emit must read their true payloads.  The
+    # finalize delta (rerank counters) is computed replicated, so add it
+    # once to the psum'd (per-shard, genuinely different) traversal work.
+    d, ids, fstats, _ = gs.frontier_finalize(gv, sv, st, params)
+    delta = jax.tree.map(lambda a, b: a - b, fstats, st.stats)
+    total = jax.tree.map(lambda a: jax.lax.psum(a, gv.axis), st.stats)
+    stats = jax.tree.map(lambda a, b: a + b, total, delta)
+    return d, ids, stats
+
+
+def _squeeze0(tree):
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+@partial(jax.jit, static_argnames=("params", "use_pallas", "collect_trace"))
+def _sharded_search(gviews, sviews, queries, bitmaps, params, use_pallas,
+                    collect_trace):
+    out = jax.vmap(
+        lambda gv, sv: _graph_shard_body(gv, sv, queries, bitmaps, params,
+                                         use_pallas, collect_trace),
+        in_axes=(0, 0), axis_name=gviews.axis)(gviews, sviews)
+    # Every output leaf is replicated across the stack axis (lockstep) or
+    # already reduced to identical values (drift: all-gather/psum), so
+    # shard 0's copy IS the answer.
+    return _squeeze0(out)
+
+
+@partial(jax.jit, static_argnames=("params", "collect_trace"))
+def _sharded_init(gviews, sviews, queries, bitmaps, deadlines, params,
+                  collect_trace):
+    out = jax.vmap(
+        lambda gv, sv: gs.frontier_init(gv, sv, queries, bitmaps, params,
+                                        collect_trace=collect_trace,
+                                        deadlines=deadlines),
+        in_axes=(0, 0), axis_name=gviews.axis)(gviews, sviews)
+    return _squeeze0(out)
+
+
+@partial(jax.jit, static_argnames=("params", "width", "collect_trace"))
+def _sharded_idle(gviews, sviews, params, width, collect_trace):
+    out = jax.vmap(
+        lambda gv, sv: gs.frontier_idle(gv, sv, params, width,
+                                        collect_trace=collect_trace),
+        in_axes=(0, 0), axis_name=gviews.axis)(gviews, sviews)
+    return _squeeze0(out)
+
+
+@partial(jax.jit, static_argnames=("params", "n_hops", "use_pallas",
+                                   "dynamic_deadline"))
+def _sharded_step(gviews, sviews, state, params, n_hops, use_pallas,
+                  dynamic_deadline):
+    out = jax.vmap(
+        lambda gv, sv: gs.step_supersteps(gv, sv, state, params, n_hops,
+                                          use_pallas=use_pallas,
+                                          dynamic_deadline=dynamic_deadline),
+        in_axes=(0, 0), axis_name=gviews.axis)(gviews, sviews)
+    return _squeeze0(out)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def _sharded_finalize(gviews, sviews, state, params):
+    out = jax.vmap(
+        lambda gv, sv: gs.frontier_finalize(gv, sv, state, params),
+        in_axes=(0, 0), axis_name=gviews.axis)(gviews, sviews)
+    return _squeeze0(out)
+
+
+class ShardedStorageAccountant:
+    """Per-shard BufferPool replay facade (DESIGN.md §13).
+
+    One `StorageEngine` (with its own pool) per shard, each over the
+    GLOBAL page layout — shard s's pool only ever sees pages of rows
+    [lo, hi), so per-shard capacity is naturally `capacity_frac /
+    num_shards` of the global budget (the caller builds the engines that
+    way).  `account_graph` slices the replicated lockstep trace by row
+    ownership, replays each slice through its shard's pool, and merges
+    the per-shard StorageStats into the aggregate the cost model and
+    benchmarks consume; `last_per_shard` keeps the unmerged parts for
+    per-shard hit-rate telemetry."""
+
+    def __init__(self, engines, n: int):
+        if not engines:
+            raise ValueError("need at least one per-shard engine")
+        self.engines = list(engines)
+        self.num_shards = len(self.engines)
+        self.n = int(n)
+        self.rows_per_shard = -(-self.n // self.num_shards)
+        self.last_per_shard: list[StorageStats] | None = None
+
+    # GraphExecutor-compatible layout probes (constructor validation).
+    @property
+    def graph(self):
+        return self.engines[0].graph
+
+    @property
+    def qheap(self):
+        return self.engines[0].qheap
+
+    def reset_cold(self) -> None:
+        for e in self.engines:
+            e.reset_cold()
+
+    def state(self) -> BufferPoolState:
+        """Aggregate residency snapshot: capacities/used/dirty sum;
+        per-segment residency averages across shards (every engine lays
+        out the same global segments, and a row's pages live in exactly
+        one shard's pool — the mean is the global resident fraction up to
+        the per-shard page rounding)."""
+        states = [e.state() for e in self.engines]
+        residency = {seg: float(np.mean([s.residency.get(seg, 0.0)
+                                         for s in states]))
+                     for seg in states[0].residency}
+        dirty_by: dict[str, int] = {}
+        for s in states:
+            for seg, v in s.dirty_by_segment.items():
+                dirty_by[seg] = dirty_by.get(seg, 0) + v
+        return BufferPoolState(
+            capacity=sum(s.capacity for s in states),
+            used=sum(s.used for s in states),
+            residency=residency,
+            dirty=sum(s.dirty for s in states),
+            dirty_by_segment=dirty_by)
+
+    def account_graph(self, heap_steps, index_steps, rerank_rows=None,
+                      quant: bool = False) -> StorageStats:
+        hsteps = np.asarray(heap_steps)
+        isteps = np.asarray(index_steps)
+        parts = []
+        for s, eng in enumerate(self.engines):
+            lo = s * self.rows_per_shard
+            hi = min(lo + self.rows_per_shard, self.n)
+            hs = np.array(hsteps, copy=True)
+            is_ = np.array(isteps, copy=True)
+            hs[:, :lo] = gs.TRACE_UNTOUCHED
+            hs[:, hi:] = gs.TRACE_UNTOUCHED
+            is_[:, :lo] = gs.TRACE_UNTOUCHED
+            is_[:, hi:] = gs.TRACE_UNTOUCHED
+            rr = None
+            if rerank_rows is not None:
+                rr = np.array(rerank_rows, copy=True)
+                rr[(rr < lo) | (rr >= hi)] = -1
+            parts.append(eng.account_graph(hs, is_, rerank_rows=rr,
+                                           quant=quant))
+        self.last_per_shard = parts
+        return merge_storage_stats(parts)
+
+
+def make_sharded_storage(engines, n: int) -> ShardedStorageAccountant:
+    """Wrap per-shard engines (one BufferPool each, typically built with
+    capacity_frac / num_shards) into the accounting facade."""
+    return ShardedStorageAccountant(engines, n)
+
+
+class ShardedGraphExecutor:
+    """The five graph strategies over mesh-sharded tiers (DESIGN.md §13).
+
+    Mirrors `GraphExecutor`'s full surface — plan/execute/search plus the
+    stepped-frontier delegates — so benchmarks and the continuous-batching
+    server consume it unchanged.  In lockstep mode the per-lane
+    FrontierState is replicated on every shard, so the executor keeps ONE
+    single-device-shaped state and binds it to all shards per step; ids,
+    dists, and all seven counters are bit-identical to `GraphExecutor`
+    for any shard count."""
+
+    def __init__(self, graph: HNSWGraph, store: VectorStore,
+                 num_shards: int, strategy: str = "sweeping",
+                 use_pallas: bool = False,
+                 storage: ShardedStorageAccountant | None = None,
+                 graph_quant: str = "none", axis: str = SHARD_AXIS,
+                 f32: bool = True):
+        if strategy not in costmodel.GRAPH_STRATEGIES:
+            raise ValueError(f"unknown graph strategy {strategy!r}")
+        if graph_quant not in ("none", "sq8"):
+            raise ValueError(f"unknown graph_quant {graph_quant!r}")
+        if graph_quant == "sq8" and store.q_vectors is None:
+            raise ValueError("graph_quant='sq8' needs a quantize_store'd "
+                             "VectorStore (SQ8 shadow missing)")
+        if not f32:
+            if graph_quant != "sq8":
+                raise ValueError("f32=False (no full-precision tier) "
+                                 "requires graph_quant='sq8'")
+        if storage is not None:
+            if storage.num_shards != num_shards:
+                raise ValueError(
+                    f"storage facade has {storage.num_shards} shards, "
+                    f"executor has {num_shards}")
+            if storage.graph is None:
+                raise ValueError("storage engines lack a graph adjacency "
+                                 "layout; build them with graph=")
+            if graph_quant == "sq8" and storage.qheap is None:
+                raise ValueError("storage engines lack the qheap (SQ8 "
+                                 "shadow) segment")
+        self.graph = graph
+        self.store = store
+        self.num_shards = int(num_shards)
+        self.strategy = strategy
+        self.use_pallas = use_pallas
+        self.storage = storage
+        self.graph_quant = graph_quant
+        self.axis = axis
+        self._f32 = f32
+        self._gv, self._sv = shard_graph_tiers(graph, store, num_shards,
+                                               axis=axis, f32=f32)
+        base = strategy if graph_quant == "none" \
+            else f"{strategy}_{graph_quant}"
+        self.name = f"sharded{self.num_shards}_{base}"
+
+    def resolve_params(self, params: SearchParams) -> SearchParams:
+        """Plan-time coercion — same contract as GraphExecutor (the
+        resolved object is the jit cache key), plus the sharded-mode
+        validations."""
+        if params.strategy != self.strategy or \
+                params.graph_quant != self.graph_quant:
+            params = dataclasses.replace(params, strategy=self.strategy,
+                                         graph_quant=self.graph_quant)
+        if params.graph_exec_mode != "frontier":
+            raise ValueError("the sharded executor runs the frontier "
+                             "engine only (graph_exec_mode='frontier')")
+        E = params.beam_exchange_interval
+        if E < 1:
+            raise ValueError(f"beam_exchange_interval must be >= 1, "
+                             f"got {E}")
+        if E > 1:
+            if self.strategy == "iterative_scan":
+                raise ValueError(
+                    "drift mode (beam_exchange_interval > 1) drives the "
+                    "base beam engine; iterative_scan's W is an emission "
+                    "buffer, not a beam — run it lockstep "
+                    "(beam_exchange_interval=1)")
+            if self.storage is not None:
+                raise ValueError(
+                    "storage accounting needs the lockstep replicated "
+                    "trace; set beam_exchange_interval=1")
+        if not self._f32 and params.sq8_rerank:
+            raise ValueError("no f32 tier to rerank from (f32=False); "
+                             "set sq8_rerank=False")
+        return params
+
+    def _lockstep(self, params: SearchParams) -> SearchParams:
+        params = self.resolve_params(params)
+        if params.beam_exchange_interval > 1:
+            raise ValueError("stepped serving runs lockstep only; drift "
+                             "mode (beam_exchange_interval > 1) is "
+                             "batch-path only")
+        return params
+
+    def plan(self, queries, bitmaps, params: SearchParams):
+        from repro.core.executor import SearchPlan
+        return SearchPlan(self.strategy, self.resolve_params(params),
+                          queries, bitmaps)
+
+    def execute(self, plan):
+        from repro.core.types import SearchResult
+        p = plan.params
+        if self.storage is None:
+            d, ids, stats = _sharded_search(self._gv, self._sv,
+                                            plan.queries, plan.bitmaps, p,
+                                            self.use_pallas, False)
+            return SearchResult(dists=d, ids=ids, stats=stats,
+                                strategy=self.strategy, plan=plan,
+                                anytime=costmodel.evaluate_anytime(
+                                    stats, p, self.store.dim, ids,
+                                    hop_cap=p.max_hops))
+        d, ids, stats, trace = _sharded_search(self._gv, self._sv,
+                                               plan.queries, plan.bitmaps,
+                                               p, self.use_pallas, True)
+        rr = trace.get("rerank_rows")
+        sstats = self.storage.account_graph(
+            np.asarray(trace["heap_steps"]),
+            np.asarray(trace["index_steps"]),
+            rerank_rows=None if rr is None else np.asarray(rr),
+            quant=self.graph_quant == "sq8")
+        return SearchResult(dists=d, ids=ids, stats=stats,
+                            strategy=self.strategy, plan=plan,
+                            storage=sstats,
+                            anytime=costmodel.evaluate_anytime(
+                                stats, p, self.store.dim, ids,
+                                hop_cap=p.max_hops))
+
+    def search(self, queries, bitmaps, params: SearchParams):
+        return self.execute(self.plan(queries, bitmaps, params))
+
+    # ---- stepped frontier delegates (serving/continuous.py) ----------
+
+    def idle_frontier(self, params: SearchParams, width: int):
+        return _sharded_idle(self._gv, self._sv, self._lockstep(params),
+                             width, self.storage is not None)
+
+    def init_frontier(self, queries, bitmaps, params: SearchParams,
+                      deadlines=None):
+        return _sharded_init(self._gv, self._sv, queries, bitmaps,
+                             deadlines, self._lockstep(params),
+                             self.storage is not None)
+
+    def write_frontier_slot(self, state, lane, slot):
+        return gs.frontier_write_slot(state, lane, slot)
+
+    def step_frontier(self, state, params: SearchParams, n_hops: int,
+                      dynamic_deadline: bool = False):
+        return _sharded_step(self._gv, self._sv, state,
+                             self._lockstep(params), n_hops,
+                             self.use_pallas, dynamic_deadline)
+
+    def finalize_frontier(self, state, params: SearchParams):
+        return _sharded_finalize(self._gv, self._sv, state,
+                                 self._lockstep(params))
+
+
+def sharded_graph_search_fn(graph: HNSWGraph, store: VectorStore,
+                            num_shards: int, params: SearchParams,
+                            mesh: Mesh | None = None,
+                            axis: str = SHARD_AXIS,
+                            use_pallas: bool = False):
+    """The real-mesh path: the same shard body under `shard_map`.
+
+    Builds (or takes) a 1-D mesh over the first `num_shards` devices and
+    returns a jitted (queries, bitmaps) -> (dists, ids, SearchStats) fn.
+    Validation twin of the vmap emulation — in lockstep mode both produce
+    bit-identical results (tests/test_sharding.py runs this under
+    --xla_force_host_platform_device_count)."""
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < num_shards:
+            raise ValueError(f"need {num_shards} devices for "
+                             f"{num_shards} shards, have {len(devs)}")
+        mesh = Mesh(np.asarray(devs[:num_shards]), (axis,))
+    gv, sv = shard_graph_tiers(graph, store, num_shards, axis=axis)
+
+    def local(gstack, sstack, queries, bitmaps):
+        g = _squeeze0(gstack)
+        s = _squeeze0(sstack)
+        return _graph_shard_body(g, s, queries, bitmaps, params,
+                                 use_pallas, False)
+
+    fn = compat.shard_map(local, mesh=mesh,
+                          in_specs=(P(axis), P(axis), P(), P()),
+                          out_specs=(P(), P(), P()),
+                          check_vma=False)
+    return jax.jit(lambda q, b: fn(gv, sv, q, b))

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.core.costmodel import budget_cycle_weights
 from repro.core.hnsw import HNSWGraph
+from repro.core.shardtypes import ShardGraph, ShardStore
 from repro.core.types import (Array, SearchParams, SearchStats, VectorStore,
                               bitset_mark, bitset_words, distance,
                               heap_pages_per_vector, probe_bitmap,
@@ -119,8 +120,32 @@ def _gather_vec_dist(store: VectorStore, q, ids, quant: str = "none"):
     """Gather rows + distance to q.  quant="sq8" reads the SQ8 shadow heap
     and dequantizes (x̂ = q_vectors·scale + mean) with the precomputed
     dequantized norms — the exact arithmetic `ref.frontier_scan_sq8_ref`
-    mirrors, so both engines stay bit-identical per quant mode."""
+    mirrors, so both engines stay bit-identical per quant mode.
+
+    On a `ShardStore` view (DESIGN.md §13) the gather resolves by row
+    ownership: each shard scores its own rows (same clamp semantics — a
+    -1 id clamps to global row 0, which shard 0 owns, reproducing the
+    single-device garbage value bit-exactly) and, in collective mode, a
+    `pmin` over the mesh axis selects the owner's distance (non-owners
+    contribute +inf) — no arithmetic touches the owner's value, so the
+    result is bit-identical to the single-device gather.  Non-collective
+    views return +inf for remote rows (drift-mode induced subgraph)."""
     safe = jnp.maximum(ids, 0)
+    if isinstance(store, ShardStore):
+        off = store.offset
+        own = (safe >= off) & (safe < off + store.local_n)
+        local = jnp.clip(safe - off, 0, store.local_n - 1)
+        if quant == "sq8":
+            vecs = (store.q_vectors[local].astype(jnp.float32)
+                    * store.q_scale + store.q_mean)
+            nsq = store.q_norms_sq[local]
+        else:
+            vecs = store.vectors[local]
+            nsq = store.norms_sq[local]
+        d = jnp.where(own, distance(store.metric, q, vecs, nsq), INF)
+        if store.collective:
+            d = jax.lax.pmin(d, store.axis)
+        return d
     if quant == "sq8":
         vecs = (store.q_vectors[safe].astype(jnp.float32) * store.q_scale
                 + store.q_mean)
@@ -129,6 +154,31 @@ def _gather_vec_dist(store: VectorStore, q, ids, quant: str = "none"):
         vecs = store.vectors[safe]
         nsq = store.norms_sq[safe]
     return distance(store.metric, q, vecs, nsq)
+
+
+def _adj(graph, lvl, ids):
+    """Adjacency read `graph.neighbors[lvl, ids]`, dispatched on the view.
+
+    `ids` are non-negative at every call site (popped/clamped upstream).
+    On a `ShardGraph` (DESIGN.md §13) each shard reads the rows it owns;
+    in collective mode the owner's row is broadcast via `pmax` over the
+    mesh axis (non-owners contribute INT32_MIN, below the -1 padding, so
+    the reduction returns the owner's int32 row untouched — bit-exact).
+    Non-collective views keep traversal on the induced subgraph: remote
+    rows read as all--1 and remote neighbor *values* are masked to -1.
+    """
+    if not isinstance(graph, ShardGraph):
+        return graph.neighbors[lvl, ids]
+    off = graph.offset
+    own = (ids >= off) & (ids < off + graph.local_n)
+    local = jnp.clip(ids - off, 0, graph.local_n - 1)
+    nb = graph.neighbors[lvl, local]
+    if graph.collective:
+        nb = jnp.where(own[..., None], nb, jnp.iinfo(jnp.int32).min)
+        return jax.lax.pmax(nb, graph.axis)
+    nb = jnp.where(own[..., None], nb, -1)
+    keep = (nb >= off) & (nb < off + graph.local_n)
+    return jnp.where(keep, nb, -1)
 
 
 # ---------------------------------------------------------------------------
@@ -204,7 +254,7 @@ def _zoom_in(graph: HNSWGraph, store: VectorStore, q, stats: SearchStats,
 
         def body(state):
             cur, cur_d, _, st, hs, is_ = state
-            nbrs = graph.neighbors[lvl, cur]
+            nbrs = _adj(graph, lvl, cur)
             valid = nbrs >= 0
             d = jnp.where(valid, _gather_vec_dist(store, q, nbrs, quant),
                           INF)
@@ -242,7 +292,7 @@ def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited,
     instead of relying on XLA dead-code elimination.  `quant` picks the
     heap tier the candidate rows are fetched from (DESIGN.md §9).
     """
-    nb1 = graph.neighbors[0, node]                      # (2M,)
+    nb1 = _adj(graph, 0, node)                          # (2M,)
     v1 = nb1 >= 0
     unv1 = v1 & ~visited[jnp.maximum(nb1, 0)]
     pass1 = probe_bitmap(bitmap, nb1)
@@ -250,7 +300,7 @@ def _expand(graph: HNSWGraph, store: VectorStore, q, bitmap, node, visited,
     e = dict(nb1=nb1, v1=v1, unv1=unv1, pass1=pass1, d1=d1)
     if not two_hop:
         return e
-    nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]       # (2M, 2M)
+    nb2 = _adj(graph, 0, jnp.maximum(nb1, 0))           # (2M, 2M)
     nb2 = jnp.where(v1[:, None], nb2, -1)
     v2 = nb2 >= 0
     pass2 = probe_bitmap(bitmap, nb2)
@@ -772,7 +822,33 @@ def _union_gather(store: VectorStore, ids, dedup: bool,
 def _frontier_scores(queries, store: VectorStore, cids, bitmaps,
                      use_pallas: bool, quant: str):
     """Deduplicated-union fetch + fused scoring/filter-probe of one
-    candidate block, dispatched per quant tier (DESIGN.md §7/§9)."""
+    candidate block, dispatched per quant tier (DESIGN.md §7/§9).
+
+    On a `ShardStore` (DESIGN.md §13) the candidate rows are gathered
+    from the local block by ownership (bypassing `_union_gather`, whose
+    dedup sentinel indexes with the global n) and scored through the same
+    fused kernel; the owner-mask + collective `pmin` then reconstructs
+    the single-device distances bit-exactly (the kernel masks invalid ids
+    to +inf on every shard identically, and the filter-probe half is a
+    pure function of the replicated bitmaps + ids)."""
+    if isinstance(store, ShardStore):
+        safe = jnp.maximum(cids, 0)
+        off = store.offset
+        own = (safe >= off) & (safe < off + store.local_n)
+        local = jnp.clip(safe - off, 0, store.local_n - 1)
+        if quant == "sq8":
+            d, pass_ = kops.frontier_scan_sq8(
+                queries, store.q_vectors[local], store.q_scale,
+                store.q_mean, store.q_norms_sq[local], cids, bitmaps,
+                metric=store.metric, use_pallas=use_pallas)
+        else:
+            d, pass_ = kops.frontier_scan(
+                queries, store.vectors[local], store.norms_sq[local], cids,
+                bitmaps, metric=store.metric, use_pallas=use_pallas)
+        d = jnp.where(own, d, INF)
+        if store.collective:
+            d = jax.lax.pmin(d, store.axis)
+        return d, pass_
     vecs, nsq = _union_gather(store, cids, dedup=use_pallas, quant=quant)
     if quant == "sq8":
         return kops.frontier_scan_sq8(queries, vecs, store.q_scale,
@@ -992,7 +1068,7 @@ def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     if tracing:   # adjacency read of the popped node (step ①)
         is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
 
-    nb1 = graph.neighbors[0, node]                       # (Q, deg)
+    nb1 = _adj(graph, 0, node)                           # (Q, deg)
     v1 = nb1 >= 0
     unv1 = v1 & ~_probe_batch(visited, nb1)
 
@@ -1078,7 +1154,7 @@ def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         if tracing:   # adjacency reads of the expanded branches
             is_ = _stamp_batch(is_, nb1,
                                expand_branch & active[:, None], step)
-        nb2 = graph.neighbors[0, jnp.maximum(nb1, 0)]   # (Q, deg, deg)
+        nb2 = _adj(graph, 0, jnp.maximum(nb1, 0))       # (Q, deg, deg)
         nb2 = jnp.where(v1[:, :, None], nb2, -1)
         v2 = nb2 >= 0
         pass2 = _probe_batch(bitmaps, nb2)
@@ -1242,7 +1318,7 @@ def _iter_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     step = st.hops + 1
     if tracing:
         is_ = _stamp_batch(is_, node[:, None], active[:, None], step)
-    nb1 = graph.neighbors[0, node]
+    nb1 = _adj(graph, 0, node)
     score_m = (nb1 >= 0) & ~_probe_batch(visited, nb1)
     n_s = score_m.sum(-1).astype(jnp.int32)
     (pool_d2, pool_id2, w_d2, w_id2, visited2,
@@ -1630,3 +1706,71 @@ def frontier_idle(graph: HNSWGraph, store: VectorStore,
     state = frontier_init(graph, store, queries, bitmaps, params,
                           collect_trace=collect_trace)
     return dataclasses.replace(state, done=jnp.ones((width,), bool))
+
+
+# ===========================================================================
+# Beam exchange (DESIGN.md §13) — the drift-mode synchronization point of
+# the mesh-sharded traversal.  Between exchanges every shard runs plain
+# supersteps on its induced subgraph (non-collective views); the exchange
+# all-gathers the per-shard result beams, reduces them to the global top-ef,
+# and re-seeds every shard's frontier from it.
+# ===========================================================================
+
+
+def beam_exchange(store, state: FrontierState, params: SearchParams,
+                  axis: str) -> FrontierState:
+    """All-gather the per-shard W beams and re-seed every lane from the
+    global top-ef (base strategies only — iterative_scan's W is an
+    emission buffer, not a beam, and is driven lockstep instead).
+
+    A row id can appear in several shards' beams only after a previous
+    exchange copied it, so duplicates always carry identical distances —
+    the dedup keeps the first of each id group and drops the rest, never
+    choosing between different values.  After the exchange:
+
+      * W      := global top-ef beam (identical on every shard);
+      * pool   := pool ∪ not-yet-visited beam entries (each shard may
+                  resume expanding rows some other shard discovered —
+                  their adjacency resolves to the local induced subgraph);
+      * visited|= beam ids (their distances are already in W);
+      * done   := the base-engine stop predicate re-evaluated against the
+                  refreshed pool/W — a lane that had locally converged
+                  revives when the global beam shows closer work.
+
+    Collective volume: S·ef (distance f32 + id int32) per query per
+    exchange — the `collective_bytes` term `costmodel` prices.
+    """
+    qn, ef = state.w_d.shape
+    gd = jax.lax.all_gather(state.w_d, axis, axis=1)      # (Q, S, ef)
+    gi = jax.lax.all_gather(state.w_id, axis, axis=1)
+    fd = gd.reshape(qn, -1)
+    fi = gi.reshape(qn, -1)
+    order = jnp.argsort(fi, axis=-1)                      # group id copies
+    sd = jnp.take_along_axis(fd, order, axis=-1)
+    si = jnp.take_along_axis(fi, order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros((qn, 1), bool), si[:, 1:] == si[:, :-1]], axis=1)
+    keep = ~dup & (si >= 0)
+    sd = jnp.where(keep, sd, INF)
+    si = jnp.where(keep, si, -1)
+
+    def one(dq, iq):
+        nd, pos = topk_smallest(dq, ef)
+        return nd, jnp.where(jnp.isinf(nd), -1, iq[pos])
+
+    nwd, nwi = jax.vmap(one)(sd, si)
+    seen = _probe_batch(state.visited, nwi)
+    fresh = (nwi >= 0) & ~seen
+    pool_d, pool_id = _merge_smallest(
+        state.pool_d, state.pool_id,
+        jnp.where(fresh, nwd, INF), jnp.where(fresh, nwi, -1))
+    visited = _mark_batch(state.visited, nwi, fresh)
+    we_idx = params.ef_search - 1
+    stop = (pool_d[:, 0] > nwd[:, we_idx]) | jnp.isinf(pool_d[:, 0]) | \
+        (state.stats.hops >= params.max_hops)
+    over = _budget_over(state.stats, params, store.dim, None)
+    if over is not None:
+        stop = stop | over
+    return dataclasses.replace(
+        state, pool_d=pool_d, pool_id=pool_id, w_d=nwd, w_id=nwi,
+        visited=visited, done=stop)

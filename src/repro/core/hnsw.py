@@ -373,3 +373,212 @@ def build_incremental(store: VectorStore, m: int = 16,
     return HNSWGraph(neighbors=jnp.asarray(nbrs, jnp.int32),
                      node_level=jnp.asarray(levels, jnp.int32),
                      entry_point=jnp.asarray(entry, jnp.int32), m=m)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (cluster-routed) construction — the >=1M-row path (DESIGN.md §13).
+#
+# `build_graph`'s per-level exact kNN is O(n²) per level; at the sharding
+# bench's operating point (1M-5M × 768) that is days of single-core work.
+# The blocked builder keeps the construction *recipe* — geometric levels,
+# long-range candidates, diversity pruning, reverse augmentation,
+# base-layer connectivity repair — and replaces only the candidate
+# generation on large levels with cluster routing: rows route to their
+# `route_expand` nearest of ~2√n sampled centroids and take exact kNN
+# within the routed buckets (expected candidate work ≈ expand·n²/C).
+# Small levels (< exact_threshold members) still use the exact kNN, so
+# upper navigation layers are identical in kind to build_graph's.
+# ---------------------------------------------------------------------------
+
+def _knn_routed(mv: np.ndarray, metric: str, kc: int,
+                rng: np.random.RandomState, route_expand: int = 3,
+                num_centroids: int | None = None
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Approximate kNN among rows via sampled-centroid bucket routing."""
+    n = mv.shape[0]
+    kc = min(kc, n - 1)
+    C = num_centroids or int(np.clip(2 * np.sqrt(n), 64, 4096))
+    C = min(C, n)
+    expand = min(route_expand, C)
+    cents = mv[rng.choice(n, C, replace=False)]
+    routes = np.empty((n, expand), np.int64)
+    for s in range(0, n, 8192):
+        e = min(s + 8192, n)
+        d = _pairwise_dists(mv[s:e], cents, metric)
+        routes[s:e] = np.argpartition(d, expand - 1, axis=1)[:, :expand]
+    primary = routes[:, 0]
+    order = np.argsort(primary, kind="stable")
+    bounds = np.searchsorted(primary[order], np.arange(C + 1))
+    # rows querying bucket c = rows routing to c through ANY slot
+    q_order = np.argsort(routes.reshape(-1), kind="stable")
+    q_rows = q_order // expand
+    q_bounds = np.searchsorted(routes.reshape(-1)[q_order],
+                               np.arange(C + 1))
+    ids = np.full((n, kc), -1, np.int64)
+    dst = np.full((n, kc), np.inf, np.float32)
+    for c in range(C):
+        grp = order[bounds[c]:bounds[c + 1]]
+        qr = q_rows[q_bounds[c]:q_bounds[c + 1]]
+        if len(grp) == 0 or len(qr) == 0:
+            continue
+        d = _pairwise_dists(mv[qr], mv[grp], metric)
+        d[qr[:, None] == grp[None, :]] = np.inf      # drop self
+        t = min(kc, len(grp))
+        part = np.argpartition(d, t - 1, axis=1)[:, :t]
+        pd = np.take_along_axis(d, part, axis=1).astype(np.float32)
+        # merge bucket top-t into the running per-row top-kc
+        cat_d = np.concatenate([dst[qr], pd], axis=1)
+        cat_i = np.concatenate([ids[qr], grp[part]], axis=1)
+        sel = np.argpartition(cat_d, kc - 1, axis=1)[:, :kc]
+        sd = np.take_along_axis(cat_d, sel, axis=1)
+        si = np.take_along_axis(cat_i, sel, axis=1)
+        o = np.argsort(sd, axis=1, kind="stable")
+        dst[qr] = np.take_along_axis(sd, o, axis=1)
+        ids[qr] = np.take_along_axis(si, o, axis=1)
+    # a row can reach the same neighbor through several buckets: mask the
+    # sorted-adjacent duplicates so the pruner never keeps a repeat
+    dup = np.zeros_like(ids, bool)
+    srt = np.sort(ids, axis=1)
+    inv = np.argsort(ids, axis=1, kind="stable")
+    dup_sorted = np.concatenate(
+        [np.zeros((n, 1), bool), srt[:, 1:] == srt[:, :-1]], axis=1)
+    np.put_along_axis(dup, inv, dup_sorted, axis=1)
+    dst[dup] = np.inf
+    ids[dup] = -1
+    o = np.argsort(dst, axis=1, kind="stable")
+    return (np.take_along_axis(ids, o, axis=1),
+            np.take_along_axis(dst, o, axis=1))
+
+
+def _augment_reverse_blocked(level_nbrs: np.ndarray, members: np.ndarray,
+                             pruned: np.ndarray, m_l: int) -> None:
+    """Vectorized reverse-edge fill: rank edges within each destination
+    group and scatter into the free slots in one shot (the per-edge
+    python loop of `_augment_reverse` is the 1M-row bottleneck).  Unlike
+    the exact twin it does not dedup against existing forward edges — a
+    repeated adjacency id only wastes the slot (the engine's visited
+    bitset dedups at traversal time)."""
+    src = np.repeat(members, pruned.shape[1])
+    dst = pruned.reshape(-1)
+    ok = dst >= 0
+    src, dst = src[ok], dst[ok]
+    if len(dst) == 0:
+        return
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    first = np.concatenate([[True], dst[1:] != dst[:-1]])
+    grp_start = np.flatnonzero(first)
+    rank = np.arange(len(dst)) - grp_start[np.cumsum(first) - 1]
+    slot = (level_nbrs[dst, :m_l] >= 0).sum(1) + rank
+    keep = slot < m_l
+    level_nbrs[dst[keep], slot[keep]] = src[keep]
+
+
+def _repair_connectivity_blocked(level_nbrs: np.ndarray,
+                                 vectors: np.ndarray, metric: str,
+                                 rng: np.random.RandomState,
+                                 max_iters: int = 16) -> None:
+    """scipy-csgraph twin of `_repair_connectivity`: one sparse
+    connected-components pass links EVERY minor component to the major
+    one per iteration (the union-find python loop is quadratic-ish in
+    practice at 1M rows)."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import connected_components
+    n = level_nbrs.shape[0]
+    for _ in range(max_iters):
+        src = np.repeat(np.arange(n), level_nbrs.shape[1])
+        dstf = level_nbrs.reshape(-1)
+        ok = dstf >= 0
+        g = sp.coo_matrix((np.ones(int(ok.sum()), np.int8),
+                           (src[ok], dstf[ok])), shape=(n, n))
+        ncomp, comp = connected_components(g, directed=False)
+        if ncomp == 1:
+            return
+        ids, counts = np.unique(comp, return_counts=True)
+        major = ids[np.argmax(counts)]
+        b_ids = np.flatnonzero(comp == major)
+        sub = b_ids if len(b_ids) <= 20000 else \
+            rng.choice(b_ids, 20000, replace=False)
+        for minor in ids[ids != major]:
+            a_ids = np.flatnonzero(comp == minor)
+            asub = a_ids if len(a_ids) <= 4096 else \
+                rng.choice(a_ids, 4096, replace=False)
+            d = _pairwise_dists(vectors[asub], vectors[sub], metric)
+            ai, bi = np.unravel_index(np.argmin(d), d.shape)
+            a, b = int(asub[ai]), int(sub[bi])
+            for u, v in ((a, b), (b, a)):
+                row = level_nbrs[u]
+                free = np.where(row < 0)[0]
+                row[free[0] if len(free) else len(row) - 1] = v
+
+
+def build_graph_blocked(store: VectorStore, m: int = 16,
+                        ef_construction: int = 32, seed: int = 0,
+                        max_level: int | None = None,
+                        exact_threshold: int = 20_000,
+                        route_expand: int = 3) -> HNSWGraph:
+    """`build_graph` recipe with cluster-routed candidates on big levels.
+
+    Levels with <= `exact_threshold` members build exactly like
+    `build_graph`; larger levels (at 1M rows: levels 0 and 1) swap the
+    O(n²) exact kNN for `_knn_routed` and the python-loop reverse/repair
+    passes for their vectorized twins.  Same topology class, not
+    bit-identical to `build_graph`.
+    """
+    vectors = np.asarray(store.vectors)
+    n = vectors.shape[0]
+    rng = np.random.RandomState(seed)
+    ml = 1.0 / np.log(max(m, 2))
+    levels = np.minimum(
+        np.floor(-np.log(rng.uniform(1e-12, 1.0, n)) * ml).astype(np.int64),
+        12)
+    if max_level is not None:
+        levels = np.minimum(levels, max_level)
+    top = int(levels.max())
+    entry = int(np.argmax(levels))
+    mmax0 = 2 * m
+    nbrs = np.full((top + 1, n, mmax0), -1, np.int64)
+
+    for lvl in range(top + 1):
+        members = np.where(levels >= lvl)[0]
+        if len(members) <= 1:
+            continue
+        mv = vectors[members]
+        m_l = mmax0 if lvl == 0 else m
+        kc = min(max(ef_construction, m_l + 8), len(members) - 1)
+        if len(members) <= exact_threshold:
+            cand_local, cand_d = _knn_among(mv, store.metric, kc)
+        else:
+            cand_local, cand_d = _knn_routed(mv, store.metric, kc, rng,
+                                             route_expand=route_expand)
+        n_m = len(members)
+        n_rand = min(8, n_m - 1)
+        if n_rand > 0:
+            rnd = rng.randint(0, n_m, size=(n_m, n_rand)).astype(np.int64)
+            rnd = np.where(rnd == np.arange(n_m)[:, None],
+                           (rnd + 1) % n_m, rnd)
+            rd = _rows_dist(mv, rnd, store.metric)
+            cand_local = np.concatenate([cand_local, rnd], 1)
+            cand_d = np.concatenate([cand_d, rd], 1)
+            order = np.argsort(cand_d, axis=1, kind="stable")
+            cand_local = np.take_along_axis(cand_local, order, 1)
+            cand_d = np.take_along_axis(cand_d, order, 1)
+        pruned_local = _diversity_prune(mv, cand_local, cand_d, m_l,
+                                        store.metric)
+        valid = pruned_local >= 0
+        pruned = np.where(valid, members[np.clip(pruned_local, 0, None)], -1)
+        nbrs[lvl, members, :m_l] = pruned[:, :m_l]
+        if len(members) <= exact_threshold:
+            _augment_reverse(nbrs[lvl], members, pruned, m_l)
+        else:
+            _augment_reverse_blocked(nbrs[lvl], members, pruned, m_l)
+        if lvl == 0:
+            if n <= exact_threshold:
+                _repair_connectivity(nbrs[0], vectors, store.metric)
+            else:
+                _repair_connectivity_blocked(nbrs[0], vectors,
+                                             store.metric, rng)
+
+    return HNSWGraph(neighbors=jnp.asarray(nbrs, jnp.int32),
+                     node_level=jnp.asarray(levels, jnp.int32),
+                     entry_point=jnp.asarray(entry, jnp.int32), m=m)

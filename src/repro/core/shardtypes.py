@@ -1,0 +1,141 @@
+"""Sharded views of the graph + storage tiers (DESIGN.md §13).
+
+The mesh-sharded frontier engine partitions every row-indexed tier — the
+full-precision heap, the SQ8 shadow heap, the precomputed norms, and the
+base-layer adjacency — by contiguous row range across the devices of a
+1-D `shard` mesh axis.  Each device holds one block of `rows_per_shard =
+ceil(n / S)` rows (the last block zero/-1 padded) and sees the collection
+through the two view dataclasses below, which present the *global*
+geometry (`n`, `num_levels`, trace widths, visited-bitset words) while
+physically holding only the local block.
+
+The views are consumed by `core.graph_search`, whose gather helpers
+dispatch on the view type: a read of global row id g resolves to
+
+    own   = offset <= g < offset + local_n          (exactly one shard)
+    value = pmin/pmax over the mesh axis of the owner-masked local read
+
+so in `collective=True` mode every shard observes the bit-exact value the
+single-device engine would have read — the reductions select the owner's
+untouched f32/int32 payload (non-owners contribute +inf / INT32_MIN),
+they never do arithmetic on it.  With `collective=False` the same views
+describe the shard's *induced subgraph*: remote reads come back masked
+(+inf distances, -1 neighbor ids), which is the traversal mode the
+beam-exchange driver runs between exchanges (`core.distributed`).
+
+`offset` is derived from `lax.axis_index` at trace time, so one view
+pytree works identically under `jax.vmap(..., axis_name=...)` (the
+single-device emulation path) and `shard_map` on a real mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Array
+
+SHARD_AXIS = "shard"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardStore:
+    """One shard's row-range block of a `VectorStore` (+ SQ8 shadow).
+
+    Data leaves hold the local block ((local_n, d) rows, (local_n,)
+    norms); the SQ8 quantizer params (`q_scale`/`q_mean`) are global
+    per-dimension vectors, replicated.  Static metadata carries the
+    global geometry so `store.n`/`store.dim` keep their single-device
+    meaning everywhere the engine sizes bitsets, traces, or budgets.
+    """
+
+    # The f32 tier may be absent (None) on SQ8-only stores streamed at a
+    # scale where the full-precision heap is never materialized
+    # (data.make_dataset_streamed(f32=False)); geometry then derives from
+    # the shadow block, and quant="none" traversal / sq8_rerank are
+    # invalid by construction (the executor validates).
+    vectors: Optional[Array]                # (local_n, d) f32 block
+    norms_sq: Optional[Array]               # (local_n,) f32
+    metric: str = dataclasses.field(metadata=dict(static=True), default="l2")
+    axis: str = dataclasses.field(metadata=dict(static=True),
+                                  default=SHARD_AXIS)
+    n_total: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # collective=True: remote reads resolve over the mesh axis (bit-exact
+    # lockstep mode); False: remote reads are masked (induced-subgraph
+    # drift mode between beam exchanges).
+    collective: bool = dataclasses.field(metadata=dict(static=True),
+                                         default=True)
+    q_vectors: Optional[Array] = None       # (local_n, d) int8 block
+    q_scale: Optional[Array] = None         # (d,) f32, global
+    q_mean: Optional[Array] = None          # (d,) f32, global
+    q_norms_sq: Optional[Array] = None      # (local_n,) f32
+
+    @property
+    def n(self) -> int:
+        return self.n_total
+
+    @property
+    def dim(self) -> int:
+        block = self.vectors if self.vectors is not None else self.q_vectors
+        return block.shape[1]
+
+    @property
+    def local_n(self) -> int:
+        block = self.vectors if self.vectors is not None else self.q_vectors
+        return block.shape[0]
+
+    @property
+    def has_sq8(self) -> bool:
+        return self.q_vectors is not None
+
+    @property
+    def offset(self) -> Array:
+        """First global row id of this shard's block — derived from the
+        mesh position at trace time (valid under vmap-with-axis-name and
+        shard_map alike)."""
+        return (jax.lax.axis_index(self.axis) * self.local_n).astype(
+            jnp.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardGraph:
+    """One shard's row-range block of an `HNSWGraph`.
+
+    `neighbors` is the (num_levels, local_n, deg) adjacency block; values
+    are GLOBAL row ids (-1 padded) so a collective read reconstructs the
+    single-device row bit-exactly.  `entry_point` is the global entry
+    (replicated scalar); `local_entry` is this shard's own highest-level
+    node, the seed the drift-mode driver zooms in from so every shard has
+    a live entry inside its induced subgraph.
+    """
+
+    neighbors: Array                        # (L, local_n, deg) int32
+    entry_point: Array                      # () int32, global entry
+    local_entry: Array                      # () int32, per-shard entry
+    m: int = dataclasses.field(metadata=dict(static=True), default=16)
+    axis: str = dataclasses.field(metadata=dict(static=True),
+                                  default=SHARD_AXIS)
+    n_total: int = dataclasses.field(metadata=dict(static=True), default=0)
+    collective: bool = dataclasses.field(metadata=dict(static=True),
+                                         default=True)
+
+    @property
+    def n(self) -> int:
+        return self.n_total
+
+    @property
+    def num_levels(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def local_n(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def offset(self) -> Array:
+        return (jax.lax.axis_index(self.axis) * self.local_n).astype(
+            jnp.int32)

@@ -304,6 +304,13 @@ class SearchParams:
     # the "sq8-no-rerank" degradation rung: quantized distances are
     # returned as-is, saving the full-width heap fetch per result row.
     sq8_rerank: bool = True
+    # Mesh-sharded traversal (DESIGN.md §13): all-gather the per-shard
+    # top-k beams every E supersteps.  1 = lockstep mode — every candidate
+    # is resolved collectively each hop and results are bit-identical to
+    # the single-device engine for any shard count; E > 1 lets each shard
+    # drift on its induced subgraph between exchanges (cheaper collectives,
+    # approximate results).  Ignored by single-device executors.
+    beam_exchange_interval: int = 1
 
 
 @dataclasses.dataclass

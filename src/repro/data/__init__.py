@@ -1,6 +1,8 @@
-from repro.data.datasets import DatasetSpec, PAPER_DATASETS, make_dataset
+from repro.data.datasets import (DatasetSpec, PAPER_DATASETS, STREAM_BLOCK,
+                                 make_dataset, make_dataset_streamed)
 from repro.data.pipeline import (DataConfig, batch_for_step, make_data_config,
                                  token_batch_specs)
 
-__all__ = ["DatasetSpec", "PAPER_DATASETS", "make_dataset", "DataConfig",
-           "batch_for_step", "make_data_config", "token_batch_specs"]
+__all__ = ["DatasetSpec", "PAPER_DATASETS", "STREAM_BLOCK", "make_dataset",
+           "make_dataset_streamed", "DataConfig", "batch_for_step",
+           "make_data_config", "token_batch_specs"]

@@ -11,6 +11,7 @@ larger N is only a time cost.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -64,3 +65,143 @@ def make_dataset(spec: DatasetSpec, num_queries: int = 100, seed: int = 0
         if spec.metric == "ip":
             q /= np.linalg.norm(q, axis=1, keepdims=True)
     return VectorStore.build(x, metric=spec.metric), q.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Streamed generation (DESIGN.md §13) — row-block generation + two-pass
+# global SQ8, for the ≥5M×768 operating points the sharding bench runs.
+# ---------------------------------------------------------------------------
+
+# Default row-block quantum.  block_rows is part of the dataset identity:
+# each block b draws from its own counter-based Philox stream keyed
+# (seed, b), so the same (spec, seed, block_rows) always regenerates the
+# same rows — block by block, with no full-array RNG state to carry —
+# while a different block_rows is a different (equally valid) dataset.
+STREAM_BLOCK = 65_536
+
+
+def _stream_centers(spec: DatasetSpec, seed: int) -> np.ndarray:
+    # Same first-draws recipe as make_dataset, so query geometry matches.
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(spec.clusters, spec.dim).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    return centers
+
+
+def _stream_block(spec: DatasetSpec, centers: np.ndarray, seed: int,
+                  b: int, lo: int, hi: int,
+                  cache_dir: str | None) -> np.ndarray:
+    """Rows [lo, hi) of the dataset — regenerated from the (seed, b)
+    Philox key, or reloaded from the per-block cache."""
+    path = None
+    if cache_dir is not None:
+        path = os.path.join(
+            cache_dir, f"{spec.name}-n{spec.n}-d{spec.dim}"
+            f"-c{spec.clusters}-sp{spec.cluster_spread}-s{seed}-b{b}.npy")
+        if os.path.exists(path):
+            return np.load(path)
+    rng = np.random.Generator(
+        np.random.Philox(key=[np.uint64(seed), np.uint64(b)]))
+    m = hi - lo
+    assign = rng.integers(0, spec.clusters, m)
+    x = centers[assign] + spec.cluster_spread * rng.standard_normal(
+        (m, spec.dim), dtype=np.float32) / np.sqrt(spec.dim)
+    if spec.metric == "ip":
+        x /= np.linalg.norm(x, axis=1, keepdims=True)
+    # the /sqrt(dim) promotes to f64; cast at the block boundary so every
+    # consumer (f32 heap, two-pass quantizer, direct block reads) sees
+    # the same float32 bits
+    x = x.astype(np.float32)
+    if path is not None:
+        os.makedirs(cache_dir, exist_ok=True)
+        np.save(path, x)
+    return x
+
+
+def make_dataset_streamed(spec: DatasetSpec, num_queries: int = 100,
+                          seed: int = 0, block_rows: int = STREAM_BLOCK,
+                          f32: bool = True, quantize: bool = True,
+                          cache_dir: str | None = None
+                          ) -> tuple[VectorStore, np.ndarray]:
+    """Block-streamed twin of `make_dataset` for giant N.
+
+    Rows generate (and optionally disk-cache) in `block_rows` blocks;
+    quantization is the exact two-pass global per-dim SQ8 of
+    `types.sq8_quantize` — pass 1 accumulates the per-dimension lo/hi
+    over blocks (min/max compose exactly over any blocking), pass 2
+    re-streams each block through the same affine clip/round and the
+    same dequantized-norm arithmetic, so the shadow tier is bit-equal to
+    quantizing the materialized array.
+
+    `f32=False` never materializes the (n, d) float32 heap: the returned
+    store's `vectors`/`norms_sq` are zero-strided all-zero PLACEHOLDERS
+    (shape-only, a few KB) and only the int8 shadow (+ norms) is real.
+    Such a store is valid for geometry (`n`/`dim`), page layouts, and
+    SQ8-only sharded traversal (`ShardedGraphExecutor(..., f32=False)`
+    with graph_quant="sq8", sq8_rerank=False); feeding it to a
+    full-precision path would silently score zeros — don't.
+    """
+    if num_queries > spec.n:
+        raise ValueError("more queries than rows")
+    centers = _stream_centers(spec, seed)
+    nblocks = -(-spec.n // block_rows)
+    blocks = [(b, b * block_rows, min((b + 1) * block_rows, spec.n))
+              for b in range(nblocks)]
+
+    x_full = np.empty((spec.n, spec.dim), np.float32) if f32 else None
+    lo_d = np.full((spec.dim,), np.inf, np.float32)
+    hi_d = np.full((spec.dim,), -np.inf, np.float32)
+    for b, lo, hi in blocks:
+        x = _stream_block(spec, centers, seed, b, lo, hi, cache_dir)
+        if quantize:
+            np.minimum(lo_d, x.min(0), out=lo_d)
+            np.maximum(hi_d, x.max(0), out=hi_d)
+        if f32:
+            x_full[lo:hi] = x
+
+    if f32:
+        store = VectorStore.build(x_full, metric=spec.metric)
+    else:
+        placeholder = np.broadcast_to(
+            np.zeros((1, spec.dim), np.float32), (spec.n, spec.dim))
+        store = VectorStore(
+            vectors=placeholder,
+            norms_sq=np.broadcast_to(np.zeros((1,), np.float32),
+                                     (spec.n,)),
+            metric=spec.metric)
+
+    if quantize:
+        import jax.numpy as jnp
+        scale = np.maximum((hi_d - lo_d) / 254.0, 1e-8).astype(np.float32)
+        mean = ((hi_d + lo_d) / 2.0).astype(np.float32)
+        scale_j, mean_j = jnp.asarray(scale), jnp.asarray(mean)
+        q = np.empty((spec.n, spec.dim), np.int8)
+        qn = np.empty((spec.n,), np.float32)
+        for b, lo, hi in blocks:
+            x = x_full[lo:hi] if f32 else _stream_block(
+                spec, centers, seed, b, lo, hi, cache_dir)
+            qb = np.clip(np.round((x - mean) / scale), -127, 127
+                         ).astype(np.int8)
+            q[lo:hi] = qb
+            deq = jnp.asarray(qb).astype(jnp.float32) * scale_j + mean_j
+            qn[lo:hi] = np.asarray(jnp.sum(deq * deq, axis=-1))
+        store = dataclasses.replace(
+            store, q_vectors=jnp.asarray(q), q_scale=scale_j,
+            q_mean=mean_j, q_norms_sq=jnp.asarray(qn))
+
+    # Queries ride their own stream (block id past any data block), same
+    # hardness recipe as make_dataset.
+    qrng = np.random.Generator(
+        np.random.Philox(key=[np.uint64(seed), np.uint64(2**63)]))
+    if spec.ood_queries:
+        qs = qrng.standard_normal((num_queries, spec.dim),
+                                  dtype=np.float32)
+        qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+        qs *= 1.4
+    else:
+        qa = qrng.integers(0, spec.clusters, num_queries)
+        qs = centers[qa] + spec.cluster_spread * qrng.standard_normal(
+            (num_queries, spec.dim), dtype=np.float32) / np.sqrt(spec.dim)
+        if spec.metric == "ip":
+            qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    return store, qs.astype(np.float32)

@@ -14,7 +14,8 @@ from repro.storage.bufferpool import (POLICIES, BufferPool, BufferPoolState,
                                       PoolCounters)
 from repro.storage.faults import FaultInjector, FaultPlan
 from repro.storage.engine import (SEGMENTS, TRACE_UNTOUCHED, StorageEngine,
-                                  StorageStats, make_storage_engine)
+                                  StorageStats, make_storage_engine,
+                                  merge_storage_stats)
 from repro.storage.delta import DeltaFull, DeltaTier, Tombstones
 from repro.storage.wal import (REC_CHECKPOINT, REC_COMPACT, REC_DELETE,
                                REC_INSERT, WalCorruption, WalRecord,
@@ -28,7 +29,7 @@ __all__ = [
     "POLICIES", "BufferPool", "BufferPoolState", "PoolCounters",
     "FaultInjector", "FaultPlan",
     "SEGMENTS", "TRACE_UNTOUCHED", "StorageEngine", "StorageStats",
-    "make_storage_engine",
+    "make_storage_engine", "merge_storage_stats",
     "DeltaFull", "DeltaTier", "Tombstones",
     "REC_CHECKPOINT", "REC_COMPACT", "REC_DELETE", "REC_INSERT",
     "WalCorruption", "WalRecord", "WalSyncError", "WalTornWrite",

@@ -141,6 +141,42 @@ class StorageStats:
                     heap_pages=self.heap_pages.tolist())
 
 
+def merge_storage_stats(parts: list[StorageStats]) -> StorageStats:
+    """Aggregate per-shard StorageStats into one batch total (DESIGN.md
+    §13): counter dicts and per-query page arrays sum segment-/query-wise,
+    fault flags OR.  Shards own disjoint row ranges, so summing `unique`
+    counts distinct pages exactly up to the one heap page a range boundary
+    can split across two shards — the same page id counted once per
+    engine that touched it (each engine has its own pool, so the access
+    really was replayed in both)."""
+    if not parts:
+        raise ValueError("merge_storage_stats needs at least one part")
+
+    def dsum(key):
+        out: dict = {}
+        for p in parts:
+            for seg, v in getattr(p, key).items():
+                out[seg] = out.get(seg, 0) + v
+        return out
+
+    faulted = None
+    if any(p.faulted is not None for p in parts):
+        faulted = np.zeros_like(
+            next(p.faulted for p in parts if p.faulted is not None))
+        for p in parts:
+            if p.faulted is not None:
+                faulted |= p.faulted
+    return StorageStats(
+        logical=dsum("logical"), hits=dsum("hits"), misses=dsum("misses"),
+        evictions=sum(p.evictions for p in parts),
+        index_pages=sum(p.index_pages for p in parts),
+        heap_pages=sum(p.heap_pages for p in parts),
+        unique=dsum("unique"),
+        retries=sum(p.retries for p in parts),
+        failed_reads=sum(p.failed_reads for p in parts),
+        spikes=sum(p.spikes for p in parts), faulted=faulted)
+
+
 class StorageEngine:
     """Layouts + pool + accounting for one dataset's page space."""
 

@@ -3,7 +3,8 @@
 # Each benchmark emits one JSON record (BENCH_leaf_scan.json /
 # BENCH_frontier.json / BENCH_planner.json / BENCH_storage.json /
 # BENCH_graph_quant.json / BENCH_robustness.tiny.json /
-# BENCH_mutability.tiny.json) so the perf trajectory gets populated
+# BENCH_mutability.tiny.json / BENCH_sharding.tiny.json) so the perf
+# trajectory gets populated
 # run-over-run;
 # benchmarks run even when tier-1 fails, but the tier-1 status is
 # propagated.  SMOKE_SKIP_TESTS=1 skips the pytest phase (tools/ci.sh runs
@@ -41,5 +42,6 @@ python benchmarks/bench_graph_quant.py --tiny || exit 1
 python benchmarks/bench_robustness.py --tiny || exit 1
 python benchmarks/bench_serving.py --tiny || exit 1
 python benchmarks/bench_mutability.py --tiny || exit 1
+python benchmarks/bench_sharding.py --tiny || exit 1
 
 exit "$tier1"
