@@ -14,11 +14,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (SYSTEM, SearchParams, WorkloadSpec, build_graph,
+from repro.core import (SYSTEM, SearchParams, WorkloadSpec,
+                        assign_family_bitmaps, build_exclusion, build_graph,
                         build_scann, cycle_breakdown, engine_scale,
-                        filtered_knn, generate_bitmaps, make_executor,
-                        measured_miss_penalty, quantize_store, recall_at_k,
-                        stats_table_row)
+                        filtered_knn, generate_bitmaps, generate_families,
+                        make_executor, measured_miss_penalty, quantize_store,
+                        recall_at_k, stats_table_row)
 from repro.data import DatasetSpec, make_dataset
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
@@ -101,6 +102,93 @@ def get_scann(name: str, pca: bool = False, quant: str = "none"):
     return jax.tree.map(jnp.asarray, idx)
 
 
+FAMILY_COUNT = 4
+
+
+def _ftag(sel: float, num_families: int, seed: int) -> str:
+    """Cache-key suffix for family-scoped artifacts (DESIGN.md §14):
+    exclusion radii and partitioned graphs are built against a specific
+    family catalog, so the catalog parameters ride the key the same way
+    `_qtag` isolates quantized builds from f32 ones."""
+    return f"_fam{num_families}_s{sel:g}_fs{seed}"
+
+
+def get_families(name: str, sel: float, num_families: int = FAMILY_COUNT,
+                 seed: int = 0) -> dict:
+    """Cached clustered predicate families (tag -> packed bitmap)."""
+    store, _ = get_dataset(name)
+    return _cache(f"fams_{name}{_ftag(sel, num_families, seed)}",
+                  lambda: generate_families(store, sel,
+                                            num_families=num_families,
+                                            seed=seed))
+
+
+def get_family_bitmaps(name: str, sel: float,
+                       num_families: int = FAMILY_COUNT, seed: int = 0,
+                       quant: str = "none"):
+    """((Q, W) bitmaps, (Q,) family assignment) for the bench queries —
+    each query carries its family's bitmap verbatim (the exact-match
+    contract of the selectivity-aware tiers)."""
+    fams = get_families(name, sel, num_families, seed)
+    _, queries = get_dataset(name, quant)
+    bm, assign = assign_family_bitmaps(fams, int(queries.shape[0]),
+                                       seed=seed + 1)
+    return jnp.asarray(bm), assign
+
+
+def get_exclusion(name: str, sel: float,
+                  num_families: int = FAMILY_COUNT, seed: int = 0,
+                  quant: str = "none"):
+    """Cached FAVOR exclusion index (ladder + family-exact radii)."""
+    store, _ = get_dataset(name, quant)
+    fams = get_families(name, sel, num_families, seed)
+    return _cache(f"excl_{name}{_ftag(sel, num_families, seed)}"
+                  f"{_qtag(quant)}",
+                  lambda: build_exclusion(store, families=fams))
+
+
+def get_partitions(name: str, sel: float,
+                   num_families: int = FAMILY_COUNT, seed: int = 0,
+                   quant: str = "none"):
+    """Cached JAG partitioned graph.  Only the per-family adjacency and
+    row maps are pickled; the gathered sub-stores are rebuilt from the
+    base store on load (`hnsw.gather_substore`) — same convention as
+    `get_graph`, which caches (neighbors, level, entry) rather than the
+    dataclass."""
+    from repro.core.hnsw import (GraphPartition, HNSWGraph,
+                                 PartitionedGraph, build_graph_partitioned,
+                                 gather_substore)
+    store, _ = get_dataset(name, quant)
+    fams = get_families(name, sel, num_families, seed)
+
+    def build():
+        pg = build_graph_partitioned(store, fams, m=16, ef_construction=64,
+                                     seed=0)
+        return [(p.tag, np.asarray(p.bitmap), np.asarray(p.rows),
+                 np.asarray(p.graph.neighbors),
+                 np.asarray(p.graph.node_level),
+                 np.asarray(p.graph.entry_point))
+                for p in pg.partitions]
+
+    raw = _cache(f"parts_{name}{_ftag(sel, num_families, seed)}"
+                 f"{_qtag(quant)}", build)
+    parts = tuple(GraphPartition(
+        tag=tag, bitmap=bm, rows=rows, store=gather_substore(store, rows),
+        graph=HNSWGraph(neighbors=jnp.asarray(nb),
+                        node_level=jnp.asarray(lv),
+                        entry_point=jnp.asarray(ep), m=16))
+        for tag, bm, rows, nb, lv, ep in raw)
+    return PartitionedGraph(partitions=parts, built_n=store.n)
+
+
+def family_ground_truth(name: str, sel: float,
+                        num_families: int = FAMILY_COUNT, seed: int = 0,
+                        k: int = 10):
+    store, queries = get_dataset(name)
+    bm, _ = get_family_bitmaps(name, sel, num_families, seed)
+    return filtered_knn(store, queries, bm, k)
+
+
 def get_bitmaps(name: str, sel: float, corr: str, quant: str = "none"):
     store, queries = get_dataset(name, quant)
 
@@ -130,11 +218,16 @@ def mean_recall(ids, tid, k=10) -> float:
 
 
 def get_executor(name: str, method: str, use_pallas: bool = False,
-                 storage=None):
+                 storage=None, exclusion=None, partitions=None,
+                 planner_candidates=None):
     """Executor-registry dispatch for a benchmark dataset: builds (cached)
     whichever components `method` needs and returns the executor.
     `storage` attaches a StorageEngine (build one with
-    `get_storage_engine`) for measured page accounting.
+    `get_storage_engine`) for measured page accounting.  The
+    selectivity-aware tiers need their artifacts passed in (`exclusion=`
+    from `get_exclusion`, `partitions=` from `get_partitions`) — they are
+    family-catalog-scoped, so the registry can't build them from the
+    method name alone.
 
     "scann_distributed" runs the mesh-sharded executor on this host's
     devices (leaves sharded, queries replicated) with per-query
@@ -166,8 +259,11 @@ def get_executor(name: str, method: str, use_pallas: bool = False,
         index = get_scann(name)
     if method not in ("scann", "scann_vmapped", "bruteforce"):
         graph = get_graph(name, quant)
+    kw = {} if planner_candidates is None \
+        else {"planner_candidates": tuple(planner_candidates)}
     return make_executor(method, store, graph=graph, index=index,
-                         use_pallas=use_pallas, graph_m=16, storage=storage)
+                         use_pallas=use_pallas, graph_m=16, storage=storage,
+                         exclusion=exclusion, partitions=partitions, **kw)
 
 
 _DISTRIBUTED_EXECUTORS: dict = {}

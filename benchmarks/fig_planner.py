@@ -38,13 +38,22 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 
-from benchmarks.common import (emit, get_bitmaps, get_dataset, get_executor,
-                               ground_truth, mean_recall)
+from benchmarks.common import (emit, get_bitmaps, get_dataset, get_exclusion,
+                               get_executor, get_partitions, ground_truth,
+                               mean_recall)
 from repro.core import SYSTEM, SearchParams, cycle_breakdown, engine_scale
 
 SELS = (0.01, 0.05, 0.2, 0.5, 0.9)
 CORRS = ("none", "high_pos", "negative")
 FIXED = ("bruteforce", "sweeping", "navix", "iterative_scan", "scann")
+# the full planner menu: the six PR-4 candidates plus the two
+# selectivity-aware tiers (DESIGN.md §14).  This grid's bitmaps are
+# per-query and never family-match, so the planner must keep the new
+# candidates honest — partitioned is batch-infeasible everywhere here and
+# sweeping_excl falls back to ladder radii (prunes ~nothing, cost ≈
+# sweeping); neither may cost the planner regret.
+MENU = ("bruteforce", "scann", "sweeping", "sweeping_sq8", "navix",
+        "iterative_scan", "sweeping_excl", "partitioned")
 RECALL_FLOOR = 0.9
 REGRET_TARGET = 1.5
 
@@ -60,7 +69,10 @@ def run(ds: str = "sift10m", sels=SELS, corrs=CORRS,
         methods=FIXED) -> tuple[list[dict], dict]:
     store, queries = get_dataset(ds)
     p = _params()
-    executors = {m: get_executor(ds, m) for m in (*methods, "adaptive")}
+    executors = {m: get_executor(ds, m) for m in methods}
+    executors["adaptive"] = get_executor(
+        ds, "adaptive", exclusion=get_exclusion(ds, 0.05),
+        partitions=get_partitions(ds, 0.05), planner_candidates=MENU)
     # warm the jit caches once per executor (shapes/params are identical
     # across grid points) so timed rows exclude compile time
     warm_bm = get_bitmaps(ds, sels[0], corrs[0])
@@ -117,7 +129,7 @@ def run(ds: str = "sift10m", sels=SELS, corrs=CORRS,
 
     summary = {
         "bench": "planner", "dataset": ds, "recall_floor": RECALL_FLOOR,
-        "regret_target": REGRET_TARGET,
+        "regret_target": REGRET_TARGET, "planner_menu": list(MENU),
         "grid": grid,
         "max_regret": {m: (round(v, 3) if math.isfinite(v) else "inf")
                        for m in (*methods, "adaptive")

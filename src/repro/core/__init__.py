@@ -8,10 +8,15 @@ from repro.core.types import (METRIC_COS, METRIC_IP, METRIC_L2, AnytimeInfo,
                               recall_at_k, sq8_quantize, topk_smallest,
                               unpack_bitmap, bitmap_andnot, merge_topk)
 from repro.core.workload import (CORRELATIONS, PAPER_SELECTIVITIES,
-                                 WorkloadSpec, generate_bitmaps,
+                                 WorkloadSpec, assign_family_bitmaps,
+                                 generate_bitmaps, generate_families,
                                  generate_grid, generate_passing_rows)
 from repro.core.bruteforce import filtered_knn, filtered_knn_partial, knn
-from repro.core.hnsw import HNSWGraph, build_graph, build_incremental
+from repro.core.exclusion import (ExclusionIndex, build_exclusion,
+                                  ladder_rung, match_families, select_radii)
+from repro.core.hnsw import (GraphPartition, HNSWGraph, PartitionedGraph,
+                             build_graph, build_graph_partitioned,
+                             build_incremental)
 from repro.core.graph_search import search_batch
 from repro.core.scann import (ScannIndex, build_scann, leaves_within_budget,
                               scann_search_batch, scann_search_batch_vmapped)
@@ -25,9 +30,10 @@ from repro.core.costmodel import (LIBRARY, SYSTEM, CostConstants, IndexShape,
                                   predict_cycles, stats_table_row)
 from repro.core.executor import (AdaptivePlanner, BruteForceExecutor,
                                  DeltaExecutor, Executor, GraphExecutor,
-                                 ScannExecutor, SearchPlan, index_shape,
-                                 make_executor, GRAPH_SQ8_METHODS,
-                                 REGISTERED_METHODS)
+                                 PartitionedGraphExecutor, ScannExecutor,
+                                 SearchPlan, index_shape, make_executor,
+                                 EXCL_METHODS, GRAPH_SQ8_METHODS,
+                                 PARTITIONED_METHODS, REGISTERED_METHODS)
 from repro.core.mutable import (MergedResult, MutableIndex,
                                 rebuild_oracle_store)
 
@@ -50,8 +56,12 @@ __all__ = [
     "measured_miss_penalty", "modeled_qps", "predict_counters",
     "predict_cycles", "stats_table_row",
     "AdaptivePlanner", "BruteForceExecutor", "Executor", "GraphExecutor",
-    "ScannExecutor", "SearchPlan", "index_shape", "make_executor",
-    "GRAPH_SQ8_METHODS", "REGISTERED_METHODS",
+    "PartitionedGraphExecutor", "ScannExecutor", "SearchPlan",
+    "index_shape", "make_executor", "EXCL_METHODS", "GRAPH_SQ8_METHODS",
+    "PARTITIONED_METHODS", "REGISTERED_METHODS",
+    "ExclusionIndex", "build_exclusion", "ladder_rung", "match_families",
+    "select_radii", "GraphPartition", "PartitionedGraph",
+    "build_graph_partitioned", "generate_families", "assign_family_bitmaps",
     "bitmap_andnot", "merge_topk", "DeltaExecutor",
     "MergedResult", "MutableIndex", "rebuild_oracle_store",
 ]

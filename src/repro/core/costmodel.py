@@ -362,8 +362,35 @@ FILTER_FIRST_POOL = 0.7     # subgraph-exhaustion cap: hops ≤ 0.7·n·s̃
 ITER_HOP_FACTOR = 1.6       # iterative-scan hops per emitted candidate
 ITER_HOP_BASE = 40.0        # beam settle-down tail per scan round-trip
 
+# Selectivity-aware tiers (DESIGN.md §14).  The exclusion-pruned sweeping
+# law scales sweeping's hop count by an expected keep fraction: pruning
+# only bites when the predicate is spatially clustered (γ > 1 — exclusion
+# radii carry signal exactly when passing rows cluster), and bites harder
+# the sparser the predicate.  EXCL_PRUNE_MAX is calibrated against the
+# bench_filtercost clustered-family measurements (hop ratios 0.52–0.68 at
+# s ∈ {0.02, 0.05}, margin 0.3).  At γ ≤ 1 the law degrades EXACTLY to
+# sweeping's — an uncorrelated bitmap carries no exclusion signal, and the
+# prediction must not promise savings the radii cannot deliver.
+EXCL_PRUNE_MAX = 0.4        # asymptotic pruned hop fraction (γ → ∞)
+# The partitioned tier's plan-time family match compares each query's
+# bitmap against every registered family, word by word; the planner has
+# no handle on the family count at predict time, so the law prices a
+# nominal catalog.
+PART_FAMILIES_EST = 4.0     # families assumed registered, for match fc
+# One-off subgraph build work (≈ rows · ef_construction · 2 distance
+# comps per inserted row), amortized per query over the horizon a hot
+# predicate family is expected to serve before the partition goes stale.
+PART_BUILD_DC_PER_ROW = 64.0
+PART_AMORT_QUERIES = 50_000.0
+
 PREDICTABLE_STRATEGIES = ("bruteforce", "scann", "sweeping", "acorn",
-                          "navix", "iterative_scan", "unfiltered")
+                          "navix", "iterative_scan", "unfiltered",
+                          "sweeping_excl", "partitioned")
+
+# Predictive-kind → graph-strategy family, for engine/quant/segment
+# resolution: the exclusion tier runs the sweeping machinery, the
+# partitioned tier runs unfiltered machinery on a subgraph.
+GRAPH_KIND_ALIAS = {"sweeping_excl": "sweeping", "partitioned": "unfiltered"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -455,6 +482,41 @@ def predict_counters(strategy: str, shape: IndexShape, params: SearchParams,
                  page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
         return graph_quant_rerank(c, float(ef))
 
+    if strategy == "sweeping_excl":
+        # FAVOR exclusion-pruned sweeping (DESIGN.md §14): sweeping's law
+        # with hops scaled by the expected keep fraction.  corr_gain → 0
+        # at γ ≤ 1 (uncorrelated radii prune nothing, the tier prices
+        # exactly like sweeping) and → 1 as γ → ∞; sparser predicates
+        # prune a larger branch fraction.  fc takes the same keep-fraction
+        # discount — the prune_exact accounting's eliminated probes.
+        corr_gain = max(0.0, 1.0 - 1.0 / max(correlation, 1.0))
+        prune = EXCL_PRUNE_MAX * corr_gain * (1.0 - s)
+        hops = min(ef / s_eff, float(params.max_hops),
+                   n / GRAPH_NEW_PER_HOP) * (1.0 - prune)
+        dc = min(GRAPH_NEW_PER_HOP * hops + ef, float(n))
+        fc = SWEEP_FC_PER_DC * dc * (1.0 - prune)
+        c.update(distance_comps=dc, filter_checks=fc, hops=hops,
+                 page_accesses_index=hops + (1 - tm) * fc,
+                 page_accesses_heap=dc * ppv, tmap_lookups=tm * fc)
+        return graph_quant_rerank(c, float(ef))
+
+    if strategy == "partitioned":
+        # JAG attribute-partitioned subgraph (DESIGN.md §14): unfiltered
+        # traversal over a private graph of n_f = s·n passing rows.  The
+        # only filter work is the plan-time family match (every query's
+        # bitmap against ~PART_FAMILIES_EST family bitmaps, n/32 words
+        # each); per-candidate checks are gone by construction.  Build
+        # amortization rides in predict_cycles (a cycle, not a counter).
+        n_f = max(s * n, float(k))
+        hops = min(float(ef), float(params.max_hops),
+                   n_f / GRAPH_NEW_PER_HOP)
+        dc = min(GRAPH_NEW_PER_HOP * hops + ef, n_f)
+        fc = PART_FAMILIES_EST * math.ceil(n / 32)
+        c.update(distance_comps=dc, filter_checks=fc, hops=hops,
+                 page_accesses_index=hops,
+                 page_accesses_heap=dc * ppv)
+        return graph_quant_rerank(c, float(ef))
+
     if strategy == "iterative_scan":
         # pgvector post-filter: emit batches of `batch_tuples` unfiltered
         # candidates until k pass — E[emitted] ≈ k/s̃, rounded up to whole
@@ -523,15 +585,26 @@ def predict_cycles(strategy: str, shape: IndexShape, params: SearchParams,
     (`cache_miss_penalty`)."""
     counters = predict_counters(strategy, shape, params, selectivity,
                                 correlation, batch_q)
-    gq = params.graph_quant if strategy in GRAPH_STRATEGIES else "none"
+    # the selectivity-aware tiers run existing graph machinery (exclusion
+    # = sweeping engine, partitioned = unfiltered on a subgraph), so
+    # engine amortization, quant pricing, and segment attribution all
+    # resolve through the aliased family
+    gstrat = GRAPH_KIND_ALIAS.get(strategy, strategy)
+    gq = params.graph_quant if gstrat in GRAPH_STRATEGIES else "none"
     base = component_cycles(
         counters, shape.dim, constants,
-        engine_scale(strategy, params, batch_q, measured_unique_frac),
+        engine_scale(gstrat, params, batch_q, measured_unique_frac),
         graph_quant=gq)["total"]
-    total = base + cache_miss_penalty(counters, strategy, pool_state,
+    total = base + cache_miss_penalty(counters, gstrat, pool_state,
                                       constants, graph_quant=gq,
                                       dim=shape.dim)
-    if num_shards > 1 and strategy in GRAPH_STRATEGIES:
+    if strategy == "partitioned":
+        # one-off subgraph build work amortized per served query — keeps
+        # the tier honest against a strategy that needs no extra artifact
+        n_f = max(selectivity * shape.n, float(params.k))
+        total += n_f * PART_BUILD_DC_PER_ROW * shape.dim \
+            * constants.distance_per_dim / PART_AMORT_QUERIES
+    if num_shards > 1 and gstrat in GRAPH_STRATEGIES:
         # Mesh-sharded frontier (DESIGN.md §13): scoring, fetches, and
         # the per-shard page streams all parallelize by row ownership;
         # the beam-exchange collective volume is the serial residue.

@@ -1,0 +1,181 @@
+"""FAVOR-style selectivity-aware exclusion distances (DESIGN.md §14).
+
+The paper's headline finding is that filtered graph traversal drowns in
+per-node filter checks and the heap/index pages they drag in.  FAVOR's
+(PAPERS.md) answer is a build-time index of *exclusion distances*: for
+every node v, the distance from v to its nearest row that could pass a
+predicate of a given selectivity class.  During traversal a candidate v
+with exclusion radius e(v) can be dropped without probing the filter or
+expanding its neighborhood whenever the radius proves no passing row
+reachable "through" v can beat the current result tail.
+
+Two radius sources, both squared-l2 (matching the engine's distance
+convention — the triangle inequality is applied in root space):
+
+  * a **ladder** of K-th-NN radii e_K(v) for a static set of K values —
+    the selectivity-agnostic tier: for a predicate of selectivity s, the
+    nearest passing row is (in expectation, under an uncorrelated
+    predicate) about as far as the ceil(1/s)-th NN, so the engine picks
+    the ladder rung K ≈ 1/s at query time;
+  * **family radii**: for a registered hot predicate family (a concrete
+    bitmap shared by many queries), the *exact* distance from every node
+    to its nearest passing row.  With exact radii and margin ≥ 1 the
+    prune is provably inert (tests assert this); margin < 1 is the
+    productive regime.
+
+The index is plain build-time data.  The fused keep-mask itself lives in
+`kernels/frontier_scan.py` / `kernels/ref.py` and is threaded through
+`core/graph_search.py` (`SearchParams.exclusion="prune"`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import METRIC_L2, VectorStore, unpack_bitmap
+
+# Default K ladder: geometric so any selectivity in [1/n, 1] is within 2x
+# of a rung.  K=1 is the nearest *other* row (self excluded).
+DEFAULT_LADDER_KS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExclusionIndex:
+    """Per-node exclusion radii (squared l2).
+
+    ladder: (R, N) f32, ladder[r, v] = squared distance from v to its
+        ladder_ks[r]-th nearest neighbor (self excluded).
+    family_radii: (F, N) f32, exact squared distance from v to the
+        nearest row passing registered family f (+inf for an empty
+        family).  (0, N) when no families are registered.
+    family_bitmaps: (F, W) uint32 packed bitmaps of the registered
+        families, used for exact-equality matching at plan time.
+    """
+
+    ladder: jax.Array
+    family_radii: jax.Array
+    family_bitmaps: jax.Array
+    ladder_ks: tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True), default=DEFAULT_LADDER_KS)
+    family_tags: tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True), default=())
+
+    @property
+    def n(self) -> int:
+        return self.ladder.shape[1]
+
+    @property
+    def num_families(self) -> int:
+        return len(self.family_tags)
+
+
+def _blocked_sq_dists(vectors: np.ndarray, norms: np.ndarray,
+                      lo: int, hi: int) -> np.ndarray:
+    """Squared-l2 rows [lo, hi) vs all rows, (hi-lo, N) f32, self = +inf."""
+    block = vectors[lo:hi]
+    d = (norms[lo:hi, None] + norms[None, :]
+         - 2.0 * block @ vectors.T).astype(np.float32)
+    np.maximum(d, 0.0, out=d)
+    d[np.arange(hi - lo), np.arange(lo, hi)] = np.inf
+    return d
+
+
+def build_exclusion(store: VectorStore,
+                    families: Optional[Mapping[str, np.ndarray]] = None,
+                    ladder_ks: Sequence[int] = DEFAULT_LADDER_KS,
+                    block: int = 1024) -> ExclusionIndex:
+    """Build-time pass: K-th-NN ladder + exact per-family radii.
+
+    families maps tag -> packed (W,) uint32 bitmap of the family's
+    passing rows (the same object queries of that family carry).  One
+    blocked O(N²/block) sweep computes both tiers.
+    """
+    if store.metric != METRIC_L2:
+        raise ValueError("exclusion radii require metric='l2' "
+                         f"(got {store.metric!r})")
+    ladder_ks = tuple(int(k) for k in ladder_ks)
+    if not ladder_ks or any(k < 1 for k in ladder_ks):
+        raise ValueError("ladder_ks must be >= 1")
+    n = store.n
+    vectors = np.asarray(store.vectors, np.float32)
+    norms = np.asarray(store.norms_sq, np.float32)
+    families = dict(families or {})
+    tags = tuple(sorted(families))
+    fam_bits = [unpack_bitmap(np.asarray(families[t]), n) for t in tags]
+
+    ladder = np.empty((len(ladder_ks), n), np.float32)
+    fam = np.full((len(tags), n), np.inf, np.float32)
+    kmax = min(max(ladder_ks), n - 1) if n > 1 else 0
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        d = _blocked_sq_dists(vectors, norms, lo, hi)
+        if kmax > 0:
+            # partition pins only index kmax-1; the smaller rungs read
+            # inside the partitioned head, so sort that head (kmax <= 256
+            # columns — cheap next to the O(n) distance sweep)
+            head = np.partition(d, kmax - 1, axis=1)[:, :kmax]
+            head.sort(axis=1)
+            for r, k in enumerate(ladder_ks):
+                kk = min(k, n - 1)
+                ladder[r, lo:hi] = head[:, kk - 1]
+        else:
+            ladder[:, lo:hi] = np.inf
+        for f, bits in enumerate(fam_bits):
+            if bits.any():
+                fam[f, lo:hi] = d[:, bits].min(axis=1)
+                # A passing row's own radius is 0 (self-distance was
+                # masked to +inf above, but v itself passes).
+                row_pass = bits[lo:hi]
+                fam[f, lo:hi][row_pass] = 0.0
+    words = (n + 31) // 32
+    fam_words = (np.stack([np.asarray(families[t]) for t in tags])
+                 if tags else np.zeros((0, words), np.uint32))
+    return ExclusionIndex(
+        ladder=jnp.asarray(ladder),
+        family_radii=jnp.asarray(fam),
+        family_bitmaps=jnp.asarray(fam_words.astype(np.uint32)),
+        ladder_ks=ladder_ks, family_tags=tags)
+
+
+def ladder_rung(excl: ExclusionIndex, selectivity: float) -> int:
+    """Ladder row whose K is nearest (in log space) to 1/selectivity."""
+    target = 1.0 / max(float(selectivity), 1e-9)
+    ks = np.asarray(excl.ladder_ks, np.float64)
+    return int(np.argmin(np.abs(np.log(ks) - np.log(target))))
+
+
+def match_families(excl: ExclusionIndex, bitmaps) -> np.ndarray:
+    """(Q,) int32: index of the registered family whose bitmap equals each
+    query's bitmap word-for-word, or -1.  Exact-match only — the JAG /
+    family tiers never serve a predicate they were not built for."""
+    bm = np.asarray(bitmaps)
+    if excl.num_families == 0:
+        return np.full(bm.shape[0], -1, np.int32)
+    fam = np.asarray(excl.family_bitmaps)
+    eq = (bm[:, None, :] == fam[None, :, :]).all(-1)  # (Q, F)
+    hit = eq.any(1)
+    return np.where(hit, eq.argmax(1), -1).astype(np.int32)
+
+
+def select_radii(excl: ExclusionIndex, bitmaps,
+                 selectivity: Optional[float] = None) -> jax.Array:
+    """Per-query (Q, N) exclusion radii: the exact family row where the
+    query's bitmap matches a registered family, else the ladder rung for
+    K ≈ 1/selectivity (selectivity defaults to the bitmap popcount)."""
+    bm = np.asarray(bitmaps)
+    q = bm.shape[0]
+    if selectivity is None:
+        pop = unpack_bitmap(bm, excl.n).sum(-1)
+        selectivity = float(np.mean(pop)) / max(excl.n, 1)
+    rung = ladder_rung(excl, selectivity)
+    out = jnp.broadcast_to(excl.ladder[rung], (q, excl.n))
+    fam = match_families(excl, bm)
+    if (fam >= 0).any():
+        fam_rows = excl.family_radii[jnp.maximum(jnp.asarray(fam), 0)]
+        out = jnp.where(jnp.asarray(fam >= 0)[:, None], fam_rows, out)
+    return out

@@ -26,6 +26,7 @@ registered candidate, and dispatches to the cheapest recall-feasible one
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from functools import partial
 from typing import Any, Mapping, Optional, Protocol, runtime_checkable
 
@@ -35,19 +36,22 @@ import numpy as np
 
 from repro.core import costmodel
 from repro.core.bruteforce import filtered_knn, filtered_knn_partial
+from repro.core.exclusion import ExclusionIndex, match_families, select_radii
 from repro.core.graph_search import (FrontierState, frontier_finalize,
                                      frontier_idle, frontier_init,
                                      frontier_write_slot, search_batch,
                                      step_supersteps)
-from repro.core.hnsw import HNSWGraph
+from repro.core.hnsw import HNSWGraph, PartitionedGraph
 from repro.core.scann import (ScannIndex, _quant_pages_per_leaf,
                               leaves_within_budget, project_query,
                               scann_search_batch,
                               scann_search_batch_vmapped)
 from repro.core.types import (SearchParams, SearchResult, SearchStats,
                               VectorStore, distance, heap_pages_per_vector,
-                              probe_bitmap, quantize_store, topk_smallest)
-from repro.storage.engine import StorageEngine
+                              pack_bool_bitmap, probe_bitmap, quantize_store,
+                              topk_smallest)
+from repro.storage.engine import (StorageEngine, TRACE_UNTOUCHED,
+                                  merge_storage_stats)
 
 GRAPH_STRATEGIES = costmodel.GRAPH_STRATEGIES
 
@@ -113,7 +117,8 @@ class GraphExecutor(BaseExecutor):
     def __init__(self, graph: HNSWGraph, store: VectorStore,
                  strategy: str = "sweeping", use_pallas: bool = False,
                  storage: Optional[StorageEngine] = None,
-                 graph_quant: str = "none"):
+                 graph_quant: str = "none",
+                 exclusion: Optional[ExclusionIndex] = None):
         if strategy not in GRAPH_STRATEGIES:
             raise ValueError(f"unknown graph strategy {strategy!r}")
         if graph_quant not in ("none", "sq8"):
@@ -129,14 +134,30 @@ class GraphExecutor(BaseExecutor):
                 raise ValueError("storage engine lacks the qheap (SQ8 "
                                  "shadow) segment; build it from the "
                                  "quantized store")
+        if exclusion is not None:
+            # FAVOR pruned traversal (DESIGN.md §14): the keep rule is a
+            # triangle-inequality argument in l2 root space, composed
+            # with the sweeping engine's W-tail threshold — no other
+            # strategy/metric carries the proof.
+            if strategy != "sweeping":
+                raise ValueError("exclusion pruning only composes with the "
+                                 "sweeping strategy")
+            if store.metric != "l2":
+                raise ValueError("exclusion pruning needs metric='l2'")
+            if exclusion.n != store.n:
+                raise ValueError(
+                    f"exclusion index built over n={exclusion.n} rows but "
+                    f"store has n={store.n} (stale radii)")
         self.graph = graph
         self.store = store
         self.strategy = strategy
         self.use_pallas = use_pallas
         self.storage = storage
         self.graph_quant = graph_quant
-        self.name = strategy if graph_quant == "none" \
-            else f"{strategy}_{graph_quant}"
+        self.exclusion = exclusion
+        base = strategy if exclusion is None else f"{strategy}_excl"
+        self.name = base if graph_quant == "none" \
+            else f"{base}_{graph_quant}"
 
     def resolve_params(self, params: SearchParams) -> SearchParams:
         """Plan-time strategy/quant coercion as a reusable helper.
@@ -149,25 +170,51 @@ class GraphExecutor(BaseExecutor):
                 params.graph_quant != self.graph_quant:
             params = dataclasses.replace(params, strategy=self.strategy,
                                          graph_quant=self.graph_quant)
+        if self.exclusion is None and params.exclusion != "none":
+            # an exclusion mode only means something on an executor that
+            # owns radii — coerce back so the legacy path stays inert
+            params = dataclasses.replace(params, exclusion="none")
         return params
 
     def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
-        return SearchPlan(self.strategy, self.resolve_params(params),
-                          queries, bitmaps)
+        params = self.resolve_params(params)
+        notes = None
+        if self.exclusion is not None:
+            # Per-batch radii selection (DESIGN.md §14): family-exact rows
+            # where the whole batch hits registered families — that is the
+            # regime where "prune_exact" (FAVOR's eliminated filter probe)
+            # is sound, because a family radius is 0 iff the row passes.
+            # Any non-matching query demotes the batch to the ladder rungs
+            # with full fc charging ("prune").
+            fam = np.asarray(match_families(self.exclusion, bitmaps))
+            mode = "prune_exact" if fam.size and (fam >= 0).all() \
+                else "prune"
+            params = dataclasses.replace(params, exclusion=mode)
+            notes = {"excl": select_radii(self.exclusion, bitmaps)}
+        return SearchPlan(self.strategy, params, queries, bitmaps,
+                          notes=notes)
 
     # ---- stepped frontier driver (DESIGN.md §11) --------------------
     # Thin delegates so the continuous-batching scheduler never imports
     # graph_search directly; trace collection follows the storage
     # attachment the same way `execute` does.
 
+    def _no_stepped_exclusion(self):
+        if self.exclusion is not None:
+            raise ValueError("exclusion pruning is not supported by the "
+                             "stepped frontier driver (radii don't ride in "
+                             "FrontierState); use the one-shot search path")
+
     def idle_frontier(self, params: SearchParams, width: int
                       ) -> FrontierState:
+        self._no_stepped_exclusion()
         return frontier_idle(self.graph, self.store,
                              self.resolve_params(params), width,
                              collect_trace=self.storage is not None)
 
     def init_frontier(self, queries, bitmaps, params: SearchParams,
                       deadlines=None) -> FrontierState:
+        self._no_stepped_exclusion()
         return frontier_init(self.graph, self.store, queries, bitmaps,
                              self.resolve_params(params),
                              collect_trace=self.storage is not None,
@@ -191,11 +238,13 @@ class GraphExecutor(BaseExecutor):
                                  self.resolve_params(params))
 
     def execute(self, plan: SearchPlan) -> SearchResult:
+        excl = None if plan.notes is None else plan.notes.get("excl")
         if self.storage is None:
             d, ids, stats = search_batch(self.graph, self.store,
                                          plan.queries, plan.bitmaps,
                                          plan.params,
-                                         use_pallas=self.use_pallas)
+                                         use_pallas=self.use_pallas,
+                                         excl=excl)
             return SearchResult(dists=d, ids=ids, stats=stats,
                                 strategy=self.strategy, plan=plan,
                                 anytime=costmodel.evaluate_anytime(
@@ -206,7 +255,7 @@ class GraphExecutor(BaseExecutor):
                              "engine (graph_exec_mode='frontier')")
         d, ids, stats, trace = search_batch(
             self.graph, self.store, plan.queries, plan.bitmaps, plan.params,
-            use_pallas=self.use_pallas, collect_trace=True)
+            use_pallas=self.use_pallas, collect_trace=True, excl=excl)
         rr = trace.get("rerank_rows")
         sstats = self.storage.account_graph(
             np.asarray(trace["heap_steps"]),
@@ -219,6 +268,175 @@ class GraphExecutor(BaseExecutor):
                             anytime=costmodel.evaluate_anytime(
                                 stats, plan.params, self.store.dim, ids,
                                 hop_cap=plan.params.max_hops))
+
+
+def _allpass_bitmap(n: int) -> jax.Array:
+    """(W,) uint32 bitmap passing exactly rows [0, n)."""
+    return jnp.asarray(pack_bool_bitmap(np.ones(n, bool)))
+
+
+def _scatter_storage_stats(stats, qsel: np.ndarray, q: int):
+    """Widen a query-subset StorageStats to the full batch: per-query
+    arrays scatter to their global slots (zeros/False elsewhere) so
+    `merge_storage_stats` can sum same-shaped parts."""
+    def scatter(arr, fill):
+        full = np.full(q, fill, np.asarray(arr).dtype)
+        full[qsel] = np.asarray(arr)
+        return full
+
+    return dataclasses.replace(
+        stats,
+        index_pages=scatter(stats.index_pages, 0),
+        heap_pages=scatter(stats.heap_pages, 0),
+        faulted=(None if stats.faulted is None
+                 else scatter(stats.faulted, False)))
+
+
+class PartitionedGraphExecutor(BaseExecutor):
+    """JAG-style attribute-partitioned graphs (DESIGN.md §14) behind the
+    executor API.
+
+    Each registered predicate *family* owns a private subgraph built over
+    exactly its passing rows (`hnsw.build_graph_partitioned`).  A query
+    whose bitmap equals a family bitmap word-for-word runs UNFILTERED on
+    that subgraph — the filter is the partition, so per-candidate filter
+    checks vanish (the JAG claim); the only fc charged is the plan-time
+    family match (F·words word comparisons per query).  Queries matching
+    no family fall back to the wrapped base executor on the full graph;
+    a store grown past `built_n` (stale partitions) demotes the whole
+    batch to the fallback.
+
+    With a `storage` engine attached, matched queries' subgraph traces
+    are scattered back to GLOBAL row ids and replayed through the base
+    heap/adjacency layout — exact for heap pages (same rows, same pages),
+    conservative for index pages (a family's private adjacency is packed
+    denser than the base layout it is charged through)."""
+
+    def __init__(self, partitions: PartitionedGraph, store: VectorStore,
+                 base: Optional[Executor] = None, use_pallas: bool = False,
+                 storage: Optional[StorageEngine] = None,
+                 graph_quant: str = "none"):
+        if graph_quant not in ("none", "sq8"):
+            raise ValueError(f"unknown graph_quant {graph_quant!r}")
+        if not partitions.partitions:
+            raise ValueError("PartitionedGraph holds no partitions")
+        if graph_quant == "sq8" and any(
+                p.store.q_vectors is None for p in partitions.partitions):
+            raise ValueError("graph_quant='sq8' needs partitions built from "
+                             "a quantize_store'd VectorStore (SQ8 shadow "
+                             "missing in a partition)")
+        if storage is not None and storage.graph is None:
+            raise ValueError("storage engine lacks a graph adjacency "
+                             "layout; build it with graph=")
+        self.partitions = partitions
+        self.store = store
+        self.base = base
+        self.use_pallas = use_pallas
+        self.storage = storage
+        self.graph_quant = graph_quant
+        self.strategy = "partitioned"
+        self.name = "partitioned" if graph_quant == "none" \
+            else f"partitioned_{graph_quant}"
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        stale = self.partitions.built_n != self.store.n
+        match = np.full(int(queries.shape[0]), -1, np.int32) if stale \
+            else np.asarray(self.partitions.match(bitmaps))
+        # the sub-searches run the unfiltered strategy: the partition IS
+        # the filter, so traversal gating and the final check both drop
+        sub = dataclasses.replace(params, strategy="unfiltered",
+                                  graph_quant=self.graph_quant,
+                                  exclusion="none")
+        return SearchPlan("partitioned", sub, queries, bitmaps,
+                          notes={"match": match, "caller_params": params})
+
+    def execute(self, plan: SearchPlan) -> SearchResult:
+        match = plan.notes["match"]
+        q, k = int(plan.queries.shape[0]), plan.params.k
+        unmatched = np.flatnonzero(match < 0)
+        if unmatched.size and self.base is None:
+            raise ValueError(
+                f"{unmatched.size} queries match no partition family and "
+                "no base executor is attached for fallback")
+        dists = np.full((q, k), np.inf, np.float32)
+        ids = np.full((q, k), -1, np.int32)
+        counters = {f.name: np.zeros(q, np.int32)
+                    for f in dataclasses.fields(SearchStats)}
+        sparts = []
+        tracing = self.storage is not None
+        for f_idx in np.unique(match[match >= 0]):
+            part = self.partitions.partitions[int(f_idx)]
+            qsel = np.flatnonzero(match == f_idx)
+            bm = jnp.broadcast_to(_allpass_bitmap(part.store.n),
+                                  (qsel.size,
+                                   (part.store.n + 31) // 32))
+            out = search_batch(part.graph, part.store,
+                               plan.queries[qsel], bm, plan.params,
+                               use_pallas=self.use_pallas,
+                               collect_trace=tracing)
+            d, lids, stats = out[:3]
+            rows = np.asarray(part.rows)
+            lids = np.asarray(lids)
+            dists[qsel] = np.asarray(d)
+            ids[qsel] = np.where(lids >= 0,
+                                 rows[np.maximum(lids, 0)], -1)
+            for name in counters:
+                counters[name][qsel] = np.asarray(getattr(stats, name))
+            if tracing:
+                sparts.append(_scatter_storage_stats(
+                    self._account_partition(out[3], rows, qsel), qsel, q))
+        if unmatched.size:
+            fres = self.base.search(plan.queries[unmatched],
+                                    plan.bitmaps[unmatched],
+                                    plan.notes["caller_params"])
+            dists[unmatched] = np.asarray(fres.dists)[:, :k]
+            ids[unmatched] = np.asarray(fres.ids)[:, :k]
+            if fres.stats is not None:
+                for name in counters:
+                    counters[name][unmatched] = np.asarray(
+                        getattr(fres.stats, name))
+            if fres.storage is not None:
+                sparts.append(_scatter_storage_stats(fres.storage,
+                                                     unmatched, q))
+        # plan-time family match: each DISTINCT predicate bitmap in the
+        # batch is compared against all F family bitmaps, words at a time
+        # (PartitionedGraph.match dedupes the same way) — the only filter
+        # work a matched query ever pays (the JAG accounting claim).  The
+        # charge lands on each distinct bitmap's first query; queries
+        # sharing the bitmap ride the memoized match.
+        _, first = np.unique(np.asarray(plan.bitmaps), axis=0,
+                             return_index=True)
+        counters["filter_checks"][first] += (
+            len(self.partitions.partitions) * int(plan.bitmaps.shape[1]))
+        stats = SearchStats(**{name: jnp.asarray(v)
+                               for name, v in counters.items()})
+        sstats = merge_storage_stats(sparts) if sparts else None
+        jd, ji = jnp.asarray(dists), jnp.asarray(ids)
+        return SearchResult(dists=jd, ids=ji, stats=stats,
+                            strategy="partitioned", plan=plan,
+                            storage=sstats,
+                            anytime=costmodel.evaluate_anytime(
+                                stats, plan.params, self.store.dim, ji,
+                                hop_cap=plan.params.max_hops))
+
+    def _account_partition(self, trace, rows: np.ndarray,
+                           qsel: np.ndarray):
+        """Scatter a subgraph trace's first-touch stamps (Qg, n_f) to
+        global row ids (Qg, n) and replay through the base layout."""
+        n = self.store.n
+        hs = np.asarray(trace["heap_steps"])
+        isteps = np.asarray(trace["index_steps"])
+        heap_g = np.full((qsel.size, n), TRACE_UNTOUCHED, np.int32)
+        idx_g = np.full((qsel.size, n), TRACE_UNTOUCHED, np.int32)
+        heap_g[:, rows] = hs
+        idx_g[:, rows] = isteps
+        rr = trace.get("rerank_rows")
+        rr_g = None
+        if rr is not None:
+            rr = np.asarray(rr)
+            rr_g = np.where(rr >= 0, rows[np.maximum(rr, 0)], -1)
+        return self.storage.account_graph(heap_g, idx_g, rerank_rows=rr_g,
+                                          quant=self.graph_quant == "sq8")
 
 
 class ScannExecutor(BaseExecutor):
@@ -590,6 +808,9 @@ class AdaptivePlanner(BaseExecutor):
         # predictions (costmodel.engine_scale) — the ROADMAP
         # "per-batch measurement instead of a constant" follow-up.
         self._measured_unique: Optional[float] = None
+        # Memoized per-batch (selectivity, γ) — see _selectivity_proxy.
+        self._proxy_key: Optional[tuple] = None
+        self._proxy_val: Optional[tuple] = None
 
     # -- shape facts for the predictive model --------------------------------
     def _shape(self) -> costmodel.IndexShape:
@@ -616,23 +837,58 @@ class AdaptivePlanner(BaseExecutor):
             # predicate subgraph must hold at least ~ef nodes to navigate
             return shape.n * s_eff * costmodel.FILTER_FIRST_POOL >= \
                 max(params.ef_search, k)
-        if strategy in ("sweeping", "iterative_scan"):
+        if strategy in ("sweeping", "iterative_scan", "sweeping_excl"):
             # traversal must reach k passing rows within the hop budget
+            # (pruning never drops a passing candidate, so the exclusion
+            # tier inherits sweeping's reachability law unchanged)
             hops = min(max(params.ef_search, 2 * params.k) / max(s_eff, 1e-9),
                        float(params.max_hops))
             return costmodel.GRAPH_NEW_PER_HOP * hops * s_eff >= k
         return True
 
-    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+    def _batch_feasible(self, ex: Executor, bitmaps) -> bool:
+        """Batch-shape feasibility the closed-form laws can't see: the
+        partitioned tier answers a batch only when EVERY query's bitmap
+        equals a registered family bitmap and the partitions are fresh —
+        anything else would silently route through its fallback and the
+        prediction would price the wrong machinery."""
+        if isinstance(ex, PartitionedGraphExecutor):
+            if ex.partitions.built_n != ex.store.n:
+                return False
+            return bool((np.asarray(ex.partitions.match(bitmaps)) >= 0)
+                        .all())
+        return True
+
+    def _selectivity_proxy(self, queries, bitmaps):
+        """Memoized (per-query selectivity, correlation proxy γ) for one
+        batch, keyed by a crc of the raw bytes.  Regret sweeps and serving
+        loops replan the same workload as the candidate menu grows, and
+        the popcount + leaf-probe proxies are menu-independent — one
+        computation per distinct batch keeps planning cost flat from the
+        6-candidate menu to the 9-candidate one.  The CHARGED overhead
+        (filter-word reads + probe fc/dc in execute()) is a property of
+        the proxy computation, not the menu, and is unchanged."""
+        key = (zlib.crc32(np.asarray(bitmaps).tobytes()),
+               zlib.crc32(np.ascontiguousarray(
+                   np.asarray(queries, np.float32)).tobytes()))
+        if self._proxy_key == key:
+            return self._proxy_val
         n = self.store.n
         sel = np.asarray(_bitmap_popcount(bitmaps)).astype(np.float64) / n
-        s_mean = float(sel.mean())
         gamma = 1.0
         if self._scann is not None:
             local = np.asarray(_leaf_local_selectivity(
                 self._scann.index, queries, bitmaps, self.probe_leaves))
-            gamma = float(np.clip(local.mean() / max(s_mean, 1.0 / n),
+            gamma = float(np.clip(local.mean()
+                                  / max(float(sel.mean()), 1.0 / n),
                                   0.05, 20.0))
+        self._proxy_key, self._proxy_val = key, (sel, gamma)
+        return sel, gamma
+
+    def plan(self, queries, bitmaps, params: SearchParams) -> SearchPlan:
+        n = self.store.n
+        sel, gamma = self._selectivity_proxy(queries, bitmaps)
+        s_mean = float(sel.mean())
         shape = self._shape()
         s_eff = min(max(s_mean * gamma, 1.0 / n), 1.0)
         batch_q = int(queries.shape[0])
@@ -649,8 +905,15 @@ class AdaptivePlanner(BaseExecutor):
             for name, ex in self.candidates.items()}
         feasible = {name: p for name, p in preds.items()
                     if self._recall_feasible(_strategy_kind(
-                        self.candidates[name]), shape, params, s_eff)}
-        pool = feasible or preds          # never empty: fall back to argmin
+                        self.candidates[name]), shape, params, s_eff)
+                    and self._batch_feasible(self.candidates[name], bitmaps)}
+        # never empty: fall back to argmin, but a batch-infeasible
+        # candidate (partitioned with an unmatched query) stays out even
+        # then — executing it would route the wrong machinery
+        pool = feasible \
+            or {nm: p for nm, p in preds.items()
+                if self._batch_feasible(self.candidates[nm], bitmaps)} \
+            or preds
         chosen = min(pool, key=pool.get)
         inner = self.candidates[chosen].plan(queries, bitmaps, params)
         return SearchPlan(strategy=chosen, params=inner.params,
@@ -692,9 +955,14 @@ class AdaptivePlanner(BaseExecutor):
 
 def _strategy_kind(ex: Executor) -> str:
     """Predictive-model strategy key for an executor instance (quant
-    variants of a graph strategy share its predictive model)."""
+    variants of a graph strategy share its predictive model; the
+    exclusion and partitioned tiers have their own laws)."""
     if isinstance(ex, ScannExecutor):
         return "scann"
+    if isinstance(ex, PartitionedGraphExecutor):
+        return "partitioned"
+    if isinstance(ex, GraphExecutor) and ex.exclusion is not None:
+        return "sweeping_excl"
     return getattr(ex, "strategy", ex.name)
 
 
@@ -702,9 +970,14 @@ def _candidate_params(ex: Executor, params: SearchParams) -> SearchParams:
     """The params the candidate would resolve in plan() — what its
     prediction must be priced on (strategy + graph_quant for graph
     executors)."""
+    if isinstance(ex, PartitionedGraphExecutor):
+        return dataclasses.replace(params, strategy="unfiltered",
+                                   graph_quant=ex.graph_quant,
+                                   exclusion="none")
     if isinstance(ex, GraphExecutor):
-        return dataclasses.replace(params, strategy=ex.strategy,
-                                   graph_quant=ex.graph_quant)
+        return dataclasses.replace(
+            params, strategy=ex.strategy, graph_quant=ex.graph_quant,
+            exclusion="none" if ex.exclusion is None else "prune")
     return params
 
 
@@ -713,8 +986,13 @@ def _candidate_params(ex: Executor, params: SearchParams) -> SearchParams:
 # ---------------------------------------------------------------------------
 
 GRAPH_SQ8_METHODS = tuple(f"{s}_sq8" for s in GRAPH_STRATEGIES)
-REGISTERED_METHODS = GRAPH_STRATEGIES + GRAPH_SQ8_METHODS + (
-    "scann", "scann_vmapped", "bruteforce", "adaptive")
+# Selectivity-aware tiers (DESIGN.md §14): exclusion-pruned sweeping and
+# the attribute-partitioned graph, each with an SQ8 shadow variant.
+EXCL_METHODS = ("sweeping_excl", "sweeping_excl_sq8")
+PARTITIONED_METHODS = ("partitioned", "partitioned_sq8")
+REGISTERED_METHODS = GRAPH_STRATEGIES + GRAPH_SQ8_METHODS + EXCL_METHODS \
+    + PARTITIONED_METHODS + ("scann", "scann_vmapped", "bruteforce",
+                             "adaptive")
 
 
 def _parse_graph_method(method: str) -> tuple[str, str]:
@@ -731,6 +1009,8 @@ def make_executor(method: str, store: VectorStore, *,
                   constants: costmodel.CostConstants = costmodel.SYSTEM,
                   graph_m: int = 16,
                   storage: Optional[StorageEngine] = None,
+                  exclusion: Optional[ExclusionIndex] = None,
+                  partitions: Optional[PartitionedGraph] = None,
                   planner_candidates: tuple[str, ...] = (
                       "bruteforce", "scann", "sweeping", "sweeping_sq8",
                       "navix", "iterative_scan")) -> Executor:
@@ -739,13 +1019,44 @@ def make_executor(method: str, store: VectorStore, *,
     Graph strategies need `graph`; their "<strategy>_sq8" variants run
     the SQ8 quantized-traversal tier (DESIGN.md §9 — the store is
     shadow-quantized here if it isn't already); "scann"/"scann_vmapped"
-    need `index`; "adaptive" builds every candidate the provided
-    components support (including the quantized sweeping dispatch
-    candidate by default).  `storage` attaches a paged storage engine
-    (DESIGN.md §8): results carry measured StorageStats, and for
-    "adaptive" ONE shared pool backs every candidate AND feeds residency
-    + measured per-batch page sharing into the planner's predictions
-    (warm-cache-aware, engine-amortization-aware dispatch)."""
+    need `index`; the selectivity-aware tiers (DESIGN.md §14) need their
+    build artifacts: "sweeping_excl[_sq8]" needs `exclusion=`
+    (core.exclusion.build_exclusion) and "partitioned[_sq8]" needs
+    `partitions=` (hnsw.build_graph_partitioned, with `graph=` as the
+    unmatched-query fallback).  "adaptive" builds every candidate the
+    provided components support — name the new tiers in
+    `planner_candidates` to put them on the menu.  `storage` attaches a
+    paged storage engine (DESIGN.md §8): results carry measured
+    StorageStats, and for "adaptive" ONE shared pool backs every
+    candidate AND feeds residency + measured per-batch page sharing into
+    the planner's predictions (warm-cache-aware, engine-amortization-
+    aware dispatch)."""
+    def _excl_executor(quant: str, st: VectorStore) -> GraphExecutor:
+        if graph is None or exclusion is None:
+            raise ValueError("'sweeping_excl' variants need graph= and "
+                             "exclusion=")
+        return GraphExecutor(graph, st, strategy="sweeping",
+                             use_pallas=use_pallas, storage=storage,
+                             graph_quant=quant, exclusion=exclusion)
+
+    def _part_executor(quant: str, st: VectorStore) -> Executor:
+        if partitions is None:
+            raise ValueError("'partitioned' variants need partitions=")
+        fallback = None if graph is None else GraphExecutor(
+            graph, st, strategy="sweeping", use_pallas=use_pallas,
+            storage=storage, graph_quant=quant)
+        return PartitionedGraphExecutor(partitions, st, base=fallback,
+                                        use_pallas=use_pallas,
+                                        storage=storage, graph_quant=quant)
+
+    if method in EXCL_METHODS:
+        quant = "sq8" if method.endswith("_sq8") else "none"
+        return _excl_executor(quant, quantize_store(store)
+                              if quant == "sq8" else store)
+    if method in PARTITIONED_METHODS:
+        quant = "sq8" if method.endswith("_sq8") else "none"
+        return _part_executor(quant, quantize_store(store)
+                              if quant == "sq8" else store)
     base, quant = _parse_graph_method(method)
     if base in GRAPH_STRATEGIES:
         if graph is None:
@@ -765,7 +1076,7 @@ def make_executor(method: str, store: VectorStore, *,
     if method == "bruteforce":
         return BruteForceExecutor(store, storage=storage)
     if method == "adaptive":
-        if any(_parse_graph_method(n)[1] == "sq8"
+        if any(_parse_graph_method(n)[1] == "sq8" or n.endswith("_sq8")
                for n in planner_candidates) and graph is not None:
             store = quantize_store(store)
         cands: dict[str, Executor] = {}
@@ -773,6 +1084,14 @@ def make_executor(method: str, store: VectorStore, *,
             cbase, cquant = _parse_graph_method(name)
             if name == "bruteforce":
                 cands[name] = BruteForceExecutor(store, storage=storage)
+            elif name in EXCL_METHODS:
+                if graph is not None and exclusion is not None:
+                    cands[name] = _excl_executor(
+                        "sq8" if name.endswith("_sq8") else "none", store)
+            elif name in PARTITIONED_METHODS:
+                if partitions is not None:
+                    cands[name] = _part_executor(
+                        "sq8" if name.endswith("_sq8") else "none", store)
             elif cbase in GRAPH_STRATEGIES and graph is not None:
                 cands[name] = GraphExecutor(graph, store, strategy=cbase,
                                             use_pallas=use_pallas,

@@ -685,7 +685,7 @@ def _iterative_scan(graph: HNSWGraph, store: VectorStore, q, bitmap,
 @partial(jax.jit, static_argnames=("params", "use_pallas", "collect_trace"))
 def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                  params: SearchParams, use_pallas: bool = False,
-                 collect_trace: bool = False):
+                 collect_trace: bool = False, excl=None):
     """Batched filtered graph search. queries (Q, d), bitmaps (Q, words).
 
     `params.graph_exec_mode` picks the engine (DESIGN.md §7):
@@ -735,6 +735,34 @@ def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         raise ValueError("graph_quant='sq8' needs an SQ8 shadow store; "
                          "build it with core.types.quantize_store")
     mode = params.graph_exec_mode
+    # FAVOR exclusion pruning (DESIGN.md §14): like graph_quant, the knob
+    # and its data must agree, and "none" traces nothing — the jitted
+    # program is identical to the pre-exclusion engine.
+    if params.exclusion not in ("none", "prune", "prune_exact"):
+        raise ValueError(f"unknown exclusion {params.exclusion!r}; "
+                         "expected 'none', 'prune' or 'prune_exact'")
+    if params.exclusion != "none":
+        if excl is None:
+            raise ValueError(f"exclusion={params.exclusion!r} needs "
+                             "per-query radii (excl=(Q, n) f32; "
+                             "core.exclusion)")
+        if params.strategy != "sweeping":
+            raise ValueError("exclusion pruning is a sweeping-strategy "
+                             f"tier (got strategy={params.strategy!r})")
+        if store.metric != "l2":
+            raise ValueError("exclusion pruning requires metric='l2' "
+                             f"(got {store.metric!r})")
+        if mode != "frontier":
+            raise ValueError("exclusion pruning needs the frontier engine "
+                             "(graph_exec_mode='frontier')")
+        if isinstance(store, ShardStore):
+            raise ValueError("exclusion pruning is not supported on "
+                             "sharded stores")
+        if not params.exclusion_margin > 0.0:
+            raise ValueError("exclusion_margin must be > 0 (0 would prune "
+                             "everything once W fills)")
+    elif excl is not None:
+        raise ValueError("excl radii passed but params.exclusion='none'")
     if mode == "vmapped":
         if collect_trace:
             raise ValueError("storage traces need the frontier engine "
@@ -746,7 +774,7 @@ def search_batch(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
         raise ValueError(f"unknown graph_exec_mode {mode!r}; "
                          "expected 'frontier' or 'vmapped'")
     return _frontier_search_batch(graph, store, queries, bitmaps, params,
-                                  use_pallas, collect_trace)
+                                  use_pallas, collect_trace, excl=excl)
 
 
 # ===========================================================================
@@ -859,6 +887,28 @@ def _frontier_scores(queries, store: VectorStore, cids, bitmaps,
                               metric=store.metric, use_pallas=use_pallas)
 
 
+def _frontier_scores_excl(queries, store: VectorStore, cids, bitmaps,
+                          use_pallas: bool, quant: str, excl, tau,
+                          margin: float):
+    """`_frontier_scores` + the fused FAVOR keep mask (DESIGN.md §14).
+
+    excl (Q, n) per-query squared exclusion radii; the chunk's per-row
+    radii ride the same compacted id block as the vectors (one extra
+    take_along_axis, zero extra HBM round trips through the heap).
+    tau (Q,) current W tail.  Plain stores only (search_batch rejects
+    sharded stores under exclusion).  Returns (dists, pass, keep)."""
+    e = jnp.take_along_axis(excl, jnp.maximum(cids, 0), axis=1)
+    vecs, nsq = _union_gather(store, cids, dedup=use_pallas, quant=quant)
+    if quant == "sq8":
+        return kops.frontier_scan_excl_sq8(
+            queries, vecs, store.q_scale, store.q_mean, nsq, cids, bitmaps,
+            e, tau[:, None], metric=store.metric, margin=margin,
+            use_pallas=use_pallas)
+    return kops.frontier_scan_excl(queries, vecs, nsq, cids, bitmaps, e,
+                                   tau[:, None], metric=store.metric,
+                                   margin=margin, use_pallas=use_pallas)
+
+
 def _merge_smallest(buf_d, buf_id, cand_d, cand_id, drop_head=None):
     """Keep the B smallest of buffer ∪ candidates, sorted ascending.
 
@@ -900,7 +950,9 @@ _mark_batch = jax.vmap(bitset_mark)
 def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
                          chunk: int, pool, w, visited, use_pallas: bool,
                          sweep_worst=None, dedup: bool = False,
-                         drop_head=None, quant: str = "none"):
+                         drop_head=None, quant: str = "none",
+                         excl=None, excl_margin: float = 0.5,
+                         excl_exact: bool = False):
     """Score the selected candidates chunk-at-a-time and merge them into
     the pool and result queue, marking them visited as chunks complete.
 
@@ -924,6 +976,21 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
     `drop_head` (per-query bool) folds the superstep's pool pop into the
     first insertion.
 
+    `excl` ((Q, n) squared radii, sweeping only) switches scoring to the
+    fused excl kernels and gates POOL insertion on the keep mask
+    (DESIGN.md §14): a dropped candidate keeps its distance in this
+    superstep (dc/pah already paid, W eligibility and the would-enter-W
+    filter-check count unchanged, visited marked) but never enters the
+    pool — its branch is never popped, so all downstream hops, filter
+    checks and pages vanish.  tau is `sweep_worst`, captured at superstep
+    start like the legacy W gate (+inf until W fills, so the navigation
+    phase is never pruned).  `excl_exact` (family-exact radii, where
+    e = 0 iff the row passes) additionally stops charging filter checks
+    for pruned candidates — the radius test PROVES them non-passing, so
+    the bitmap probe FAVOR eliminates is not counted (the probe's other
+    consumer, W insertion, is a no-op for them: pass ⇒ keep means a
+    pruned candidate never passes).
+
     Returns (pool_d, pool_id, w_d, w_id, visited, n_would).
     """
     qn, m = cand_ids.shape
@@ -931,15 +998,28 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
     pool_d, pool_id = pool
     w_d, w_id = w
 
-    def insert(pd, pi, wd, wi, cd, cids, pch, nw, drop):
+    def score(cids):
+        if excl is not None:
+            return _frontier_scores_excl(queries, store, cids, bitmaps,
+                                         use_pallas, quant, excl,
+                                         sweep_worst, excl_margin)
+        dch, pch = _frontier_scores(queries, store, cids, bitmaps,
+                                    use_pallas, quant)
+        return dch, pch, None
+
+    def insert(pd, pi, wd, wi, cd, cids, pch, keep, nw, drop):
         if sweep_worst is not None:
             would = (cids >= 0) & (cd < sweep_worst[:, None])
-            nw = nw + would.sum(-1).astype(jnp.int32)
+            charged = would & keep if (excl_exact and keep is not None) \
+                else would
+            nw = nw + charged.sum(-1).astype(jnp.int32)
             wd_in = jnp.where(would & pch, cd, INF)
             wi_in = jnp.where(would & pch, cids, -1)
         else:
             wd_in, wi_in = cd, cids
-        pd, pi = _merge_smallest(pd, pi, cd, cids, drop)
+        cd_pool = cd if keep is None else jnp.where(keep, cd, INF)
+        ci_pool = cids if keep is None else jnp.where(keep, cids, -1)
+        pd, pi = _merge_smallest(pd, pi, cd_pool, ci_pool, drop)
         wd, wi = _merge_smallest(wd, wi, wd_in, wi_in)
         return pd, pi, wd, wi, nw
 
@@ -954,11 +1034,10 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
             first = jax.vmap(_dedup_first)(cids)
             cids = jnp.where(first & ~seen, cids, -1)
         valid = cids >= 0
-        dch, pch = _frontier_scores(queries, store, cids, bitmaps,
-                                    use_pallas, quant)
+        dch, pch, keep = score(cids)
         cd = jnp.where(valid, dch, INF)
         pool_d, pool_id, w_d, w_id, nw = insert(
-            pool_d, pool_id, w_d, w_id, cd, cids, pch, nw, drop_head)
+            pool_d, pool_id, w_d, w_id, cd, cids, pch, keep, nw, drop_head)
         visited = _mark_batch(visited, cids, valid)
         return pool_d, pool_id, w_d, w_id, visited, nw
 
@@ -992,10 +1071,10 @@ def _score_insert_chunks(queries, bitmaps, store, cand_ids, sel_mask,
             first = jax.vmap(_dedup_first)(cids)
             cids = jnp.where(first & ~seen, cids, -1)
         valid = cids >= 0
-        dch, pch = _frontier_scores(queries, store, cids, bitmaps,
-                                    use_pallas, quant)
+        dch, pch, keep = score(cids)
         cd = jnp.where(valid, dch, INF)
-        pd, pi, wd, wi, nw = insert(pd, pi, wd, wi, cd, cids, pch, nw, None)
+        pd, pi, wd, wi, nw = insert(pd, pi, wd, wi, cd, cids, pch, keep,
+                                    nw, None)
         vis = _mark_batch(vis, cids, valid)
         return i + 1, pd, pi, wd, wi, vis, nw
 
@@ -1030,7 +1109,7 @@ def _base_state_init(graph: HNSWGraph, store: VectorStore, bitmaps,
 
 def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                     params: SearchParams, ef_result: int, use_pallas: bool,
-                    tracing: bool, deadline, state):
+                    tracing: bool, deadline, excl, state):
     """One superstep of the base (non-iterative) frontier engine.
 
     `state` is the 9-tuple (pool_d, pool_id, w_d, w_id, visited, hs, is_,
@@ -1041,7 +1120,10 @@ def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     (pops suppressed, all-INF merges, masked counters), so applying the
     body past a lane's stop point never changes its state — that is what
     makes mid-flight slot retire/admit sound.  `deadline` is the optional
-    per-lane (Q,) float32 deadline array (see `_budget_over`).
+    per-lane (Q,) float32 deadline array (see `_budget_over`).  `excl` is
+    the optional (Q, n) exclusion-radii block (sweeping only, DESIGN.md
+    §14) — None traces nothing, keeping the jaxpr identical to the
+    pre-exclusion body.
     """
     qn = queries.shape[0]
     strat = params.strategy
@@ -1088,7 +1170,10 @@ def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
             params.frontier_chunk, (pool_d, pool_id), (w_d, w_id),
             visited, use_pallas,
             sweep_worst=w_worst if strat == "sweeping" else None,
-            drop_head=active, quant=quant)
+            drop_head=active, quant=quant,
+            excl=excl if strat == "sweeping" else None,
+            excl_margin=params.exclusion_margin,
+            excl_exact=params.exclusion == "prune_exact")
         if strat == "sweeping":
             fc = fc + n_w
             tm = tm + jnp.where(tm_on, n_w, 0)
@@ -1205,7 +1290,7 @@ def _base_superstep(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
 
 def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
                    params: SearchParams, entry, entry_d, stats: SearchStats,
-                   ef_result: int, use_pallas: bool, trace=None):
+                   ef_result: int, use_pallas: bool, trace=None, excl=None):
     """Superstep-driven port of `_base_search` over the whole query batch.
 
     Per-query control flow (pop order, masks, counter formulas) matches the
@@ -1231,7 +1316,7 @@ def _frontier_base(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     pool_d, pool_id, w_d, w_id, visited = _base_state_init(
         graph, store, bitmaps, params, entry, entry_d, ef_result)
     body = partial(_base_superstep, graph, store, queries, bitmaps, params,
-                   ef_result, use_pallas, tracing, None)
+                   ef_result, use_pallas, tracing, None, excl)
     state = (pool_d, pool_id, w_d, w_id, visited, hs, is_, stats,
              jnp.zeros((qn,), bool))
     pool_d, pool_id, w_d, w_id, visited, hs, is_, stats, _ = \
@@ -1401,7 +1486,7 @@ def _frontier_iterative(graph: HNSWGraph, store: VectorStore, queries,
 
 def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
                            bitmaps, params: SearchParams, use_pallas: bool,
-                           collect_trace: bool = False):
+                           collect_trace: bool = False, excl=None):
     n = graph.n
     quant = params.graph_quant
 
@@ -1421,7 +1506,7 @@ def _frontier_search_batch(graph: HNSWGraph, store: VectorStore, queries,
         w_d, w_id, stats, trace0 = _frontier_base(
             graph, store, queries, bitmaps, params, entry, entry_d, stats,
             ef_result=params.ef_search, use_pallas=use_pallas,
-            trace=zoom_trace)
+            trace=zoom_trace, excl=excl)
         if quant == "sq8" and params.sq8_rerank:
             # exact full-precision rescore of the final beam — vmap of the
             # same per-query helper the legacy engine calls, so the two
@@ -1547,6 +1632,11 @@ def frontier_init(graph: HNSWGraph, store: VectorStore, queries, bitmaps,
     +inf or None entries meaning "none"); it rides in the state as data so
     the stepper compiles once across deadline buckets (DESIGN.md §11).
     """
+    if params.exclusion != "none":
+        raise ValueError("exclusion pruning is not supported by the "
+                         "stepped frontier driver (the excl radii block "
+                         "does not ride in FrontierState); use the "
+                         "one-shot search_batch path")
     qn = queries.shape[0]
     deadline = (jnp.full((qn,), jnp.inf, jnp.float32) if deadlines is None
                 else jnp.asarray(deadlines, jnp.float32))
@@ -1587,7 +1677,7 @@ def step_supersteps(graph: HNSWGraph, store: VectorStore,
     else:
         body = partial(_base_superstep, graph, store, state.queries,
                        state.bitmaps, params, params.ef_search, use_pallas,
-                       tracing, deadline)
+                       tracing, deadline, None)
         tup = (state.pool_d, state.pool_id, state.w_d, state.w_id,
                state.visited, state.hs, state.is_, state.stats, state.done)
 

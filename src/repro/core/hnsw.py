@@ -582,3 +582,115 @@ def build_graph_blocked(store: VectorStore, m: int = 16,
     return HNSWGraph(neighbors=jnp.asarray(nbrs, jnp.int32),
                      node_level=jnp.asarray(levels, jnp.int32),
                      entry_point=jnp.asarray(entry, jnp.int32), m=m)
+
+
+# ---------------------------------------------------------------------------
+# JAG-style attribute-partitioned graphs (DESIGN.md §14).  For a hot
+# predicate *family* — a concrete filter bitmap shared by many queries —
+# the agnostic/filtered trade-off can be skipped entirely: build a
+# dedicated subgraph over exactly the family's passing rows and traverse
+# it UNFILTERED (every row passes by construction, so the per-node filter
+# checks the paper measures vanish).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPartition:
+    """One predicate family's dedicated subgraph.
+
+    rows: (n_f,) int64 ascending global row ids of the family's passing
+    set — the local→global id map (subgraph results are `rows[local]`).
+    store/graph index the *gathered* rows, so local ids are dense and the
+    heap rows are physically the same vectors as the base store's (the
+    storage layer charges the same heap pages; only the adjacency tier is
+    family-private).
+    """
+
+    tag: str
+    bitmap: np.ndarray          # (W,) uint32 packed family bitmap
+    rows: np.ndarray            # (n_f,) int64 global row ids, ascending
+    store: VectorStore          # gathered family rows (+ SQ8 shadow)
+    graph: HNSWGraph            # subgraph over the local rows
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """The registered family subgraphs + the staleness guard.
+
+    built_n: base-store row count at build time.  A store that has grown
+    past it (live ingest, DESIGN.md §12) invalidates every partition —
+    new rows may pass a family's predicate but are absent from its
+    subgraph, so the executor must fall back to the base index until a
+    rebuild re-registers the families.
+    """
+
+    partitions: tuple[GraphPartition, ...]
+    built_n: int
+
+    @property
+    def tags(self) -> tuple[str, ...]:
+        return tuple(p.tag for p in self.partitions)
+
+    def match(self, bitmaps) -> np.ndarray:
+        """(Q,) int32 partition index whose bitmap equals each query's
+        bitmap word-for-word, or -1 (exact match only — a family
+        subgraph can never serve a predicate it was not built for)."""
+        bm = np.asarray(bitmaps)
+        if not self.partitions:
+            return np.full(bm.shape[0], -1, np.int32)
+        # dedupe first: family workloads repeat the same predicate bitmap
+        # across the batch, and each distinct bitmap needs exactly one
+        # comparison against the family catalog
+        uniq, inv = np.unique(bm, axis=0, return_inverse=True)
+        fam = np.stack([p.bitmap for p in self.partitions])
+        eq = (uniq[:, None, :] == fam[None, :, :]).all(-1)
+        hit = eq.any(1)
+        um = np.where(hit, eq.argmax(1), -1).astype(np.int32)
+        return um[inv.reshape(-1)]
+
+
+def build_graph_partitioned(store: VectorStore,
+                            families: dict[str, np.ndarray], m: int = 16,
+                            ef_construction: int = 32, seed: int = 0,
+                            blocked_threshold: int = 20_000
+                            ) -> PartitionedGraph:
+    """Build one subgraph per predicate family (JAG tier, DESIGN.md §14).
+
+    families maps tag -> packed (W,) uint32 bitmap over the store's rows.
+    Each family's passing rows are gathered into a dense sub-store
+    (carrying the SQ8 shadow rows verbatim when present, so quantized
+    traversal works unchanged) and indexed with the same recipe as the
+    base graph — `build_graph` below `blocked_threshold` rows, the
+    cluster-routed `build_graph_blocked` above it (the PR-9 builder that
+    scales past the toy grids).
+    """
+    from repro.core.types import unpack_bitmap
+    n = store.n
+    parts = []
+    for i, tag in enumerate(sorted(families)):
+        bm = np.asarray(families[tag], np.uint32)
+        rows = np.nonzero(unpack_bitmap(bm, n))[0].astype(np.int64)
+        if rows.size < 2:
+            raise ValueError(f"family {tag!r} has {rows.size} passing "
+                             "rows; a subgraph needs at least 2")
+        sub = gather_substore(store, rows)
+        build = (build_graph if rows.size <= blocked_threshold
+                 else build_graph_blocked)
+        g = build(sub, m=m, ef_construction=ef_construction, seed=seed + i)
+        parts.append(GraphPartition(tag=tag, bitmap=bm, rows=rows,
+                                    store=sub, graph=g))
+    return PartitionedGraph(partitions=tuple(parts), built_n=n)
+
+
+def gather_substore(store: VectorStore, rows: np.ndarray) -> VectorStore:
+    """Dense sub-store over `rows` (ascending global ids), carrying the
+    SQ8 shadow rows verbatim when present so quantized traversal works
+    unchanged on the subgraph."""
+    sub = VectorStore.build(np.asarray(store.vectors)[rows],
+                            metric=store.metric)
+    if store.has_sq8:
+        sub = dataclasses.replace(
+            sub, q_vectors=jnp.asarray(np.asarray(store.q_vectors)[rows]),
+            q_scale=store.q_scale, q_mean=store.q_mean,
+            q_norms_sq=jnp.asarray(np.asarray(store.q_norms_sq)[rows]))
+    return sub

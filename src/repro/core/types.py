@@ -311,6 +311,25 @@ class SearchParams:
     # drift on its induced subgraph between exchanges (cheaper collectives,
     # approximate results).  Ignored by single-device executors.
     beam_exchange_interval: int = 1
+    # FAVOR-style exclusion pruning (DESIGN.md §14): "prune" gates pool
+    # insertion in the sweeping frontier engine on precomputed per-node
+    # exclusion radii (core/exclusion.py) — a candidate whose nearest
+    # passing row provably (in root space, up to `exclusion_margin`) cannot
+    # beat the current W tail is dropped before it is ever popped, so its
+    # whole branch costs no filter checks, no expansions, no pages.
+    # "none" traces nothing and is bit-identical to the pre-exclusion
+    # engine (the graph_quant="none" convention).  "prune_exact" is the
+    # same traversal with FAVOR's probe-free accounting: the radius test
+    # replaces the bitmap probe for pruned candidates, so they are not
+    # charged filter checks — sound ONLY with family-exact radii (e = 0
+    # iff the row passes; the caller owns that contract).  l2 + frontier
+    # + sweeping only; requires `excl=` radii at the search_batch call.
+    exclusion: str = "none"
+    # Prune aggressiveness: keep a candidate v iff pass(v) or
+    # sqrt(e(v)) <= margin * (sqrt(d(q,v)) + sqrt(tau)), tau = W tail.
+    # margin >= 1.0 with exact family radii provably never prunes
+    # (triangle inequality); < 1.0 trades recall for pruned branches.
+    exclusion_margin: float = 0.5
 
 
 @dataclasses.dataclass

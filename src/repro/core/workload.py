@@ -151,6 +151,50 @@ def generate_grid(store: VectorStore, queries: jax.Array,
     return grid
 
 
+def generate_families(store: VectorStore, selectivity: float,
+                      num_families: int = 2, seed: int = 0
+                      ) -> dict[str, np.ndarray]:
+    """Hot predicate *families* for the selectivity-aware tiers
+    (DESIGN.md §14): spatially clustered passing sets shared by many
+    queries — the regime FAVOR exclusion radii and JAG partitioned
+    graphs are built for (a per-query-distinct bitmap can never be a
+    registered family; an uncorrelated one carries no exclusion signal).
+
+    Family f's passing set is the ceil(selectivity·n) nearest rows to a
+    randomly drawn center row — the "category = c" predicate of a
+    dataset whose attribute correlates with vector position.  Returns
+    tag -> packed (W,) uint32 bitmap (np.ndarray, hashable-free build
+    input for `build_exclusion`/`build_graph_partitioned`).
+    """
+    if not (0.0 < selectivity <= 1.0):
+        raise ValueError("selectivity must be in (0, 1]")
+    n = store.n
+    n_sel = max(2, int(np.ceil(selectivity * n)))
+    rng = np.random.RandomState(seed)
+    centers = rng.choice(n, size=num_families, replace=False)
+    cvecs = jnp.asarray(np.asarray(store.vectors)[centers])
+    d = np.asarray(full_distances(store, cvecs))          # (F, N)
+    out = {}
+    for f, c in enumerate(centers):
+        rows = np.argsort(d[f])[:n_sel]
+        out[f"fam{f}_s{selectivity:g}"] = np.asarray(
+            pack_bool_bitmap(np.isin(np.arange(n), rows)), np.uint32)
+    return out
+
+
+def assign_family_bitmaps(families: dict[str, np.ndarray], num_queries: int,
+                          seed: int = 0) -> tuple[jax.Array, np.ndarray]:
+    """Round-robin-free random assignment of queries to families: each
+    query carries its family's shared bitmap verbatim (exact-match
+    contract of the family tiers).  Returns ((Q, W) uint32 bitmaps,
+    (Q,) int32 family index into sorted(families))."""
+    tags = sorted(families)
+    rng = np.random.RandomState(seed)
+    assign = rng.randint(0, len(tags), size=num_queries).astype(np.int32)
+    fam = np.stack([np.asarray(families[t], np.uint32) for t in tags])
+    return jnp.asarray(fam[assign]), assign
+
+
 def empirical_correlation(store: VectorStore, query: jax.Array,
                           passing_rows: np.ndarray, k: int = 100) -> float:
     """Fraction of the query's k unfiltered NNs that pass the filter —

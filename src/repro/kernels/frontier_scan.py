@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import excl_keep_mask
+
 
 def _frontier_scan_kernel(q_ref, vec_ref, norm_ref, id_ref, bitmap_ref,
                           dist_ref, pass_ref, *, metric: str):
@@ -182,3 +184,166 @@ def frontier_scan_sq8_pallas(queries: jax.Array, qvecs: jax.Array,
         interpret=interpret,
     )(q, v, s, m, nrm, idp, bitmaps)
     return dist[:, :c], ok[:, :c].astype(bool)
+
+
+def _frontier_scan_excl_kernel(q_ref, vec_ref, norm_ref, id_ref, bitmap_ref,
+                               excl_ref, tau_ref, dist_ref, pass_ref,
+                               keep_ref, *, metric: str, margin: float):
+    q = q_ref[...][0]                                # (d,) f32
+    x = vec_ref[...][0]                              # (C, d) f32
+    xn = norm_ref[...][0]                            # (C,) f32
+    rid = id_ref[...][0]                             # (C,) int32
+    ip = jnp.dot(x, q, preferred_element_type=jnp.float32)     # (C,)
+    if metric == "ip":
+        d = -ip
+    else:
+        qn = jnp.sum(q * q)
+        d = qn + xn - 2.0 * ip
+    safe = jnp.maximum(rid, 0)
+    words = bitmap_ref[...][0]                       # (W,) uint32
+    w = jnp.take(words, safe >> 5, axis=0)
+    bit = (w >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    ok = (bit == 1) & (rid >= 0)
+    dfin = jnp.where(rid >= 0, d, jnp.inf)
+    e = excl_ref[...][0]                             # (C,) f32 radii
+    tau = tau_ref[0, 0]                              # scalar W tail
+    keep = excl_keep_mask(dfin, e, tau, ok, margin)
+    dist_ref[...] = dfin[None, :]
+    pass_ref[...] = ok.astype(jnp.int8)[None, :]
+    keep_ref[...] = keep.astype(jnp.int8)[None, :]
+
+
+def frontier_scan_excl_pallas(queries: jax.Array, vecs: jax.Array,
+                              norms: jax.Array, ids: jax.Array,
+                              bitmaps: jax.Array, excl: jax.Array,
+                              tau: jax.Array, metric: str = "l2",
+                              margin: float = 0.5, interpret: bool = False
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`frontier_scan_pallas` + the fused FAVOR keep mask (DESIGN.md §14).
+
+    Extra inputs: excl (Q, C) f32 squared exclusion radii of the chunk
+    rows (gathered alongside the vectors — zero extra HBM round trips)
+    and tau (Q, 1) f32 per-query W tail.  Third output: keep (Q, C) bool,
+    computed by the SAME `excl_keep_mask` ops as the jnp oracle so the
+    mask is bit-identical across paths.  dists/pass semantics unchanged.
+    """
+    nq, c, d = vecs.shape
+    w = bitmaps.shape[1]
+    pd = (-d) % 128
+    pc = (-c) % 128          # C is the lane axis of the (1, C) outputs
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pd)))
+    v = jnp.pad(vecs.astype(jnp.float32), ((0, 0), (0, pc), (0, pd)))
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pc)))
+    idp = jnp.pad(ids, ((0, 0), (0, pc)), constant_values=-1)
+    ex = jnp.pad(excl.astype(jnp.float32), ((0, 0), (0, pc)))
+    cp, dp = c + pc, d + pd
+    dist, ok, keep = pl.pallas_call(
+        functools.partial(_frontier_scan_excl_kernel, metric=metric,
+                          margin=margin),
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),          # query
+            pl.BlockSpec((1, cp, dp), lambda i: (i, 0, 0)),   # chunk vecs
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # row norms
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # row ids
+            pl.BlockSpec((1, w), lambda i: (i, 0)),           # bitmap
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # excl radii
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),           # W tail
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, cp), jnp.float32),
+            jax.ShapeDtypeStruct((nq, cp), jnp.int8),
+            jax.ShapeDtypeStruct((nq, cp), jnp.int8),
+        ],
+        interpret=interpret,
+    )(q, v, nrm, idp, bitmaps, ex, tau.astype(jnp.float32))
+    return dist[:, :c], ok[:, :c].astype(bool), keep[:, :c].astype(bool)
+
+
+def _frontier_scan_excl_sq8_kernel(q_ref, vec_ref, scale_ref, mean_ref,
+                                   norm_ref, id_ref, bitmap_ref, excl_ref,
+                                   tau_ref, dist_ref, pass_ref, keep_ref, *,
+                                   metric: str, margin: float):
+    q = q_ref[...][0]                                # (d,) f32
+    t = vec_ref[...][0]                              # (C, d) int8
+    scale = scale_ref[...]                           # (1, d) f32
+    mean = mean_ref[...]                             # (1, d) f32
+    xn = norm_ref[...][0]                            # (C,) f32 ||x̂||²
+    rid = id_ref[...][0]                             # (C,) int32
+    x = t.astype(jnp.float32) * scale + mean         # in-kernel dequant
+    ip = jnp.dot(x, q, preferred_element_type=jnp.float32)     # (C,)
+    if metric == "ip":
+        d = -ip
+    else:
+        qn = jnp.sum(q * q)
+        d = qn + xn - 2.0 * ip
+    safe = jnp.maximum(rid, 0)
+    words = bitmap_ref[...][0]                       # (W,) uint32
+    w = jnp.take(words, safe >> 5, axis=0)
+    bit = (w >> (safe & 31).astype(jnp.uint32)) & jnp.uint32(1)
+    ok = (bit == 1) & (rid >= 0)
+    dfin = jnp.where(rid >= 0, d, jnp.inf)
+    e = excl_ref[...][0]                             # (C,) f32 radii
+    tau = tau_ref[0, 0]                              # scalar W tail
+    keep = excl_keep_mask(dfin, e, tau, ok, margin)
+    dist_ref[...] = dfin[None, :]
+    pass_ref[...] = ok.astype(jnp.int8)[None, :]
+    keep_ref[...] = keep.astype(jnp.int8)[None, :]
+
+
+def frontier_scan_excl_sq8_pallas(queries: jax.Array, qvecs: jax.Array,
+                                  scale: jax.Array, mean: jax.Array,
+                                  norms: jax.Array, ids: jax.Array,
+                                  bitmaps: jax.Array, excl: jax.Array,
+                                  tau: jax.Array, metric: str = "l2",
+                                  margin: float = 0.5,
+                                  interpret: bool = False
+                                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`frontier_scan_sq8_pallas` + the fused FAVOR keep mask: int8 chunk
+    rows dequantized in-kernel, keep rule applied to the quantized
+    distances (the distances pool insertion uses)."""
+    nq, c, d = qvecs.shape
+    w = bitmaps.shape[1]
+    pd = (-d) % 128
+    pc = (-c) % 128          # C is the lane axis of the (1, C) outputs
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pd)))
+    v = jnp.pad(qvecs, ((0, 0), (0, pc), (0, pd)))
+    s = jnp.pad(scale.astype(jnp.float32), (0, pd))[None, :]
+    m = jnp.pad(mean.astype(jnp.float32), (0, pd))[None, :]
+    nrm = jnp.pad(norms.astype(jnp.float32), ((0, 0), (0, pc)))
+    idp = jnp.pad(ids, ((0, 0), (0, pc)), constant_values=-1)
+    ex = jnp.pad(excl.astype(jnp.float32), ((0, 0), (0, pc)))
+    cp, dp = c + pc, d + pd
+    dist, ok, keep = pl.pallas_call(
+        functools.partial(_frontier_scan_excl_sq8_kernel, metric=metric,
+                          margin=margin),
+        grid=(nq,),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),          # query
+            pl.BlockSpec((1, cp, dp), lambda i: (i, 0, 0)),   # int8 chunk
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # scale
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),          # mean
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # dequant norms
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # row ids
+            pl.BlockSpec((1, w), lambda i: (i, 0)),           # bitmap
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),          # excl radii
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),           # W tail
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, cp), jnp.float32),
+            jax.ShapeDtypeStruct((nq, cp), jnp.int8),
+            jax.ShapeDtypeStruct((nq, cp), jnp.int8),
+        ],
+        interpret=interpret,
+    )(q, v, s, m, nrm, idp, bitmaps, ex, tau.astype(jnp.float32))
+    return dist[:, :c], ok[:, :c].astype(bool), keep[:, :c].astype(bool)

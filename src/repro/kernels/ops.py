@@ -19,7 +19,9 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.distance import distance_matrix_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.frontier_scan import (frontier_scan_pallas,
+from repro.kernels.frontier_scan import (frontier_scan_excl_pallas,
+                                         frontier_scan_excl_sq8_pallas,
+                                         frontier_scan_pallas,
                                          frontier_scan_sq8_pallas)
 from repro.kernels.leaf_scan import leaf_scan_batched_pallas, leaf_scan_pallas
 from repro.kernels.topk import topk_pallas
@@ -97,6 +99,43 @@ def frontier_scan_sq8(queries, qvecs, scale, mean, norms, ids, bitmaps,
                                         interpret=_interpret())
     return ref.frontier_scan_sq8_ref(queries, qvecs, scale, mean, norms,
                                      ids, bitmaps, metric)
+
+
+@partial(jax.jit, static_argnames=("metric", "margin", "use_pallas"))
+def frontier_scan_excl(queries, vecs, norms, ids, bitmaps, excl, tau,
+                       metric: str = "l2", margin: float = 0.5,
+                       use_pallas: bool = False):
+    """Frontier-chunk scoring + filter probe + fused FAVOR keep mask
+    (DESIGN.md §14).  excl (Q, C) squared exclusion radii of the chunk
+    rows, tau (Q, 1) current W tail.  Returns (dists, pass, keep).
+
+    dists/pass follow `frontier_scan`'s contract exactly (oracle default,
+    bit-identical to the legacy engine); keep is computed by the shared
+    `excl_keep_mask` ops on both paths so the mask is bit-identical
+    kernel-vs-oracle."""
+    if use_pallas and metric != "cos":
+        return frontier_scan_excl_pallas(queries, vecs, norms, ids, bitmaps,
+                                         excl, tau, metric, margin,
+                                         interpret=_interpret())
+    return ref.frontier_scan_excl_ref(queries, vecs, norms, ids, bitmaps,
+                                      excl, tau, metric, margin)
+
+
+@partial(jax.jit, static_argnames=("metric", "margin", "use_pallas"))
+def frontier_scan_excl_sq8(queries, qvecs, scale, mean, norms, ids, bitmaps,
+                           excl, tau, metric: str = "l2",
+                           margin: float = 0.5, use_pallas: bool = False):
+    """SQ8 variant of `frontier_scan_excl`: int8 chunk dequantized
+    in-kernel, keep rule applied to the quantized distances.
+    Returns (dists, pass, keep)."""
+    if use_pallas and metric != "cos":
+        return frontier_scan_excl_sq8_pallas(queries, qvecs, scale, mean,
+                                             norms, ids, bitmaps, excl, tau,
+                                             metric, margin,
+                                             interpret=_interpret())
+    return ref.frontier_scan_excl_sq8_ref(queries, qvecs, scale, mean, norms,
+                                          ids, bitmaps, excl, tau, metric,
+                                          margin)
 
 
 @partial(jax.jit, static_argnames=("k", "use_pallas"))

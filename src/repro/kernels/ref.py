@@ -138,6 +138,63 @@ def frontier_scan_sq8_ref(queries: jax.Array, qvecs: jax.Array,
     return frontier_scan_ref(queries, x, norms, ids, bitmaps, metric)
 
 
+def excl_keep_mask(dists: jax.Array, excl: jax.Array, tau: jax.Array,
+                   ok: jax.Array, margin: float) -> jax.Array:
+    """Fused FAVOR keep rule (DESIGN.md §14), shared VERBATIM by the
+    Pallas excl kernels and the jnp oracles so the pruning mask is
+    bit-identical on both paths.
+
+    All distances are squared l2; the triangle inequality only holds in
+    root space, so the rule compares square roots: keep candidate v iff
+    it passes the filter, or its exclusion radius e(v) (distance to its
+    nearest passing row) satisfies
+        sqrt(e) <= margin * (sqrt(d(q, v)) + sqrt(tau)),
+    tau being the current W tail (the distance a row must beat to enter
+    the result queue).  tau = +inf (W not yet full) keeps everything —
+    the pre-fill navigation phase is never pruned.  With exact family
+    radii and margin >= 1 the rule provably never fires (the passing row
+    that produced tau witnesses the triangle bound); margin < 1 is the
+    productive, recall-gated regime.
+    """
+    dr = jnp.sqrt(jnp.maximum(dists, 0.0))
+    er = jnp.sqrt(jnp.maximum(excl, 0.0))
+    tr = jnp.sqrt(jnp.maximum(tau, 0.0))
+    return ok | (er <= jnp.float32(margin) * (dr + tr))
+
+
+def frontier_scan_excl_ref(queries: jax.Array, vecs: jax.Array,
+                           norms: jax.Array, ids: jax.Array,
+                           bitmaps: jax.Array, excl: jax.Array,
+                           tau: jax.Array, metric: str = "l2",
+                           margin: float = 0.5
+                           ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`frontier_scan_ref` + the fused exclusion keep mask.
+
+    excl (Q, C) f32 — squared exclusion radii of the chunk rows
+    tau  (Q, 1) f32 — per-query W tail (squared; +inf until W fills)
+    returns (dists, pass, keep (Q, C) bool).  dists/pass are bit-identical
+    to `frontier_scan_ref` — the mask is a third output, not a rescore.
+    """
+    d, ok = frontier_scan_ref(queries, vecs, norms, ids, bitmaps, metric)
+    return d, ok, excl_keep_mask(d, excl, tau, ok, margin)
+
+
+def frontier_scan_excl_sq8_ref(queries: jax.Array, qvecs: jax.Array,
+                               scale: jax.Array, mean: jax.Array,
+                               norms: jax.Array, ids: jax.Array,
+                               bitmaps: jax.Array, excl: jax.Array,
+                               tau: jax.Array, metric: str = "l2",
+                               margin: float = 0.5
+                               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`frontier_scan_sq8_ref` + the fused exclusion keep mask (the mask
+    compares the QUANTIZED distances against the full-precision radii —
+    the same distances the pool insertion uses, so prune decisions and
+    scores always agree)."""
+    d, ok = frontier_scan_sq8_ref(queries, qvecs, scale, mean, norms, ids,
+                                  bitmaps, metric)
+    return d, ok, excl_keep_mask(d, excl, tau, ok, margin)
+
+
 def topk_partial_ref(values: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """Global k smallest (values, indices) over a 1-D array.
 

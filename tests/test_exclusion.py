@@ -1,0 +1,466 @@
+"""Selectivity-aware pruned traversal (DESIGN.md §14).
+
+Four layers of guarantees:
+
+  * the exclusion-radius build pass is correct (ladder rungs are K-th-NN
+    radii, family radii are exact nearest-passing-row distances, zero on
+    passing rows) and the fused keep mask is bit-identical Pallas
+    (interpret) vs jnp oracle, f32 and sq8;
+  * safety: `exclusion="none"` is bit-identical to the pre-exclusion
+    engine on both drivers × both quant tiers; family-exact radii with
+    margin >= 1 are provably inert; "prune_exact" only re-prices fc
+    (identical ids/dists, never more fc than "prune"); pruned recall
+    stays within slack of unpruned across the grid;
+  * the partitioned (JAG) tier answers family batches exactly, falls
+    back per-query for unmatched bitmaps, refuses stale partitions, and
+    charges only the deduped plan-time match as filter work;
+  * the planner prices both new tiers, keeps batch-infeasible
+    partitioned executors off the dispatch path, and its CHARGED
+    planning overhead is identical from the old 6-candidate menu to the
+    new one (the memoized proxy satellite).
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (GraphExecutor, PartitionedGraphExecutor,
+                        SearchParams, WorkloadSpec, assign_family_bitmaps,
+                        build_exclusion, build_graph_partitioned,
+                        filtered_knn, generate_bitmaps, generate_families,
+                        ladder_rung, make_executor, match_families,
+                        quantize_store, recall_at_k, search_batch,
+                        select_radii, unpack_bitmap)
+from repro.kernels import ops as kops
+
+PARAMS = SearchParams(k=10, ef_search=96, beam_width=512, max_hops=2048,
+                      strategy="sweeping")
+SEL = 0.05
+
+
+@pytest.fixture(scope="module")
+def families(small_dataset):
+    store, _ = small_dataset
+    return generate_families(store, SEL, num_families=3, seed=3)
+
+
+@pytest.fixture(scope="module")
+def family_batch(small_dataset, families):
+    _, queries = small_dataset
+    bm, assign = assign_family_bitmaps(families, int(queries.shape[0]),
+                                       seed=4)
+    return jnp.asarray(bm), assign
+
+
+@pytest.fixture(scope="module")
+def exclusion(small_dataset, families):
+    store, _ = small_dataset
+    return build_exclusion(store, families=families)
+
+
+@pytest.fixture(scope="module")
+def partitions(small_dataset, families):
+    store, _ = small_dataset
+    return build_graph_partitioned(store, families, m=8,
+                                   ef_construction=32, seed=5)
+
+
+def _recall(ids, tid, k=10):
+    return float(np.mean(np.asarray(recall_at_k(ids, tid, k))))
+
+
+# ---------------- build pass correctness ----------------
+
+def test_ladder_radii_are_kth_nn(small_dataset, exclusion):
+    store, _ = small_dataset
+    v = np.asarray(store.vectors)
+    d = ((v[:3, None, :] - v[None, :, :]) ** 2).sum(-1)
+    d[np.arange(3), np.arange(3)] = np.inf
+    srt = np.sort(d, axis=1)
+    ladder = np.asarray(exclusion.ladder)
+    for r, k in enumerate(exclusion.ladder_ks):
+        np.testing.assert_allclose(ladder[r, :3], srt[:, k - 1],
+                                   rtol=2e-4, atol=1e-3)
+    # nondecreasing in K at every node
+    assert (np.diff(ladder, axis=0) >= -1e-4).all()
+
+
+def test_family_radii_exact(small_dataset, families, exclusion):
+    store, _ = small_dataset
+    v = np.asarray(store.vectors)
+    fam = np.asarray(exclusion.family_radii)
+    for f, tag in enumerate(exclusion.family_tags):
+        passing = unpack_bitmap(np.asarray(families[tag]), store.n)
+        rows = np.flatnonzero(passing)
+        # zero exactly on passing rows
+        assert (fam[f, rows] == 0.0).all()
+        probe = np.flatnonzero(~passing)[:3]
+        d = ((v[probe, None, :] - v[None, rows, :]) ** 2).sum(-1).min(1)
+        np.testing.assert_allclose(fam[f, probe], d, rtol=2e-4, atol=1e-3)
+        assert (fam[f, probe] > 0.0).all()
+
+
+def test_ladder_rung_tracks_inverse_selectivity(exclusion):
+    ks = exclusion.ladder_ks
+    assert ks[ladder_rung(exclusion, 1.0)] == ks[0]
+    assert ks[ladder_rung(exclusion, 1e-9)] == ks[-1]
+    assert ks[ladder_rung(exclusion, 1 / 16)] == 16
+
+
+def test_match_and_select_radii(small_dataset, families, exclusion,
+                                family_batch):
+    store, _ = small_dataset
+    bm, assign = family_batch
+    fam = match_families(exclusion, bm)
+    assert (fam >= 0).all()
+    # assign indexes generate_families' insertion order; match indexes the
+    # sorted-tag order — compare through the tags
+    tags = sorted(families)
+    assert [exclusion.family_tags[f] for f in fam] == \
+        [list(families)[a] for a in assign]
+    radii = np.asarray(select_radii(exclusion, bm))
+    np.testing.assert_array_equal(
+        radii, np.asarray(exclusion.family_radii)[fam])
+    # an unregistered bitmap falls back to the ladder rung
+    other = jnp.zeros_like(bm[:1])
+    assert match_families(exclusion, other)[0] == -1
+    lr = np.asarray(select_radii(exclusion, other, selectivity=SEL))
+    rung = ladder_rung(exclusion, SEL)
+    np.testing.assert_array_equal(lr[0], np.asarray(exclusion.ladder)[rung])
+    assert tags == list(exclusion.family_tags)
+
+
+def test_build_exclusion_validation(small_dataset):
+    store, _ = small_dataset
+    from repro.core.types import VectorStore
+    ip_store = VectorStore.build(np.asarray(store.vectors)[:64],
+                                 metric="ip")
+    with pytest.raises(ValueError, match="l2"):
+        build_exclusion(ip_store)
+    with pytest.raises(ValueError, match="ladder_ks"):
+        build_exclusion(store, ladder_ks=())
+
+
+# ---------------- fused keep mask: kernel vs oracle ----------------
+
+@pytest.mark.parametrize("quant", ["none", "sq8"])
+def test_keep_mask_kernel_oracle_identical(small_dataset, family_batch,
+                                           exclusion, quant):
+    store, queries = small_dataset
+    if quant == "sq8":
+        store = quantize_store(store)
+    bm, _ = family_batch
+    q = int(queries.shape[0])
+    rng = np.random.default_rng(0)
+    cids = jnp.asarray(rng.integers(0, store.n, (q, 64), np.int32))
+    excl = jnp.take_along_axis(select_radii(exclusion, bm), cids, axis=1)
+    tau = jnp.full((q, 1), 2.0, jnp.float32)
+    if quant == "sq8":
+        args = (queries, store.q_vectors[cids], store.q_scale,
+                store.q_mean, store.q_norms_sq[cids], cids, bm, excl, tau)
+        fn = kops.frontier_scan_excl_sq8
+    else:
+        args = (queries, store.vectors[cids], store.norms_sq[cids], cids,
+                bm, excl, tau)
+        fn = kops.frontier_scan_excl
+    d_ref, p_ref, k_ref = fn(*args, margin=0.3, use_pallas=False)
+    d_pl, p_pl, k_pl = fn(*args, margin=0.3, use_pallas=True)
+    # the MASKS are bit-identical (shared excl_keep_mask rule on both
+    # paths); distances carry the usual kernel-vs-oracle float wobble
+    np.testing.assert_array_equal(np.asarray(k_ref), np.asarray(k_pl))
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pl))
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pl),
+                               atol=2e-4, rtol=2e-4)
+    # the mask keeps every passing candidate regardless of margin
+    assert np.asarray(k_ref)[np.asarray(p_ref)].all()
+
+
+# ---------------- inertness guarantees ----------------
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("quant", ["none", "sq8"])
+def test_exclusion_none_bit_identical(small_dataset, small_graph,
+                                      family_batch, quant, use_pallas):
+    """params.exclusion='none' (the default) must leave the engine's
+    program untouched: same ids, dists, and all counters as a call that
+    never heard of the exclusion tier."""
+    store, queries = small_dataset
+    if quant == "sq8":
+        store = quantize_store(store)
+    bm, _ = family_batch
+    p = dataclasses.replace(PARAMS, graph_quant=quant)
+    base = search_batch(small_graph, store, queries, bm, p,
+                        use_pallas=use_pallas)
+    again = search_batch(small_graph, store, queries, bm,
+                         dataclasses.replace(p, exclusion="none"),
+                         use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(again[1]))
+    np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(again[0]))
+    for f in dataclasses.fields(base[2]):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(base[2], f.name)),
+            np.asarray(getattr(again[2], f.name)), err_msg=f.name)
+
+
+def test_family_exact_margin_ge1_inert(small_dataset, small_graph,
+                                       family_batch, exclusion):
+    """With exact family radii the nearest passing row itself witnesses
+    sqrt(e) <= sqrt(d)+sqrt(tau), so margin >= 1 never prunes: identical
+    ids/dists AND identical counters (prune_exact re-prices nothing when
+    keep is all-true)."""
+    store, queries = small_dataset
+    bm, _ = family_batch
+    base = search_batch(small_graph, store, queries, bm, PARAMS)
+    excl = select_radii(exclusion, bm)
+    for margin in (1.0, 1.5):
+        p = dataclasses.replace(PARAMS, exclusion="prune_exact",
+                                exclusion_margin=margin)
+        out = search_batch(small_graph, store, queries, bm, p, excl=excl)
+        np.testing.assert_array_equal(np.asarray(base[1]),
+                                      np.asarray(out[1]))
+        np.testing.assert_array_equal(np.asarray(base[0]),
+                                      np.asarray(out[0]))
+        for f in dataclasses.fields(base[2]):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(base[2], f.name)),
+                np.asarray(getattr(out[2], f.name)),
+                err_msg=(margin, f.name))
+
+
+def test_prune_exact_reprices_fc_only(small_dataset, small_graph,
+                                      family_batch, exclusion):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    excl = select_radii(exclusion, bm)
+    pr = search_batch(small_graph, store, queries, bm,
+                      dataclasses.replace(PARAMS, exclusion="prune",
+                                          exclusion_margin=0.3), excl=excl)
+    px = search_batch(small_graph, store, queries, bm,
+                      dataclasses.replace(PARAMS, exclusion="prune_exact",
+                                          exclusion_margin=0.3), excl=excl)
+    np.testing.assert_array_equal(np.asarray(pr[1]), np.asarray(px[1]))
+    np.testing.assert_array_equal(np.asarray(pr[0]), np.asarray(px[0]))
+    fc_pr = np.asarray(pr[2].filter_checks)
+    fc_px = np.asarray(px[2].filter_checks)
+    assert (fc_px <= fc_pr).all()
+    assert fc_px.sum() < fc_pr.sum()     # exact radii: discount is real
+    # traversal counters unchanged — only the fc pricing differs
+    for name in ("distance_comps", "hops", "page_accesses_heap"):
+        np.testing.assert_array_equal(np.asarray(getattr(pr[2], name)),
+                                      np.asarray(getattr(px[2], name)))
+
+
+def test_pruning_actually_prunes_and_stays_recall_safe(
+        small_dataset, small_graph, family_batch, exclusion):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    _, tid = filtered_knn(store, queries, bm, PARAMS.k)
+    base = search_batch(small_graph, store, queries, bm, PARAMS)
+    excl = select_radii(exclusion, bm)
+    p = dataclasses.replace(PARAMS, exclusion="prune_exact",
+                            exclusion_margin=0.3)
+    out = search_batch(small_graph, store, queries, bm, p, excl=excl)
+    assert np.asarray(out[2].filter_checks).sum() < \
+        np.asarray(base[2].filter_checks).sum()
+    assert _recall(out[1], tid) >= _recall(base[1], tid) - 0.05
+
+
+@pytest.mark.parametrize("corr", ["none", "high_pos"])
+@pytest.mark.parametrize("sel", [0.05, 0.2])
+def test_ladder_pruning_recall_grid(small_dataset, small_graph, exclusion,
+                                    sel, corr):
+    """Uncorrelated/correlated per-query bitmaps use the ladder rung —
+    pruning must stay within slack of the unpruned engine everywhere."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(sel, corr), seed=9)
+    _, tid = filtered_knn(store, queries, bm, PARAMS.k)
+    base = search_batch(small_graph, store, queries, bm, PARAMS)
+    excl = select_radii(exclusion, bm, selectivity=sel)
+    out = search_batch(small_graph, store, queries, bm,
+                       dataclasses.replace(PARAMS, exclusion="prune",
+                                           exclusion_margin=0.3),
+                       excl=excl)
+    assert _recall(out[1], tid) >= _recall(base[1], tid) - 0.05
+
+
+# ---------------- executor integration ----------------
+
+def test_graph_executor_exclusion_plan_and_search(small_dataset,
+                                                  small_graph, family_batch,
+                                                  exclusion):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    ex = GraphExecutor(small_graph, store, strategy="sweeping",
+                       exclusion=exclusion)
+    assert ex.name == "sweeping_excl"
+    plan = ex.plan(queries, bm, PARAMS)
+    assert plan.params.exclusion == "prune_exact"     # all queries match
+    _, tid = filtered_knn(store, queries, bm, PARAMS.k)
+    res = ex.search(queries, bm, dataclasses.replace(
+        PARAMS, exclusion_margin=0.3))
+    base = GraphExecutor(small_graph, store,
+                         strategy="sweeping").search(queries, bm, PARAMS)
+    assert np.asarray(res.stats.filter_checks).sum() < \
+        np.asarray(base.stats.filter_checks).sum()
+    assert _recall(res.ids, tid) >= _recall(base.ids, tid) - 0.05
+    # mixed batch (one unregistered bitmap) downgrades to ladder "prune"
+    mixed = jnp.concatenate([bm[:-1], jnp.zeros_like(bm[:1])])
+    assert ex.plan(queries, mixed, PARAMS).params.exclusion == "prune"
+
+
+def test_graph_executor_exclusion_validation(small_dataset, small_graph,
+                                             exclusion):
+    store, _ = small_dataset
+    with pytest.raises(ValueError, match="sweeping"):
+        GraphExecutor(small_graph, store, strategy="unfiltered",
+                      exclusion=exclusion)
+    short = dataclasses.replace(
+        exclusion, ladder=exclusion.ladder[:, :100],
+        family_radii=exclusion.family_radii[:, :100])
+    with pytest.raises(ValueError, match="n"):
+        GraphExecutor(small_graph, store, strategy="sweeping",
+                      exclusion=short)
+    ex = GraphExecutor(small_graph, store, strategy="sweeping",
+                      exclusion=exclusion)
+    with pytest.raises(ValueError, match="stepped"):
+        ex.idle_frontier(PARAMS, 4)
+
+
+def test_search_batch_exclusion_validation(small_dataset, small_graph,
+                                           family_batch, exclusion):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    excl = select_radii(exclusion, bm)
+    with pytest.raises(ValueError, match="margin"):
+        search_batch(small_graph, store, queries, bm,
+                     dataclasses.replace(PARAMS, exclusion="prune",
+                                         exclusion_margin=0.0), excl=excl)
+    with pytest.raises(ValueError, match="radii"):
+        search_batch(small_graph, store, queries, bm,
+                     dataclasses.replace(PARAMS, exclusion="prune"))
+    with pytest.raises(ValueError, match="none"):
+        search_batch(small_graph, store, queries, bm, PARAMS, excl=excl)
+    with pytest.raises(ValueError, match="sweeping"):
+        search_batch(small_graph, store, queries, bm,
+                     dataclasses.replace(PARAMS, strategy="unfiltered",
+                                         exclusion="prune"), excl=excl)
+
+
+# ---------------- partitioned (JAG) tier ----------------
+
+def test_partitioned_answers_family_batch_exactly(small_dataset,
+                                                  family_batch, partitions,
+                                                  families):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    ex = PartitionedGraphExecutor(partitions, store)
+    _, tid = filtered_knn(store, queries, bm, PARAMS.k)
+    res = ex.search(queries, bm, PARAMS)
+    assert _recall(res.ids, tid) >= 0.97
+    # every returned row actually passes its query's family predicate
+    ids = np.asarray(res.ids)
+    full = np.stack([unpack_bitmap(np.asarray(b), store.n)[None]
+                     for b in np.asarray(bm)]).squeeze(1)
+    for qi in range(ids.shape[0]):
+        got = ids[qi][ids[qi] >= 0]
+        assert full[qi][got].all()
+    # the only filter work is the deduped plan-time catalog match
+    uniq = np.unique(np.asarray(bm), axis=0).shape[0]
+    expect = uniq * len(partitions.partitions) * bm.shape[1]
+    assert int(np.asarray(res.stats.filter_checks).sum()) == expect
+
+
+def test_partitioned_fallback_and_staleness(small_dataset, small_graph,
+                                            family_batch, partitions):
+    store, queries = small_dataset
+    bm, _ = family_batch
+    mixed = jnp.concatenate([bm[:-1], jnp.zeros_like(bm[:1])])
+    with pytest.raises(ValueError, match="fallback"):
+        PartitionedGraphExecutor(partitions, store).search(queries, mixed,
+                                                           PARAMS)
+    base = GraphExecutor(small_graph, store, strategy="sweeping")
+    ex = PartitionedGraphExecutor(partitions, store, base=base)
+    _, tid = filtered_knn(store, queries, mixed, PARAMS.k)
+    res = ex.search(queries, mixed, PARAMS)
+    assert _recall(res.ids[:-1], tid[:-1]) >= 0.97
+    # stale partitions (store grew since build) must never serve
+    stale = dataclasses.replace(partitions, built_n=store.n + 1)
+    sres = PartitionedGraphExecutor(stale, store, base=base).search(
+        queries, bm, PARAMS)
+    # everything fell back: counters match the base executor's run
+    bres = base.search(queries, bm, PARAMS)
+    np.testing.assert_array_equal(np.asarray(sres.ids),
+                                  np.asarray(bres.ids))
+
+
+def test_partitioned_validation(small_dataset, partitions):
+    store, _ = small_dataset
+    import repro.core.hnsw as hnsw
+    with pytest.raises(ValueError, match="no partitions"):
+        PartitionedGraphExecutor(
+            hnsw.PartitionedGraph(partitions=(), built_n=store.n), store)
+    with pytest.raises(ValueError, match="quantize_store"):
+        PartitionedGraphExecutor(partitions, store, graph_quant="sq8")
+
+
+# ---------------- planner integration ----------------
+
+OLD_MENU = ("bruteforce", "sweeping", "navix", "iterative_scan")
+NEW_MENU = OLD_MENU + ("sweeping_excl", "partitioned")
+
+
+def _planner(small_dataset, small_graph, menu, exclusion=None,
+             partitions=None):
+    store, _ = small_dataset
+    return make_executor("adaptive", store, graph=small_graph,
+                         exclusion=exclusion, partitions=partitions,
+                         planner_candidates=menu)
+
+
+def test_planner_menu_has_new_tiers(small_dataset, small_graph, exclusion,
+                                    partitions):
+    pl = _planner(small_dataset, small_graph, NEW_MENU, exclusion,
+                  partitions)
+    assert set(NEW_MENU) <= set(pl.candidates)
+    assert isinstance(pl.candidates["partitioned"],
+                      PartitionedGraphExecutor)
+    assert pl.candidates["sweeping_excl"].exclusion is not None
+
+
+def test_planner_dispatches_partitioned_on_family_batch(
+        small_dataset, small_graph, family_batch, exclusion, partitions):
+    _, queries = small_dataset
+    bm, _ = family_batch
+    pl = _planner(small_dataset, small_graph, NEW_MENU, exclusion,
+                  partitions)
+    assert pl.plan(queries, bm, PARAMS).strategy == "partitioned"
+    # one unmatched bitmap makes partitioned batch-infeasible
+    mixed = jnp.concatenate([bm[:-1], jnp.zeros_like(bm[:1])])
+    assert pl.plan(queries, mixed, PARAMS).strategy != "partitioned"
+
+
+def test_planner_charged_overhead_flat_across_menus(
+        small_dataset, small_graph, family_batch, exclusion, partitions):
+    """The satellite claim: growing the menu 4 -> 6 candidates must not
+    change the planner's CHARGED overhead (the proxy computation is
+    menu-independent and memoized) — same chosen strategy in, same
+    counters out."""
+    store, queries = small_dataset
+    bm = generate_bitmaps(store, queries, WorkloadSpec(0.2, "none"),
+                          seed=11)
+    old = _planner(small_dataset, small_graph, OLD_MENU)
+    new = _planner(small_dataset, small_graph, NEW_MENU, exclusion,
+                   partitions)
+    r_old = old.search(queries, bm, PARAMS)
+    r_new = new.search(queries, bm, PARAMS)
+    # uncorrelated per-query bitmaps: neither new tier wins, same pick
+    assert r_old.strategy == r_new.strategy
+    for f in dataclasses.fields(r_old.stats):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(r_old.stats, f.name)),
+            np.asarray(getattr(r_new.stats, f.name)), err_msg=f.name)
+    # the proxy memoizes per batch: a replan of the same arrays hits
+    key = new._proxy_key
+    val = new._selectivity_proxy(queries, bm)
+    assert new._proxy_key == key and val is new._proxy_val

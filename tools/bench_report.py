@@ -1,0 +1,132 @@
+"""Benchmark drift report: tracked BENCH_*.json vs fresh *.tiny.json.
+
+The tracked records are full-grid runs committed with the PR that changed
+the perf story; the .tiny.json twins are what CI (tools/smoke.sh) just
+measured on the same machine.  This tool pairs them up, aligns grid
+points by their identifying fields (sel / corr / workload / name — NOT
+list position, since tiny grids are subsets), and prints a one-screen
+table of the numeric drift so a regression shows up in the CI log the
+run it lands, instead of the PR that happens to re-run the full bench.
+
+Non-gating by design: tiny runs are noisy (16 queries, cold jit, shared
+CI box), so this report informs, never fails the build.  tools/ci.sh
+invokes it after the smoke benchmarks with `|| true`.
+
+    PYTHONPATH=src python tools/bench_report.py [--threshold 0.25] [--all]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+# grid-point fields that identify a row (used for keys, never diffed)
+ID_KEYS = ("sel", "corr", "workload", "name", "method", "bench", "dataset",
+           "quant", "shards", "policy", "capacity_frac", "fault", "tier")
+# run-scale knobs: a tiny twin legitimately runs a smaller config, so
+# these are reported as a header note, never as metric drift
+CONFIG_KEYS = ("n", "dim", "queries", "tiny", "delta_capacity", "k",
+               "fill", "n_delta", "seed")
+
+
+def _flat(obj, path=""):
+    """Flatten to {path: leaf}. List elements key by their ID fields when
+    they have any (stable across grid subsets), else by index."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flat(v, f"{path}.{k}" if path else str(k)))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            if isinstance(v, dict):
+                ids = [f"{k}={v[k]}" for k in ID_KEYS if k in v]
+                tag = ",".join(ids) if ids else str(i)
+            else:
+                tag = str(i)
+            out.update(_flat(v, f"{path}[{tag}]"))
+    else:
+        out[path] = obj
+    return out
+
+
+def _leaf(path: str) -> str:
+    return path.rsplit(".", 1)[-1].split("[")[0]
+
+
+def diff_pair(tracked: dict, fresh: dict, threshold: float):
+    """(rows, config_notes): metric drift rows of (path, tracked, fresh,
+    rel_delta) over the common paths, plus the differing run-scale knobs
+    (expected for a tiny twin, reported but not counted as drift)."""
+    ft, ff = _flat(tracked), _flat(fresh)
+    rows, config = [], []
+    for path in sorted(set(ft) & set(ff)):
+        if _leaf(path) in ID_KEYS:
+            continue
+        if _leaf(path) in CONFIG_KEYS:
+            if ft[path] != ff[path]:
+                config.append(f"{path} {ft[path]}->{ff[path]}")
+            continue
+        a, b = ft[path], ff[path]
+        if isinstance(a, bool) or isinstance(b, bool):
+            if a != b:
+                rows.append((path, a, b, float("inf")))
+            continue
+        if not (isinstance(a, (int, float)) and isinstance(b, (int, float))):
+            if a != b:
+                rows.append((path, a, b, float("inf")))
+            continue
+        denom = max(abs(a), abs(b), 1e-12)
+        rel = abs(a - b) / denom
+        if rel >= threshold:
+            rows.append((path, a, b, rel))
+    return rows, config
+
+
+def pairs():
+    for tiny in sorted(glob.glob(os.path.join(REPO, "BENCH_*.tiny.json"))):
+        tracked = tiny.replace(".tiny.json", ".json")
+        if os.path.exists(tracked):
+            yield tracked, tiny
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative drift below this is noise (default .25)")
+    ap.add_argument("--all", action="store_true",
+                    help="print every drifting path, not the top 20")
+    args = ap.parse_args()
+    any_pair = False
+    for tracked, tiny in pairs():
+        any_pair = True
+        name = os.path.basename(tracked)
+        with open(tracked) as f:
+            t = json.load(f)
+        with open(tiny) as f:
+            n = json.load(f)
+        rows, config = diff_pair(t, n, args.threshold)
+        flips = [r for r in rows if isinstance(r[1], bool) or r[3] == float(
+            "inf")]
+        drift = sorted((r for r in rows if r not in flips),
+                       key=lambda r: -r[3])
+        if not args.all:
+            drift = drift[:20]
+        status = "FLIP" if flips else ("drift" if drift else "ok")
+        print(f"== {name} vs {os.path.basename(tiny)}: {status} "
+              f"({len(rows)} paths past {args.threshold:.0%})")
+        if config:
+            print(f"   (scaled-down twin: {'; '.join(config[:6])}"
+                  f"{' ...' if len(config) > 6 else ''} — scale-driven "
+                  "drift below is expected)")
+        for path, a, b, rel in flips + drift:
+            d = "flip" if rel == float("inf") else f"{rel:+.0%}"
+            print(f"   {path:<68} {a!r:>12} -> {b!r:<12} {d}")
+    if not any_pair:
+        print("bench_report: no BENCH_*.tiny.json twins found — run "
+              "tools/smoke.sh first")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,4 +19,8 @@ tier1=$?
 
 SMOKE_SKIP_TESTS=1 tools/smoke.sh || exit 1
 
+# non-gating drift report: tracked full-grid records vs the tiny twins
+# the smoke run just produced (tiny noise must never fail the build)
+python tools/bench_report.py || true
+
 exit "$tier1"

@@ -43,5 +43,6 @@ python benchmarks/bench_robustness.py --tiny || exit 1
 python benchmarks/bench_serving.py --tiny || exit 1
 python benchmarks/bench_mutability.py --tiny || exit 1
 python benchmarks/bench_sharding.py --tiny || exit 1
+python benchmarks/bench_filtercost.py --tiny || exit 1
 
 exit "$tier1"
